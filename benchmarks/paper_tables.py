@@ -1,0 +1,130 @@
+"""One benchmark per paper table/figure (§4/§5), from the exact ISA model.
+
+Each function returns a list of CSV rows ``(name, value, derived)`` and
+prints a human-readable table.  These are the *reproduction* artifacts: the
+asserted numbers live in tests/test_isa_model.py; here they are emitted for
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import compiler, isa
+
+
+def tab2_isa() -> List[Tuple[str, float, str]]:
+    """Table 2: hot-loop N, η, speedup across ISA variants."""
+    rows = []
+    print("== Table 2: ISA-level hot-loop impact ==")
+    print(f"{'kernel':18s} {'arith':6s} {'U':>2s} {'N_base':>6s} "
+          f"{'η_base':>7s} {'N_ssr':>6s} {'η_ssr':>6s} {'S':>5s}")
+    for r in isa.table2():
+        print(f"{r.kernel:18s} {r.arith:6s} {r.unroll:2d} {r.base.n:6d} "
+              f"{r.base.eta:7.0%} {r.ssr.n:6d} {r.ssr.eta:6.0%} "
+              f"{r.speedup:5.2f}")
+        rows.append((f"tab2/{r.kernel}/{r.arith}", r.speedup,
+                     f"eta {r.base.eta:.2f}->{r.ssr.eta:.2f}"))
+    return rows
+
+
+def fig4_counts() -> List[Tuple[str, float, str]]:
+    base, ssr = isa.fig4_dot_product(1000)
+    print(f"\n== Fig 4: dot product N=1000 -> base {base}, ssr {ssr} ==")
+    return [("fig4/dot1000", base / ssr, f"{base} vs {ssr} instructions")]
+
+
+def fig6_amortization() -> List[Tuple[str, float, str]]:
+    """Fig. 6: η for reductions over l^d hypercubes + Eq. 3 break-evens."""
+    rows = []
+    print("\n== Fig 6: utilization of d-dim reductions (SSR) ==")
+    print(f"{'l':>6s} " + " ".join(f"d={d:>8d}" for d in (1, 2, 3, 4)))
+    for l in (2, 4, 8, 16, 64, 256, 1024):
+        etas = [isa.utilization_reduction(l, d) if l ** d < 2 ** 40 else
+                float("nan") for d in (1, 2, 3, 4)]
+        print(f"{l:6d} " + " ".join(f"{e:9.1%}" for e in etas))
+        rows.append((f"fig6/l{l}", etas[0], "eta at d=1"))
+    sides = [isa.min_side_length(d) for d in (1, 2, 3, 4)]
+    print(f"break-even sides (Eq.3): {sides} (paper: >5,>4,>1,>1 iters)")
+    rows.append(("fig6/breakeven", float(sides[0]), str(sides)))
+    return rows
+
+
+def fig7_kernel_speedup() -> List[Tuple[str, float, str]]:
+    print("\n== Fig 7: per-kernel SSR speedup (trace model) ==")
+    rows = []
+    for k in isa.kernel_suite():
+        print(f"{k.name:10s} {k.problem:24s} S={k.speedup:5.2f}")
+        rows.append((f"fig7/{k.name}", k.speedup, k.problem))
+    band = [k.speedup for k in isa.kernel_suite()]
+    print(f"band: {min(band):.2f}x .. {max(band):.2f}x "
+          f"(paper: 2.0x..3.7x)")
+    return rows
+
+
+def fig8_utilization() -> List[Tuple[str, float, str]]:
+    print("\n== Fig 8: useful ALU/FPU utilization per kernel ==")
+    rows = []
+    for k in isa.kernel_suite():
+        print(f"{k.name:10s} base {k.eta_base:6.1%} -> ssr {k.eta_ssr:6.1%}")
+        rows.append((f"fig8/{k.name}", k.eta_ssr,
+                     f"base {k.eta_base:.3f}"))
+    return rows
+
+
+def fig11_cluster() -> List[Tuple[str, float, str]]:
+    """Fig. 11: SSR-cluster size matching a 6-core baseline cluster."""
+    print("\n== Fig 11: cluster equivalence (Amdahl model) ==")
+    rows = []
+    for speed, label in ((3.0, "3x-kernels"), (2.0, "2x-kernels")):
+        n = isa.equivalent_cores(6, ssr_speedup=speed)
+        t6 = isa.cluster_time(6, False)
+        tn = isa.cluster_time(n, True, ssr_speedup=speed)
+        print(f"{label}: {n} SSR cores match 6 baseline cores "
+              f"(T={tn:.4f} vs {t6:.4f})")
+        rows.append((f"fig11/{label}", float(n), f"T {tn:.4f} vs {t6:.4f}"))
+    s1 = isa.cluster_time(1, False) / isa.cluster_time(1, True)
+    s6 = isa.cluster_time(6, False) / isa.cluster_time(6, True)
+    print(f"speedup 1 core: {s1:.2f}x; 6 cores: {s6:.2f}x "
+          f"(paper: 3x -> 2.2x)")
+    rows.append(("fig11/amdahl_drop", s6, f"single-core {s1:.2f}"))
+    return rows
+
+
+def tab3_cores() -> List[Tuple[str, float, str]]:
+    """Table 3: utilization-limit classes on long reductions."""
+    print("\n== Table 3: utilization classes ==")
+    cases = [
+        ("RI5CY+SSR", 1, True), ("RI5CY", 1, False), ("Ariane", 1, False),
+        ("Rocket", 1, False), ("BOOM", 2, False), ("SweRV", 2, False),
+        ("Ara(vector)", 1, True), ("Hwacha(vector)", 1, True),
+    ]
+    rows = []
+    for name, width, streaming in cases:
+        lim = isa.utilization_class(width, streaming)
+        print(f"{name:16s} issue={width} streaming={streaming}: "
+              f"util limit {lim:.0%}")
+        rows.append((f"tab3/{name}", lim, f"issue{width}"))
+    return rows
+
+
+def tab5_compiler() -> List[Tuple[str, float, str]]:
+    """§5.5: automated pass vs manual SSR mapping on a reduction."""
+    print("\n== §5.5: LLVM-pass analogue vs manual mapping ==")
+    n = 2048
+    manual = compiler.ssrify(compiler.dot_product_nest(n))
+    # the paper's prototype pass loses ~5% to sub-optimal instruction
+    # selection during SSR configuration: model as extra setup instructions
+    auto_overhead = max(1, int(0.05 * manual.n_ssr))
+    auto_n = manual.n_ssr + auto_overhead
+    s_manual = manual.n_base / manual.n_ssr
+    s_auto = manual.n_base / auto_n
+    print(f"manual: S={s_manual:.2f}; auto pass: S={s_auto:.2f} "
+          f"(paper measured 2.1x vs 2.0x incl. memory contention)")
+    print(f"gap: {100 * (1 - s_auto / s_manual):.1f}% (paper: ~5%)")
+    return [("tab5/manual", s_manual, f"N={manual.n_ssr}"),
+            ("tab5/auto", s_auto, f"N={auto_n}")]
+
+
+ALL = [tab2_isa, fig4_counts, fig6_amortization, fig7_kernel_speedup,
+       fig8_utilization, fig11_cluster, tab3_cores, tab5_compiler]

@@ -1,0 +1,177 @@
+"""Roofline analysis over the dry-run records (§Roofline deliverable).
+
+Per (arch × shape × mesh) cell, derive the three terms from the compiled
+artifact (all quantities per device — SPMD-partitioned HLO shapes are
+shard-local):
+
+    compute     t_c = dot_FLOPs / peak_FLOPs            (197 TF/s bf16, v5e)
+    memory      t_m = bytes_out / HBM_bw                (819 GB/s)
+    collective  t_x = collective_bytes / link_bw        (~50 GB/s/link ICI)
+
+``bytes_out`` is the trip-adjusted sum of HLO op output bytes — an HBM
+traffic *proxy* (upper bound: on TPU, fusion keeps much of it in
+VMEM/registers; recorded as such).  The dominant term is the bottleneck the
+§Perf loop iterates on.  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE)
+gives the "useful fraction" dot_FLOPs vs model FLOPs (catching remat /
+redundant-compute waste — note remat intentionally recomputes ~1 extra
+forward, so a healthy train cell sits near 4/3 overhead).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e class)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (conservative: 1 link)
+
+_PARAM_CACHE: Dict[str, float] = {}
+
+
+def model_flops_per_step(arch: str, rec: dict) -> Optional[float]:
+    """6·N·D with N = active params, D = tokens processed per step/call."""
+    from repro import configs  # noqa: PLC0415
+
+    if arch not in _PARAM_CACHE:
+        cfg = configs.get(arch)
+        _PARAM_CACHE[arch] = float(cfg.active_param_count())
+    n_active = _PARAM_CACHE[arch]
+    if rec["kind"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per call
+    return 2.0 * n_active * rec["global_batch"]
+
+
+def hbm_bytes_model(rec: dict, chips: int) -> float:
+    """Analytic per-device HBM traffic per step/call.
+
+    The HLO Σ-output-bytes walk is an *upper bound* (fused elementwise and
+    scan-step tensors stay in VMEM on TPU); the roofline memory term uses
+    the standard coarse model instead:
+
+      train:   3 passes (fwd, bwd, remat-fwd) over the local param shard
+               per microbatch, + optimizer read/write (params, grads,
+               2 moments, accumulator), + saved boundary activations;
+      prefill: one param-shard pass + the KV-cache write (= output bytes);
+      decode:  one param-shard pass + cache read/write (≈ argument bytes
+               beyond the params, twice).
+    """
+    from repro import configs  # noqa: PLC0415
+
+    cfg = configs.get(rec["arch"])
+    p_shard = cfg.param_count() * 2 / chips          # bf16 storage
+    if rec["kind"] == "train":
+        u = rec.get("microbatches", 1)
+        mom = 2 * jnp_bytes(cfg.optimizer_dtype)
+        acc = jnp_bytes(cfg.grad_accum_dtype)
+        opt_rw = p_shard / 2 * (2 * mom + 2 * acc + 2 * 2 + 2)
+        act = rec["memory"].get("temp_bytes", 0) * 0.25  # boundary saves
+        return 3 * u * p_shard + opt_rw + act
+    if rec["kind"] == "prefill":
+        return p_shard + rec["memory"]["output_bytes"]
+    cache = max(rec["memory"]["argument_bytes"] - p_shard, 0)
+    return p_shard + 2 * cache
+
+
+def jnp_bytes(dtype_name: str) -> int:
+    return {"bfloat16": 2, "float32": 4}.get(dtype_name, 4)
+
+
+def analyze_record(key: str, rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    h = rec["hlo"]
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    t_c = h["dot_flops_per_device"] / PEAK_FLOPS
+    t_m = hbm_bytes_model(rec, chips) / HBM_BW
+    t_m_upper = h["bytes_out_per_device"] / HBM_BW
+    t_x = h["collective_bytes_per_device"] / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops_per_step(rec["arch"], rec)
+    hlo_total = h["dot_flops_per_device"] * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: compute time as share of the serial-sum bound
+    frac = t_c / max(sum(terms.values()), 1e-30)
+    return {
+        "key": key, "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec["mesh"], "kind": rec["kind"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "t_memory_upper_s": t_m_upper,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_flop_ratio": useful,
+        "peak_gib": rec["memory"]["peak_per_device_gib"],
+        "collective_counts": h.get("collective_counts", {}),
+        "tag": rec.get("tag", ""),
+    }
+
+
+def load(path: str = "dryrun_results.json") -> List[dict]:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        row = analyze_record(key, rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def advice(row: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "collective":
+        if "moe" in row["arch"] or row["arch"].startswith(("deepseek", "dbrx",
+                                                           "jamba")):
+            return ("shard_map expert-parallel all-to-all dispatch replaces "
+                    "XLA's replicated scatter (see §Perf hillclimb)")
+        return ("amortise FSDP all-gathers: fewer microbatches / gather once "
+                "per step; overlap via latency-hiding scheduler")
+    if d == "memory":
+        return ("fuse/stream operands (SSR kernels), raise arithmetic "
+                "intensity per HBM byte; decode: batch more sequences")
+    return "compute-bound: at the roofline; larger tiles / bf16 throughput"
+
+
+def table(rows: List[dict], mesh: str = "pod16x16") -> str:
+    out = [f"{'arch':18s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'domin':>6s} {'frac':>6s} {'useful':>7s} "
+           f"{'GiB':>7s}"]
+    for r in rows:
+        if r["mesh"] != mesh or r["tag"]:
+            continue
+        out.append(
+            f"{r['arch']:18s} {r['shape']:12s} {r['t_compute_s']:9.3f} "
+            f"{r['t_memory_s']:9.3f} {r['t_collective_s']:9.3f} "
+            f"{r['dominant'][:6]:>6s} {r['roofline_fraction']:6.1%} "
+            f"{r['useful_flop_ratio']:7.2f} {r['peak_gib']:7.2f}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rows = load(path)
+    print("=== single-pod (16x16 = 256 chips) ===")
+    print(table(rows, "pod16x16"))
+    print()
+    print("=== multi-pod (2x16x16 = 512 chips) ===")
+    print(table(rows, "pod2x16x16"))
+    print()
+    print("=== dominant-term advice ===")
+    for r in rows:
+        if r["mesh"] == "pod16x16" and not r["tag"]:
+            print(f"{r['arch']}/{r['shape']}: [{r['dominant']}] {advice(r)}")
+
+
+if __name__ == "__main__":
+    main()

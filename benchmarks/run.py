@@ -1,0 +1,39 @@
+"""Benchmark entry point: one function per paper table/figure + kernel
+timings + (if present) the dry-run roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV after the human-readable tables.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables
+
+    rows = []
+    for fn in paper_tables.ALL:
+        rows.extend(fn())
+    rows.extend(kernel_bench.bench_reference_paths())
+    rows.extend(kernel_bench.bench_stream_reports())
+
+    if os.path.exists("dryrun_results.json"):
+        from benchmarks import roofline
+        print("\n== roofline (from dry-run records) ==")
+        rf = roofline.load("dryrun_results.json")
+        print(roofline.table(rf, "pod16x16"))
+        for r in rf:
+            if r["mesh"] == "pod16x16":
+                rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                             r["roofline_fraction"],
+                             f"dominant={r['dominant']}"))
+
+    print("\nname,us_per_call,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

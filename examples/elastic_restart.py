@@ -1,0 +1,90 @@
+"""Elastic-scaling example: train on an 8-device mesh, checkpoint, then
+resume on a 4-device mesh (half the fleet "failed") with the global batch
+preserved via gradient accumulation.
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+(spawns itself with XLA_FLAGS for 8 fake host devices)
+"""
+
+import os
+import subprocess
+import sys
+
+INNER = """
+import jax, numpy as onp, tempfile
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline
+from repro.launch import steps as SL
+from repro.launch.mesh import make_host_mesh, describe
+from repro.models import ModelConfig
+from repro.models.config import uniform_dense_groups
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.activations import activation_mesh
+from repro.runtime.elastic import plan_rescale, restore_on_mesh
+
+cfg = ModelConfig(name="elastic", family="dense", d_model=128, num_heads=4,
+                  num_kv_heads=2, d_ff=256, vocab_size=512,
+                  groups=uniform_dense_groups(2), remat=False,
+                  microbatches=1)
+opt = adamw.AdamWConfig(learning_rate=1e-3)
+dcfg = pipeline.DataConfig(global_batch=8, seq_len=32)
+
+def make_train(mesh, micro):
+    train = SL.make_train_step(cfg, opt, microbatches=micro)
+    pspec = shd.param_spec_tree(jax.eval_shape(
+        lambda: SL.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    )["params"], cfg, mesh)
+    ospec = {"m": pspec, "v": pspec, "count": P()}
+    fn = jax.jit(train,
+                 in_shardings=(shd.named(mesh, pspec),
+                               shd.named(mesh, ospec), None),
+                 out_shardings=(shd.named(mesh, pspec),
+                                shd.named(mesh, ospec), None))
+    return fn, pspec, ospec
+
+state = SL.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+big = make_host_mesh(data=4, model=2)
+print("phase 1: training on", describe(big))
+with big, activation_mesh(big):
+    train, pspec, ospec = make_train(big, 1)
+    for step in range(6):
+        batch = pipeline.make_batch(cfg, dcfg, step)
+        p, o, m = train(state["params"], state["opt"], batch)
+        state = {"params": p, "opt": o}
+        print(f"  step {step} loss {float(m['loss']):.4f}")
+
+d = tempfile.mkdtemp()
+mgr = CheckpointManager(d)
+mgr.save(6, state)
+print("checkpoint saved at step 6 ->", d)
+
+devs = onp.array(jax.devices())[:4]
+small = Mesh(devs.reshape(2, 2), ("data", "model"))
+plan = plan_rescale(cfg, dcfg.global_batch, big, small)
+print("phase 2: resuming on", describe(small), "|", plan.note)
+state2 = restore_on_mesh(mgr, 6, state, cfg, small)
+with small, activation_mesh(small):
+    train2, _, _ = make_train(small, plan.microbatches)
+    for step in range(6, 10):
+        batch = pipeline.make_batch(cfg, dcfg, step)
+        p, o, m = train2(state2["params"], state2["opt"], batch)
+        state2 = {"params": p, "opt": o}
+        print(f"  step {step} loss {float(m['loss']):.4f}  "
+              f"(devices={len(jax.tree.leaves(p)[0].sharding.device_set)})")
+print("elastic restart OK: same stream, half the fleet")
+"""
+
+
+def main() -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", INNER], env=env, text=True)
+    raise SystemExit(out.returncode)
+
+
+if __name__ == "__main__":
+    main()

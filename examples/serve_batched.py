@@ -1,0 +1,65 @@
+"""Batched-request serving example: prefill a batch of prompts against a
+small model, then decode greedily with a shared jitted serve_step — the
+paper-kind end-to-end inference driver.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.data import pipeline  # noqa: E402
+from repro.launch import steps as step_lib  # noqa: E402
+from repro.models import ModelConfig, init_params  # noqa: E402
+from repro.models.config import uniform_dense_groups  # noqa: E402
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense", d_model=256, num_heads=8,
+    num_kv_heads=4, d_ff=1024, vocab_size=8192,
+    groups=uniform_dense_groups(6), window=512, remat=False,
+    tie_embeddings=True)
+
+BATCH, PROMPT, GEN = 16, 96, 48
+
+
+def main() -> None:
+    print(f"model ~{CFG.param_count()/1e6:.1f}M params, SWA window "
+          f"{CFG.window}; batch={BATCH} prompt={PROMPT} gen={GEN}")
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    dcfg = pipeline.DataConfig(BATCH, PROMPT, seed=5)
+    reqs = pipeline.make_batch(CFG, dcfg, 0)
+    reqs.pop("labels")
+
+    max_len = PROMPT + GEN + 1
+    prefill = jax.jit(step_lib.make_prefill_step(CFG, cache_len=max_len))
+    serve = jax.jit(step_lib.make_decode_step(CFG), donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, caches = prefill(params, reqs)
+    jax.block_until_ready(logits)
+    print(f"prefill {BATCH}x{PROMPT} tokens: {(time.time()-t0)*1e3:.0f} ms")
+
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated = [cur]
+    t1 = time.time()
+    for t in range(GEN - 1):
+        pos = jnp.full((BATCH,), PROMPT + t, jnp.int32)
+        logits, caches = serve(params, caches, cur, pos)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated.append(cur)
+    out = jax.block_until_ready(jnp.concatenate(generated, 1))
+    dt = time.time() - t1
+    print(f"decode: {GEN} steps in {dt*1e3:.0f} ms "
+          f"-> {BATCH*GEN/dt:,.0f} tok/s aggregate, "
+          f"{dt/GEN*1e3:.1f} ms/step")
+    for b in range(3):
+        print(f"  request {b}: ...{out[b, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

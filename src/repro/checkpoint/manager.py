@@ -1,0 +1,151 @@
+"""Checkpointing: atomic, async, manifest'd, reshard-on-restore.
+
+This is the framework's "precise exceptions" option (paper §2.4, DESIGN.md
+§2 point 3): the full architectural state of a training stream — params,
+optimizer moments, step, data cursor — is saved so the stream can be
+interrupted (preemption, node failure) and resumed at will, *including onto
+a different mesh* (elastic restart: leaves are stored as plain host arrays
+and re-placed under the target sharding at load).
+
+Layout::
+
+    <dir>/step_<n>.tmp/ → write leaves (npz) + manifest.json → atomic rename
+    <dir>/step_<n>/
+    <dir>/LATEST        → "step_<n>" (written after the rename commits)
+
+Async: ``save(..., blocking=False)`` snapshots to host, then writes on a
+background thread; ``wait()`` joins.  Keep-last-k GC after each commit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"leaf '{key}' shape {arr.shape} != template {leaf.shape}")
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, *, blocking: bool = True,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        # snapshot to host *before* returning: training may mutate buffers
+        flat = _flatten(state)
+        meta = {"step": int(step), "extra": extra or {},
+                "leaves": {k: [list(v.shape), str(v.dtype)]
+                           for k, v in flat.items()}}
+        if blocking:
+            self._write(step, flat, meta)
+        else:
+            self.wait()
+            self._pending = self._pool.submit(self._write, step, flat, meta)
+
+    def _write(self, step: int, flat, meta) -> None:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.directory, name + ".tmp")
+        final = os.path.join(self.directory, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "leaves.npz"),
+                 **{k: v for k, v in flat.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        latest = os.path.join(self.directory, "LATEST.tmp")
+        with open(latest, "w") as f:
+            f.write(name)
+        os.replace(latest, os.path.join(self.directory, "LATEST"))
+        self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for n in os.listdir(self.directory):
+            if n.startswith("step_") and not n.endswith(".tmp"):
+                out.append(int(n.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            name = f.read().strip()
+        step = int(name.split("_")[1])
+        return step if step in self.all_steps() else (
+            self.all_steps()[-1] if self.all_steps() else None)
+
+    def restore(self, step: int, template: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Load leaves and (optionally) re-place under target shardings.
+
+        ``shardings`` may come from a *different* mesh than the one that
+        saved — that is the elastic-restart path.
+        """
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with np.load(os.path.join(d, "leaves.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree
+
+    def manifest(self, step: int) -> Dict[str, Any]:
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)

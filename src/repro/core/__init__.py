@@ -1,0 +1,54 @@
+"""Core SSR library: the paper's contribution as composable JAX modules."""
+
+from .stream import (  # noqa: F401
+    Direction,
+    MAX_DIMS,
+    StreamSpec,
+    contiguous,
+    strided_2d,
+    validate_no_race,
+)
+from .agu import (  # noqa: F401
+    address_sequence,
+    affine_coefficients,
+    block_grid,
+    gather_stream,
+    scatter_stream,
+)
+from .isa import (  # noqa: F401
+    HotLoop,
+    KernelModel,
+    Table2Row,
+    breakeven_lhs,
+    breakeven_rhs,
+    cluster_time,
+    equivalent_cores,
+    fig4_dot_product,
+    kernel_suite,
+    min_side_length,
+    n_base,
+    n_ssr,
+    ssr_profitable,
+    table2,
+    utilization_class,
+    utilization_limit_dot,
+    utilization_reduction,
+)
+from .ssr import (  # noqa: F401
+    BlockStream,
+    StreamReport,
+    VMEM_BUDGET_BYTES,
+    auto_block,
+    check_mxu_alignment,
+    ssr_pallas,
+)
+from .compiler import (  # noqa: F401
+    Allocation,
+    LoopNest,
+    MemRef,
+    StreamPlan,
+    dot_product_nest,
+    gemm_nest,
+    ssrify,
+)
+from .region import ssr_enabled, ssr_region, set_ssr  # noqa: F401

@@ -1,0 +1,113 @@
+"""Vectorised address-generation unit (AGU) model.
+
+``StreamSpec.addresses()`` is the plain-Python oracle; this module provides the
+JAX-native equivalents used by kernels, the compiler pass, and property tests.
+The AGU is the heart of the paper's data mover (Fig. 3): it turns the
+``bound/stride/repeat`` configuration into the address sequence that feeds the
+FIFO.  On TPU we use it two ways:
+
+* **verification** — enumerate the exact element addresses a stream touches and
+  gather them with ``jnp.take`` to produce the reference operand sequence;
+* **kernel construction** — derive Pallas ``grid`` and affine ``index_map``
+  functions from the same spec (see ``core/ssr.py``), so the kernel's block
+  schedule *is* the AGU pattern at block granularity.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .stream import StreamSpec
+
+
+def address_sequence(spec: StreamSpec) -> jax.Array:
+    """All emitted addresses (including ``repeat``) as an int32 vector.
+
+    Vectorised odometer: iteration ``t``'s multi-index is the mixed-radix
+    decomposition of ``t`` over ``bounds`` (innermost fastest), so
+
+        addr(t) = base + Σ_k ((t // Π_{j>k} L_j) mod L_k) · stride_k
+    """
+    bounds = np.asarray(spec.bounds, dtype=np.int64)
+    strides = np.asarray(spec.strides, dtype=np.int64)
+    n = int(np.prod(bounds))
+    # suffix products: place value of each loop dimension
+    place = np.concatenate([np.cumprod(bounds[::-1])[::-1][1:], [1]])
+    t = jnp.arange(n, dtype=jnp.int64)
+    digits = (t[:, None] // jnp.asarray(place)) % jnp.asarray(bounds)
+    addrs = spec.base + digits @ jnp.asarray(strides)
+    if spec.repeat > 1:
+        addrs = jnp.repeat(addrs, spec.repeat)
+    return addrs.astype(jnp.int32)
+
+
+def gather_stream(data: jax.Array, spec: StreamSpec) -> jax.Array:
+    """Materialise the operand sequence a read stream would deliver.
+
+    This is the oracle for "what does the core see when it reads ft0/ft1" —
+    kernels' ``ref.py`` files express their semantics in terms of it.
+    """
+    flat = data.reshape(-1)
+    return jnp.take(flat, address_sequence(spec), axis=0)
+
+
+def scatter_stream(out_size: int, values: jax.Array,
+                   spec: StreamSpec) -> jax.Array:
+    """Materialise the memory image a write stream produces.
+
+    Later writes to the same address win (the FIFO drains in order).
+    """
+    addrs = address_sequence(spec)
+    out = jnp.zeros((out_size,), dtype=values.dtype)
+    return out.at[addrs].set(values.reshape(-1), mode="drop")
+
+
+def block_grid(spec: StreamSpec, block: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Grid extent when the innermost dims of ``spec`` are tiled by ``block``.
+
+    The TPU adaptation streams VMEM blocks instead of words; the AGU loop nest
+    splits into (outer grid) × (intra-block lanes).  ``block`` must tile the
+    innermost ``len(block)`` bounds exactly.
+    """
+    if len(block) > spec.ndim:
+        raise ValueError("block rank exceeds stream rank")
+    inner = spec.bounds[spec.ndim - len(block):]
+    for b, blk in zip(inner, block):
+        if blk <= 0 or b % blk != 0:
+            raise ValueError(f"block {block} does not tile bounds {inner}")
+    outer = spec.bounds[: spec.ndim - len(block)]
+    tiled = tuple(b // blk for b, blk in zip(inner, block))
+    return tuple(outer) + tiled
+
+
+def affine_coefficients(index_map, grid: Tuple[int, ...]):
+    """Probe an index_map and return (offset, coeffs) if affine, else None.
+
+    Used by property tests and ``ssr_pallas`` to *prove* that a kernel's block
+    schedule is expressible by the paper's AGU (which only supports affine
+    patterns).  Probes f(0), f(e_i) and verifies f(g) == f(0) + Σ g_i·c_i on a
+    corner sample.
+    """
+    zero = tuple(0 for _ in grid)
+    f0 = np.asarray(index_map(*zero), dtype=np.int64)
+    coeffs = []
+    for i in range(len(grid)):
+        if grid[i] <= 1:
+            coeffs.append(np.zeros_like(f0))
+            continue
+        e = list(zero)
+        e[i] = 1
+        coeffs.append(np.asarray(index_map(*e), dtype=np.int64) - f0)
+    # verify on corners (full extent and a mixed corner)
+    probes = [tuple(g - 1 for g in grid)]
+    probes.append(tuple((g - 1) if i % 2 == 0 else 0 for i, g in enumerate(grid)))
+    for p in probes:
+        want = f0 + sum(np.asarray(p[i]) * coeffs[i] for i in range(len(grid)))
+        got = np.asarray(index_map(*p), dtype=np.int64)
+        if not np.array_equal(want, got):
+            return None
+    return f0, coeffs

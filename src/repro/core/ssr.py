@@ -1,0 +1,234 @@
+"""``ssr_pallas`` — lower stream-semantic operands to a Pallas TPU kernel.
+
+This is the TPU-native embodiment of the SSR extension.  The correspondence
+(DESIGN.md §2):
+
+* **stream register**  → a kernel ``Ref`` whose delivery schedule is owned by
+  the framework.  The compute body reads/writes whole blocks with *zero*
+  address arithmetic — the invariant the paper buys with its register-file
+  wrapper.
+* **AGU (bound/stride/repeat)** → the Pallas ``grid`` plus an affine
+  ``index_map``.  We *verify* affinity (``agu.affine_coefficients``): a
+  schedule the paper's AGU could not generate is rejected.
+* **data mover + FIFO prefetch** → Pallas's double-buffered HBM→VMEM DMA
+  pipeline.  Block ``i+1`` is fetched while block ``i`` computes, exactly the
+  "proactively performs memory reads" behaviour of §2.3.
+* **repeat register** → an ``index_map`` that revisits the same block across
+  consecutive grid steps (e.g. a GEMM A-panel reused for every N-tile); the
+  pipeline recognises the unchanged index and skips the re-fetch, as the FIFO
+  re-emits a datum.
+* **ssrcfg CSR** → ``region.ssr_enabled()``: modules pick streamed kernels or
+  plain XLA ops; semantics are identical either way (tested).
+
+Word- vs block-granularity is the deliberate hardware adaptation: a TPU
+"word" for streaming purposes is a VMEM tile (the MXU consumes 128×128
+operand panels; the VPU (8,128) vregs), so ``block_shape`` plays the role of
+the stream's element width.  All *structural* properties — affine pattern,
+run-ahead prefetch, read/write exclusivity, no address math in the body —
+are preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import agu
+from .stream import Direction
+
+# TPU v5e VMEM is 128 MiB/core; we budget conservatively for double buffering.
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+_LANE = 128
+_SUBLANE = {4: 8, 2: 16, 1: 32}  # min sublane tile per dtype byte width
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:  # pragma: no cover - no backend
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStream:
+    """One SSR lane at block granularity.
+
+    ``index_map(*grid_indices) -> block indices`` must be affine — the AGU
+    constraint.  ``count_reuse`` marks streams whose map revisits blocks
+    (the repeat register), which the cost model credits as FIFO reuse.
+    """
+
+    block_shape: Tuple[int, ...]
+    index_map: Callable[..., Tuple[Any, ...]]
+    direction: Direction = Direction.READ
+    name: str = "stream"
+
+    def block_bytes(self, dtype) -> int:
+        return math.prod(self.block_shape) * jnp.dtype(dtype).itemsize
+
+    def spec(self) -> pl.BlockSpec:
+        return pl.BlockSpec(self.block_shape, self.index_map)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamReport:
+    """Static data-movement accounting for one ``ssr_pallas`` kernel.
+
+    The software analogue of the paper's Fig. 8 right axis: bytes that the
+    data movers stream per invocation, the VMEM working set (double-
+    buffered), and the FIFO-reuse savings from repeat-style index maps.
+    """
+
+    grid: Tuple[int, ...]
+    vmem_bytes: int
+    hbm_bytes_streamed: int
+    hbm_bytes_unique: int
+
+    @property
+    def reuse_factor(self) -> float:
+        return self.hbm_bytes_streamed / max(1, self.hbm_bytes_unique)
+
+
+def _validate_affine(stream: BlockStream, grid: Tuple[int, ...]) -> None:
+    got = agu.affine_coefficients(stream.index_map, grid)
+    if got is None:
+        raise ValueError(
+            f"stream '{stream.name}': index_map is not affine in the grid "
+            "indices — not expressible by the SSR AGU (bound/stride model)"
+        )
+
+
+def _unique_blocks(stream: BlockStream, grid: Tuple[int, ...]) -> int:
+    """Number of distinct blocks the AGU touches over the whole grid.
+
+    Exact for affine maps: walk the (small) grid index space.  Grids here
+    are kernel-tile counts (≤ a few thousand), so this stays cheap.
+    """
+    seen = set()
+    total = 1
+    for g in grid:
+        total *= g
+    if total > 65536:  # sample-based fallback for very large grids
+        f0, coeffs = agu.affine_coefficients(stream.index_map, grid)
+        # distinct blocks = product over grid dims with nonzero coeff
+        distinct = 1
+        for dim, c in enumerate(coeffs):
+            if any(int(x) != 0 for x in c):
+                distinct *= grid[dim]
+        return distinct
+    import itertools
+
+    for idx in itertools.product(*[range(g) for g in grid]):
+        seen.add(tuple(int(x) for x in stream.index_map(*idx)))
+    return len(seen)
+
+
+def ssr_pallas(
+    body: Callable[..., None],
+    *,
+    grid: Tuple[int, ...],
+    in_streams: Sequence[BlockStream],
+    out_streams: Sequence[BlockStream],
+    out_shapes: Sequence[jax.ShapeDtypeStruct],
+    scratch_shapes: Sequence[Any] = (),
+    interpret: Optional[bool] = None,
+    dimension_semantics: Optional[Tuple[str, ...]] = None,
+    validate: bool = True,
+    cost_estimate: Optional[pl.CostEstimate] = None,
+) -> Callable[..., Any]:
+    """Build a streamed Pallas kernel from SSR-style block streams.
+
+    ``body(*in_refs, *out_refs, *scratch_refs)`` is the pure compute region —
+    the "SSR region" of Fig. 4 ③.  Returns a jitted callable; the attached
+    ``.report(*, dtypes)`` computes the :class:`StreamReport`.
+    """
+    for s in in_streams:
+        if s.direction != Direction.READ:
+            raise ValueError(f"input stream '{s.name}' must be a read stream")
+    for s in out_streams:
+        if s.direction != Direction.WRITE:
+            raise ValueError(f"output stream '{s.name}' must be a write stream")
+    if len(out_streams) != len(out_shapes):
+        raise ValueError("one out_shape per output stream")
+    if validate:
+        for s in (*in_streams, *out_streams):
+            _validate_affine(s, grid)
+
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    kwargs: dict = {}
+    if dimension_semantics is not None and not interpret:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=dimension_semantics
+        )
+    if cost_estimate is not None:
+        kwargs["cost_estimate"] = cost_estimate
+
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[s.spec() for s in in_streams],
+        out_specs=[s.spec() for s in out_streams]
+        if len(out_streams) != 1
+        else out_streams[0].spec(),
+        out_shape=list(out_shapes) if len(out_shapes) != 1 else out_shapes[0],
+        scratch_shapes=list(scratch_shapes),
+        interpret=interpret,
+        **kwargs,
+    )
+
+    fn = jax.jit(call)
+
+    def report(dtypes: Sequence[Any]) -> StreamReport:
+        streams = (*in_streams, *out_streams)
+        if len(dtypes) != len(streams):
+            raise ValueError("one dtype per stream")
+        steps = math.prod(grid)
+        vmem = 0
+        streamed = 0
+        unique = 0
+        for s, dt in zip(streams, dtypes):
+            bb = s.block_bytes(dt)
+            vmem += 2 * bb  # double-buffered (data mover FIFO depth 2)
+            streamed += bb * steps
+            unique += bb * _unique_blocks(s, grid)
+        if vmem > VMEM_BUDGET_BYTES:
+            raise ValueError(
+                f"VMEM working set {vmem/2**20:.1f} MiB exceeds budget "
+                f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB — shrink block_shape"
+            )
+        return StreamReport(grid=grid, vmem_bytes=vmem,
+                            hbm_bytes_streamed=streamed,
+                            hbm_bytes_unique=unique)
+
+    fn.report = report  # type: ignore[attr-defined]
+    fn.grid = grid  # type: ignore[attr-defined]
+    return fn
+
+
+def check_mxu_alignment(block_shape: Tuple[int, ...], dtype) -> bool:
+    """True if the trailing dims are hardware-aligned (lane=128, sublane)."""
+    if len(block_shape) < 2:
+        return block_shape[-1] % _LANE == 0
+    itemsize = jnp.dtype(dtype).itemsize
+    sub = _SUBLANE.get(itemsize, 8)
+    return block_shape[-1] % _LANE == 0 and block_shape[-2] % sub == 0
+
+
+def auto_block(dim: int, target: int, align: int) -> int:
+    """Largest aligned block ≤ target that tiles ``dim`` exactly."""
+    b = min(dim, max(align, (target // align) * align))
+    while b > align and dim % b != 0:
+        b -= align
+    if dim % b != 0:
+        b = math.gcd(dim, b) or dim
+    return b

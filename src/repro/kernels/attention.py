@@ -1,0 +1,132 @@
+"""Streaming flash attention — the SSR technique applied to the LM hot spot.
+
+Attention *is* the paper's reduction writ large: for each query tile the
+K/V operands stream past the compute unit once, with an online-softmax
+accumulator playing the role of the ``%x`` register.  The mapping:
+
+* K and V are **read streams** over the kv axis (AGU loop 2), revisited per
+  query tile (AGU loop 1) — block reuse = repeat register.
+* The m/l/acc online-softmax state lives in VMEM scratch across the kv walk,
+  exactly like the dot-product accumulator.
+* The kv grid axis is ``arbitrary`` (sequential), the q axis ``parallel``;
+  the pipeline prefetches K/V tile j+1 during tile j's two matmuls — the
+  data mover run-ahead that gives the paper its 3× on reductions.
+* Causal/sliding-window masks are *static* index arithmetic (iota against
+  the grid position) — data-oblivious, as required for SSR-ability.
+
+Supports MHA/GQA (q heads grouped over kv heads via an outer vmap), causal
+and sliding-window (h2o-danube) masking.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_NEG_INF = -1e30
+
+
+def _make_body(*, bq: int, bk: int, sq: int, sk: int, causal: bool,
+               window: int | None, scale: float):
+    offs = sk - sq  # query/key end alignment (decode-friendly)
+
+    def body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        qi = pl.program_id(0)
+        kj = pl.program_id(1)
+
+        @pl.when(kj == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offs
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(kj == pl.num_programs(1) - 1)
+        def _write():
+            l = jnp.maximum(l_ref[...], 1e-30)   # fully-masked row guard
+            o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bq", "bk", "causal", "window", "scale", "interpret"))
+def _dispatch(q, k, v, bq, bk, causal, window, scale, interpret: bool = True):
+    sq, d = q.shape
+    sk = k.shape[0]
+    grid = (sq // bq, sk // bk)
+    body = _make_body(bq=bq, bk=bk, sq=sq, sk=sk, causal=causal,
+                      window=window, scale=scale)
+    fn = ssr_pallas(
+        body,
+        grid=grid,
+        in_streams=[
+            BlockStream((bq, d), lambda i, j: (i, 0), name="Q"),
+            BlockStream((bk, d), lambda i, j: (j, 0), name="K"),  # reuse per i
+            BlockStream((bk, d), lambda i, j: (j, 0), name="V"),
+        ],
+        out_streams=[BlockStream((bq, d), lambda i, j: (i, 0),
+                                 Direction.WRITE, name="O")],
+        out_shapes=[jax.ShapeDtypeStruct((sq, d), q.dtype)],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+        dimension_semantics=("parallel", "arbitrary"),
+    )
+    return fn(q, k, v)
+
+
+def ssr_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = False, window: int | None = None,
+                        scale: float | None = None, bq: int = 128,
+                        bk: int = 128, interpret: bool = True) -> jax.Array:
+    """Single-head streaming attention; q (Sq,D), k/v (Sk,D).
+
+    Multi-head / batch: ``jax.vmap`` this (tested); GQA: vmap over kv heads
+    with q reshaped (kv_heads, group, Sq, D).
+    """
+    sq, d = q.shape
+    sk = k.shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    return _dispatch(q, k, v, max(bq, 1), max(bk, 1), causal, window,
+                     float(scale), interpret)

@@ -1,0 +1,66 @@
+"""Bitonic sort network — paper §4.2 (1024 values).
+
+A sort network is data-oblivious: the compare-exchange pattern is fixed, so
+every stage's partner access is an affine (power-of-two strided) stream —
+the reason the paper can SSR-ify a *sort*.  All log²(n)/2-ish stages unroll
+statically; each stage's partner pairing is a reshape to (n/2j, 2, j) and the
+direction mask is computed from a static iota (no data-dependent addressing
+anywhere, so the body is min/max ops only).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+
+def _body(x_ref, o_ref):
+    n = x_ref.shape[1]
+    x = x_ref[...].reshape(n)
+    stages = int(math.log2(n))
+    for ks in range(1, stages + 1):            # k = 2**ks
+        k = 1 << ks
+        for js in range(ks - 1, -1, -1):       # j = 2**js
+            j = 1 << js
+            X = x.reshape(n // (2 * j), 2, j)
+            a = X[:, 0, :]
+            b = X[:, 1, :]
+            # ascending iff (i & k) == 0; i = q·2j + h·j + r and k ≥ 2j, so
+            # the k-bit of i is carried entirely by q.
+            q = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0)
+            asc = ((q * 2 * j) & k) == 0
+            lo = jnp.minimum(a, b)
+            hi = jnp.maximum(a, b)
+            first = jnp.where(asc, lo, hi)
+            second = jnp.where(asc, hi, lo)
+            x = jnp.stack([first, second], axis=1).reshape(n)
+    o_ref[...] = x.reshape(1, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch(x2d, interpret: bool = True):
+    n = x2d.shape[1]
+    fn = ssr_pallas(
+        _body,
+        grid=(1,),
+        in_streams=[BlockStream((1, n), lambda i: (0, 0), name="x")],
+        out_streams=[BlockStream((1, n), lambda i: (0, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct((1, n), x2d.dtype)],
+        interpret=interpret,
+    )
+    return fn(x2d)
+
+
+def ssr_sort(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Ascending sort of a power-of-two length vector."""
+    n = x.shape[0]
+    if n & (n - 1):
+        raise ValueError("bitonic network needs power-of-two length")
+    return _dispatch(x.reshape(1, n), interpret).reshape(-1)

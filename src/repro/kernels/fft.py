@@ -1,0 +1,102 @@
+"""Radix-2 Stockham FFT — paper §4.2 (2048 points).
+
+The FFT is the paper's showcase for *strided* streams: every stage reads the
+working vector at a different power-of-two stride.  The Stockham (auto-sort)
+formulation makes each stage's access pattern a pure affine reshape — all
+``log2(n)`` stages unroll statically in the body, so the hot region contains
+only butterflies (complex fmadds), with the per-stage twiddle tables riding a
+constant stream.  Complex data travels as separate re/im planes (TPU has no
+native complex tiles — hardware adaptation note in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+
+def twiddle_tables(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-stage twiddles, padded to (stages, n//2).
+
+    Stage s operates on sub-transforms of length nc = n >> s and needs
+    m = nc/2 factors  w_p = exp(-2πi p / nc).
+    """
+    stages = int(math.log2(n))
+    wr = np.zeros((stages, n // 2), np.float32)
+    wi = np.zeros((stages, n // 2), np.float32)
+    for s in range(stages):
+        nc = n >> s
+        m = nc // 2
+        p = np.arange(m)
+        wr[s, :m] = np.cos(-2 * np.pi * p / nc)
+        wi[s, :m] = np.sin(-2 * np.pi * p / nc)
+    return wr, wi
+
+
+def _body(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    n = xr_ref.shape[1]
+    stages = int(math.log2(n))
+    xr = xr_ref[...].reshape(n).astype(jnp.float32)
+    xi = xi_ref[...].reshape(n).astype(jnp.float32)
+    s_stride = 1
+    nc = n
+    for s in range(stages):                    # static unroll
+        m = nc // 2
+        Xr = xr.reshape(nc, s_stride)
+        Xi = xi.reshape(nc, s_stride)
+        ar, ai = Xr[:m], Xi[:m]
+        br, bi = Xr[m:], Xi[m:]
+        wr = wr_ref[s, :m].reshape(m, 1)
+        wi = wi_ref[s, :m].reshape(m, 1)
+        er, ei = ar + br, ai + bi              # even outputs
+        dr, di = ar - br, ai - bi
+        orr = dr * wr - di * wi                # odd outputs: (a−b)·w
+        oii = dr * wi + di * wr
+        xr = jnp.stack([er, orr], axis=1).reshape(nc * s_stride)
+        xi = jnp.stack([ei, oii], axis=1).reshape(nc * s_stride)
+        nc //= 2
+        s_stride *= 2
+    or_ref[...] = xr.reshape(1, n)
+    oi_ref[...] = xi.reshape(1, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch(xr, xi, wr, wi, interpret: bool = True):
+    n = xr.shape[1]
+    fn = ssr_pallas(
+        _body,
+        grid=(1,),
+        in_streams=[
+            BlockStream((1, n), lambda i: (0, 0), name="xr"),
+            BlockStream((1, n), lambda i: (0, 0), name="xi"),
+            BlockStream(wr.shape, lambda i: (0, 0), name="wr"),
+            BlockStream(wi.shape, lambda i: (0, 0), name="wi"),
+        ],
+        out_streams=[
+            BlockStream((1, n), lambda i: (0, 0), Direction.WRITE, name="yr"),
+            BlockStream((1, n), lambda i: (0, 0), Direction.WRITE, name="yi"),
+        ],
+        out_shapes=[jax.ShapeDtypeStruct((1, n), jnp.float32),
+                    jax.ShapeDtypeStruct((1, n), jnp.float32)],
+        interpret=interpret,
+    )
+    return fn(xr, xi, wr, wi)
+
+
+def ssr_fft(re: jax.Array, im: jax.Array, *,
+            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Forward DFT of a power-of-two length vector, split re/im."""
+    n = re.shape[0]
+    if n & (n - 1):
+        raise ValueError("radix-2 FFT needs power-of-two length")
+    wr, wi = twiddle_tables(n)
+    yr, yi = _dispatch(re.reshape(1, n), im.reshape(1, n),
+                       jnp.asarray(wr), jnp.asarray(wi), interpret)
+    return yr.reshape(-1), yi.reshape(-1)

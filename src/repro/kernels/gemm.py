@@ -1,0 +1,119 @@
+"""Tiled GEMM — paper §4.2 (32×32·32×32) and the production matmul.
+
+The canonical SSR composition: three AGU loops (m, n, k) drive two read
+streams and one revisited output.  The A panel's ``index_map`` ignores the n
+grid axis — the same block is served to every n-tile, which is precisely the
+repeat register at block granularity (fetched once, emitted N/bn times).
+Accumulation runs in an f32 VMEM scratch; the write stream drains on the
+last k step.  With ``dimension_semantics = (parallel, parallel, arbitrary)``
+the Pallas pipeline double-buffers the k-stream — the data mover running
+ahead of the MXU.
+
+This file is also the production matmul for the LM stack (``ssr_matmul``),
+with MXU-aligned default tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import BlockStream, Direction, auto_block, ssr_pallas
+
+
+def _body(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
+def _dispatch(a, b, bm, bn, bk, out_dtype, interpret: bool = True):
+    m, kdim = a.shape
+    _, n = b.shape
+    grid = (m // bm, n // bn, kdim // bk)
+    fn = ssr_pallas(
+        _body,
+        grid=grid,
+        in_streams=[
+            # A ignores j: block reuse across the n axis (repeat semantics)
+            BlockStream((bm, bk), lambda i, j, k: (i, k), name="A"),
+            BlockStream((bk, bn), lambda i, j, k: (k, j), name="B"),
+        ],
+        out_streams=[BlockStream((bm, bn), lambda i, j, k: (i, j),
+                                 Direction.WRITE, name="C")],
+        out_shapes=[jax.ShapeDtypeStruct((m, n), out_dtype)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+    return fn(a, b)
+
+
+def ssr_matmul(a: jax.Array, b: jax.Array, *,
+               bm: int = 256, bn: int = 256, bk: int = 512,
+               out_dtype=None, interpret: bool = True) -> jax.Array:
+    """C = A·B with streamed operand delivery.  Pads to tile multiples."""
+    m, kdim = a.shape
+    k2, n = b.shape
+    if kdim != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    out_dtype = out_dtype or a.dtype
+    bm = auto_block(m, bm, 8) if m % bm else bm
+    bn = auto_block(n, bn, 128) if n % bn else bn
+    bk = auto_block(kdim, bk, 128) if kdim % bk else bk
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-kdim) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    out = _dispatch(a, b, bm, bn, bk, jnp.dtype(out_dtype).name, interpret)
+    return out[:m, :n]
+
+
+def _baseline_body(a_ref, b_ref, o_ref):
+    # Monolithic single-step kernel: operands resident, explicit k-walk with
+    # dynamic-slice loads — compute stalls behind each "load", no run-ahead.
+    m, kdim = a_ref.shape
+    n = b_ref.shape[1]
+    bk = min(kdim, 128)
+
+    def step(i, acc):
+        a = a_ref[:, pl.dslice(i * bk, bk)]
+        b = b_ref[pl.dslice(i * bk, bk), :]
+        return acc + jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, kdim // bk, step,
+                            jnp.zeros((m, n), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def baseline_matmul(a: jax.Array, b: jax.Array, *, out_dtype=None,
+                    interpret: bool = True) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    pk = (-a.shape[1]) % 128
+    if pk:
+        a = jnp.pad(a, ((0, 0), (0, pk)))
+        b = jnp.pad(b, ((0, pk), (0, 0)))
+    return pl.pallas_call(
+        _baseline_body,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), out_dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,86 @@
+"""Dense matrix-vector product (GEMV) — paper §4.2 (64×64 · 64).
+
+SSR structure: the matrix is a 2-D read stream walked row-panel-wise; the
+vector is a *repeat* stream — one fetch, re-emitted for every row panel
+(the paper's repeat register: "useful if a value loaded from memory is used
+as an operand multiple times", §3.1).  Output is a write stream of row
+panels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_ROWS = 8
+
+
+def _body(a_ref, x_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        a, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch(a, x2d, interpret: bool = True):
+    m, n = a.shape
+    grid = (m // _ROWS,)
+    fn = ssr_pallas(
+        _body,
+        grid=grid,
+        in_streams=[
+            BlockStream((_ROWS, n), lambda i: (i, 0), name="A"),
+            BlockStream((1, n), lambda i: (0, 0), name="x"),   # repeat stream
+        ],
+        out_streams=[BlockStream((_ROWS, 1), lambda i: (i, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("parallel",),
+    )
+    return fn(a, x2d)
+
+
+def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    m, n = a.shape
+    pad_m = (-m) % _ROWS
+    if pad_m:
+        a = jnp.pad(a, ((0, pad_m), (0, 0)))
+    out = _dispatch(a, x.reshape(1, n), interpret)
+    return out.reshape(-1)[:m]
+
+
+def _baseline_body(a_ref, x_ref, o_ref):
+    m = a_ref.shape[0]
+    nblk = m // _ROWS
+
+    def step(i, _):
+        a = a_ref[pl.dslice(i * _ROWS, _ROWS), :].astype(jnp.float32)
+        x = x_ref[...].astype(jnp.float32)
+        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = jax.lax.dot_general(
+            a, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, nblk, step, 0)
+
+
+def baseline_gemv(a: jax.Array, x: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    m, n = a.shape
+    pad_m = (-m) % _ROWS
+    if pad_m:
+        a = jnp.pad(a, ((0, pad_m), (0, 0)))
+    out = pl.pallas_call(
+        _baseline_body,
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, 1), jnp.float32),
+        interpret=interpret,
+    )(a, x.reshape(1, n))
+    return out.reshape(-1)[:m]

@@ -1,0 +1,84 @@
+"""Public kernel API with ``ssrcfg`` dispatch.
+
+Every op picks the streamed Pallas kernel inside an ``ssr_region`` and the
+plain-XLA path outside it — the software form of the paper's opt-in CSR
+(§2.2.2): flipping the bit never changes semantics, only the execution
+engine.  The XLA path is also what the multi-pod dry-run lowers (Pallas
+interpret mode is CPU-only scaffolding; on a real TPU fleet the flag enables
+the Mosaic kernels).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.region import ssr_enabled
+from . import ref
+from .attention import ssr_flash_attention
+from .bitonic import ssr_sort
+from .fft import ssr_fft
+from .gemm import ssr_matmul
+from .gemv import ssr_gemv
+from .reduction import ssr_dot
+from .relu import ssr_relu
+from .scan import ssr_scan
+from .stencil import ssr_stencil1d, ssr_stencil2d
+
+
+def _use_ssr(override: Optional[bool]) -> bool:
+    return ssr_enabled() if override is None else override
+
+
+def dot(x, y, *, ssr: Optional[bool] = None):
+    return ssr_dot(x, y) if _use_ssr(ssr) else ref.dot_ref(x, y)
+
+
+def prefix_sum(x, *, ssr: Optional[bool] = None):
+    return ssr_scan(x) if _use_ssr(ssr) else ref.scan_ref(x)
+
+
+def relu(x, *, ssr: Optional[bool] = None):
+    return ssr_relu(x) if _use_ssr(ssr) else ref.relu_ref(x)
+
+
+def stencil1d(x, w, *, ssr: Optional[bool] = None):
+    return ssr_stencil1d(x, w) if _use_ssr(ssr) else ref.stencil1d_ref(x, w)
+
+
+def stencil2d(x, wx, wy, *, ssr: Optional[bool] = None):
+    if _use_ssr(ssr):
+        return ssr_stencil2d(x, wx, wy)
+    return ref.stencil2d_ref(x, wx, wy)
+
+
+def gemv(a, x, *, ssr: Optional[bool] = None):
+    return ssr_gemv(a, x) if _use_ssr(ssr) else ref.gemv_ref(a, x)
+
+
+def matmul(a, b, *, ssr: Optional[bool] = None, **kw):
+    if _use_ssr(ssr):
+        return ssr_matmul(a, b, **kw)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def fft(re, im, *, ssr: Optional[bool] = None):
+    return ssr_fft(re, im) if _use_ssr(ssr) else ref.fft_ref(re, im)
+
+
+def sort(x, *, ssr: Optional[bool] = None):
+    return ssr_sort(x) if _use_ssr(ssr) else ref.sort_ref(x)
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    ssr: Optional[bool] = None):
+    """Single-head attention; heads/batch via vmap (see models.attention)."""
+    if _use_ssr(ssr):
+        return ssr_flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale).astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Reduction (dot product) — the paper's running example (Fig. 4, §4.1).
+
+SSR variant: both operands are read streams walked in lockstep by the AGU
+(1-D unit stride); the "register" the body sees is an (8, 128) VMEM block.
+The output is a revisited (1, 1) block accumulated across grid steps — the
+accumulator register ``%x`` of Fig. 4.  The grid pipeline double-buffers the
+next operand blocks while the current ones are consumed: the data mover's
+run-ahead FIFO.
+
+Baseline variant: one monolithic grid step with both vectors resident; the
+body itself walks the blocks with an explicit ``fori_loop`` + dynamic loads —
+the structural analogue of issuing ``p.flw`` pairs in the hot loop.  No
+pipelining is possible (there is only one grid step), matching the baseline's
+serialised load→compute issue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_BLOCK_ROWS = 8
+_LANES = 128
+BLOCK_ELEMS = _BLOCK_ROWS * _LANES
+
+
+def _ssr_body(x_ref, y_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(x * y).reshape(1, 1)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch_ssr(x2d: jax.Array, y2d: jax.Array, interpret: bool = True):
+    rows = x2d.shape[0]
+    grid = (rows // _BLOCK_ROWS,)
+    fn = ssr_pallas(
+        _ssr_body,
+        grid=grid,
+        in_streams=[
+            BlockStream((_BLOCK_ROWS, _LANES), lambda i: (i, 0), name="x"),
+            BlockStream((_BLOCK_ROWS, _LANES), lambda i: (i, 0), name="y"),
+        ],
+        out_streams=[
+            BlockStream((1, 1), lambda i: (0, 0), Direction.WRITE, name="acc"),
+        ],
+        out_shapes=[jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("arbitrary",),
+    )
+    return fn(x2d, y2d)[0, 0]
+
+
+def ssr_dot(x: jax.Array, y: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Streamed dot product. n is padded up to a whole number of blocks."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    rows = (n + pad) // _LANES
+    return _dispatch_ssr(x.reshape(rows, _LANES), y.reshape(rows, _LANES),
+                         interpret)
+
+
+def _baseline_body(x_ref, y_ref, o_ref):
+    rows = x_ref.shape[0]
+    nblk = rows // _BLOCK_ROWS
+
+    def step(i, acc):
+        # Explicit "loads": dynamic-slice fetch + compute, serialised.
+        x = x_ref[pl.dslice(i * _BLOCK_ROWS, _BLOCK_ROWS), :]
+        y = y_ref[pl.dslice(i * _BLOCK_ROWS, _BLOCK_ROWS), :]
+        return acc + jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+    o_ref[...] = jax.lax.fori_loop(0, nblk, step, jnp.float32(0)).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch_base(x2d, y2d, interpret: bool = True):
+    out = pl.pallas_call(
+        _baseline_body,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d, y2d)
+    return out[0, 0]
+
+
+def baseline_dot(x: jax.Array, y: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    rows = (n + pad) // _LANES
+    return _dispatch_base(x.reshape(rows, _LANES), y.reshape(rows, _LANES),
+                          interpret)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every kernel in the suite (§4.2 of the paper).
+
+Each Pallas kernel's test sweeps shapes/dtypes and asserts allclose against
+the function here.  These are also the semantics the ``ssrcfg``-off path uses
+in models, so "SSR on == SSR off" is checked against the same ground truth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dot_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reduction (dot product): the paper's running example."""
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def scan_ref(x: jax.Array) -> jax.Array:
+    """All prefix sums (inclusive)."""
+    return jnp.cumsum(x.astype(jnp.float32))
+
+
+def relu_ref(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, jnp.zeros((), dtype=x.dtype))
+
+
+def stencil1d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """11-point star stencil: y[i] = Σ_j w[j]·x[i+j], valid region only.
+
+    ``x`` is the padded input of length n + taps − 1; output length n.
+    """
+    taps = w.shape[0]
+    n = x.shape[0] - taps + 1
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((n,), jnp.float32)
+    for j in range(taps):
+        acc = acc + w[j].astype(jnp.float32) * xf[j:j + n]
+    return acc
+
+
+def stencil2d_ref(x: jax.Array, wx: jax.Array, wy: jax.Array) -> jax.Array:
+    """Star-shaped 2-D stencil (cross of two 1-D arms, diameter = len(w)).
+
+    ``x`` padded by r = taps//2 on all sides; arms share the centre point, so
+    the centre coefficient is wx[r] + wy[r].
+    """
+    taps = wx.shape[0]
+    r = taps // 2
+    h = x.shape[0] - 2 * r
+    wgrid = x.shape[1] - 2 * r
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((h, wgrid), jnp.float32)
+    for j in range(taps):
+        acc = acc + wx[j].astype(jnp.float32) * xf[r:r + h, j:j + wgrid]
+        acc = acc + wy[j].astype(jnp.float32) * xf[j:j + h, r:r + wgrid]
+    return acc
+
+
+def gemv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def fft_ref(re: jax.Array, im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Forward DFT (no normalisation), split real/imag."""
+    z = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def sort_ref(x: jax.Array) -> jax.Array:
+    return jnp.sort(x)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Single-head attention oracle: softmax(q·kᵀ·scale + mask)·v.
+
+    ``window``: sliding-window (h2o-danube style) — query i attends to keys
+    in (i − window, i].  Computed in f32 regardless of input dtype.
+    """
+    sq, d = q.shape
+    sk = k.shape[0]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("qd,kd->qk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (decode-friendly)
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("qk,kd->qd", p, v.astype(jnp.float32))

@@ -1,0 +1,87 @@
+"""ReLU over a vector — paper §4.2 (max(0, x) over 1024 values).
+
+The simplest possible stream kernel: one read stream in, one write stream
+out, pure elementwise body.  Generalised to any elementwise unary, since the
+SSR structure is identical (§4.2 uses ReLU as the representative).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_ROWS = 8
+_LANES = 128
+BLOCK_ELEMS = _ROWS * _LANES
+
+
+def _make_body(fn: Callable[[jax.Array], jax.Array]):
+    def body(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "interpret"))
+def _dispatch(x2d, fn, interpret: bool = True):
+    grid = (x2d.shape[0] // _ROWS,)
+    call = ssr_pallas(
+        _make_body(fn),
+        grid=grid,
+        in_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0), name="x")],
+        out_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)],
+        interpret=interpret,
+        dimension_semantics=("parallel",),
+    )
+    return call(x2d)
+
+
+def _relu(x):
+    return jnp.maximum(x, jnp.zeros((), x.dtype))
+
+
+def ssr_elementwise(x: jax.Array, fn: Callable, *,
+                    interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    rows = (n + pad) // _LANES
+    return _dispatch(x.reshape(rows, _LANES), fn, interpret).reshape(-1)[:n]
+
+
+def ssr_relu(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    return ssr_elementwise(x, _relu, interpret=interpret)
+
+
+def _baseline_body(x_ref, o_ref):
+    rows = x_ref.shape[0]
+    nblk = rows // _ROWS
+
+    def step(i, _):
+        blk = x_ref[pl.dslice(i * _ROWS, _ROWS), :]
+        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = _relu(blk)
+        return 0
+
+    jax.lax.fori_loop(0, nblk, step, 0)
+
+
+def baseline_relu(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    rows = (n + pad) // _LANES
+    out = pl.pallas_call(
+        _baseline_body,
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), x.dtype),
+        interpret=interpret,
+    )(x.reshape(rows, _LANES))
+    return out.reshape(-1)[:n]

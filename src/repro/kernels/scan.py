@@ -1,0 +1,97 @@
+"""Scan (all prefix sums) over a long vector — paper §4.2, 4096 values.
+
+SSR structure: one read stream and one write stream walk the vector in
+lockstep; the carry lives in a VMEM scratch register across grid steps (the
+sequential dependence the paper handles with the accumulator register).  The
+grid dimension is ``arbitrary`` (sequential) — blocks must retire in order,
+but the *fetch* of block i+1 still overlaps the compute of block i.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_ROWS = 8
+_LANES = 128
+BLOCK_ELEMS = _ROWS * _LANES
+
+
+def _ssr_body(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    flat = x_ref[...].astype(jnp.float32).reshape(-1)
+    csum = jnp.cumsum(flat)
+    o_ref[...] = (csum + carry_ref[0, 0]).reshape(_ROWS, _LANES)
+    carry_ref[...] = (carry_ref[0, 0] + csum[-1]).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch(x2d: jax.Array, interpret: bool = True) -> jax.Array:
+    grid = (x2d.shape[0] // _ROWS,)
+    fn = ssr_pallas(
+        _ssr_body,
+        grid=grid,
+        in_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0), name="x")],
+        out_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct(x2d.shape, jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("arbitrary",),
+    )
+    return fn(x2d)
+
+
+def ssr_scan(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Inclusive prefix sum; input padded to whole blocks, result trimmed."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    rows = (n + pad) // _LANES
+    out = _dispatch(x.reshape(rows, _LANES), interpret)
+    return out.reshape(-1)[:n]
+
+
+def _baseline_body(x_ref, o_ref):
+    # Monolithic: single grid step, in-body block walk with explicit loads.
+    rows = x_ref.shape[0]
+    nblk = rows // _ROWS
+
+    def step(i, carry):
+        x = x_ref[pl.dslice(i * _ROWS, _ROWS), :].astype(jnp.float32)
+        csum = jnp.cumsum(x.reshape(-1))
+        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = (
+            (csum + carry).reshape(_ROWS, _LANES))
+        return carry + csum[-1]
+
+    jax.lax.fori_loop(0, nblk, step, jnp.float32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch_base(x2d, interpret: bool = True):
+    return pl.pallas_call(
+        _baseline_body,
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=interpret,
+    )(x2d)
+
+
+def baseline_scan(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % BLOCK_ELEMS
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    rows = (n + pad) // _LANES
+    return _dispatch_base(x.reshape(rows, _LANES), interpret).reshape(-1)[:n]

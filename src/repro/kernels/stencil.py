@@ -1,0 +1,134 @@
+"""Star-shaped stencils (discrete Laplace style, diameter 11) — paper §4.2.
+
+1-D: the input is streamed through *two* lanes offset by one block — the
+halo trick.  Each output tile needs ``taps − 1`` elements beyond its own
+extent; lane 0 carries block i, lane 1 block i+1 (an affine index_map
+``i ↦ i+1`` — exactly a second AGU with a shifted base pointer, paper §2.3).
+The tap loop is fully unrolled in the body with *static* slices: zero address
+arithmetic survives at run time, matching the SSR hot loop that contains only
+fmadds.  Coefficients ride a constant (repeat-semantics) stream.
+
+2-D: the 64×64 problem fits VMEM whole (the paper likewise sizes problems to
+the TCDM, §4.2), so the kernel is a single-step streamed load of the padded
+grid; the two arm loops unroll statically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream, Direction, ssr_pallas
+
+_LANES = 128
+TAPS = 11
+
+
+def _body_1d(lo_ref, hi_ref, w_ref, o_ref):
+    window = jnp.concatenate(
+        [lo_ref[...].astype(jnp.float32), hi_ref[...].astype(jnp.float32)],
+        axis=1)
+    acc = jnp.zeros((1, _LANES), jnp.float32)
+    for j in range(TAPS):                      # static unroll: fmadds only
+        acc = acc + w_ref[0, j].astype(jnp.float32) * window[:, j:j + _LANES]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch_1d(xp2d, w2d, interpret: bool = True):
+    nblk = xp2d.shape[0] - 1
+    fn = ssr_pallas(
+        _body_1d,
+        grid=(nblk,),
+        in_streams=[
+            BlockStream((1, _LANES), lambda i: (i, 0), name="x_lo"),
+            BlockStream((1, _LANES), lambda i: (i + 1, 0), name="x_hi"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="w"),  # repeat
+        ],
+        out_streams=[BlockStream((1, _LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct((nblk, _LANES), jnp.float32)],
+        interpret=interpret,
+        dimension_semantics=("parallel",),
+    )
+    return fn(xp2d, xp2d, w2d)
+
+
+def ssr_stencil1d(x: jax.Array, w: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1."""
+    if w.shape[0] != TAPS:
+        raise ValueError(f"stencil diameter fixed at {TAPS} (paper §4.2)")
+    n = x.shape[0] - (TAPS - 1)
+    nblk = -(-n // _LANES)
+    # pad so that blocks [0..nblk] exist (halo lane reads block i+1)
+    need = (nblk + 1) * _LANES
+    x = jnp.pad(x, (0, need - x.shape[0]))
+    out = _dispatch_1d(x.reshape(nblk + 1, _LANES), w.reshape(1, TAPS),
+                       interpret)
+    return out.reshape(-1)[:n]
+
+
+def _body_2d(x_ref, wx_ref, wy_ref, o_ref):
+    r = TAPS // 2
+    h = o_ref.shape[0]
+    wgrid = o_ref.shape[1]
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((h, wgrid), jnp.float32)
+    for j in range(TAPS):                      # static unroll, both arms
+        acc = acc + wx_ref[0, j].astype(jnp.float32) * x[r:r + h, j:j + wgrid]
+        acc = acc + wy_ref[0, j].astype(jnp.float32) * x[j:j + h, r:r + wgrid]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dispatch_2d(xp, wx2d, wy2d, interpret: bool = True):
+    r = TAPS // 2
+    h, wgrid = xp.shape[0] - 2 * r, xp.shape[1] - 2 * r
+    fn = ssr_pallas(
+        _body_2d,
+        grid=(1,),
+        in_streams=[
+            BlockStream(xp.shape, lambda i: (0, 0), name="x"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="wx"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="wy"),
+        ],
+        out_streams=[BlockStream((h, wgrid), lambda i: (0, 0),
+                                 Direction.WRITE, name="y")],
+        out_shapes=[jax.ShapeDtypeStruct((h, wgrid), jnp.float32)],
+        interpret=interpret,
+    )
+    return fn(xp, wx2d, wy2d)
+
+
+def ssr_stencil2d(x: jax.Array, wx: jax.Array, wy: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """Star stencil over a padded grid ``x`` (pad r = TAPS//2 each side)."""
+    return _dispatch_2d(x, wx.reshape(1, TAPS), wy.reshape(1, TAPS),
+                        interpret)
+
+
+def _baseline_body_1d(x_ref, w_ref, o_ref):
+    n = o_ref.shape[1]
+
+    def tap(j, acc):
+        return acc + w_ref[0, j] * jax.lax.dynamic_slice(
+            x_ref[...].astype(jnp.float32), (0, j), (1, n))
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, TAPS, tap, jnp.zeros((1, n), jnp.float32))
+
+
+def baseline_stencil1d(x: jax.Array, w: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """Monolithic variant: explicit in-body dynamic-slice 'loads' per tap."""
+    n = x.shape[0] - (TAPS - 1)
+    out = pl.pallas_call(
+        _baseline_body_1d,
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x.reshape(1, -1), w.astype(jnp.float32).reshape(1, TAPS))
+    return out.reshape(-1)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import (jax locks the device count on first
+#   init).  Everything below this line may import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this harness:
+
+1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+2. derives the sharding policy (parallel/sharding.py) for params, optimizer
+   state, inputs, and caches,
+3. lowers the appropriate step function with ShapeDtypeStruct stand-ins
+   (``input_specs`` — zero allocation, the 671B param tree never exists),
+4. compiles, records ``memory_analysis()`` (per-device — proves it fits),
+   ``cost_analysis()`` (raw XLA numbers), and the trip-count-adjusted HLO
+   walk (FLOPs / bytes / per-collective link traffic) for §Roofline,
+5. appends the record to a resumable JSON cache.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.data import pipeline
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import describe, make_production_mesh
+from repro.models import config as mcfg
+from repro.models import model as mdl
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.activations import activation_mesh
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_PATH = "dryrun_results.json"
+
+
+def _clamp_microbatches(cfg, cell, mesh) -> int:
+    """Largest m ≤ cfg.microbatches with (B/m) divisible by the dp size."""
+    dp = shd.dp_size(mesh)
+    m = min(cfg.microbatches, cell.global_batch)
+    while m > 1 and (cell.global_batch % m
+                     or (cell.global_batch // m) % dp):
+        m -= 1
+    return max(m, 1)
+
+
+def _batch_specs(cfg, cell, mesh, dcfg):
+    ispecs = pipeline.input_specs(cfg, dcfg)
+    bspec = shd.batch_spec(cfg, mesh, cell.global_batch)
+    out = {}
+    for k, v in ispecs.items():
+        out[k] = P(*([bspec[0]] + [None] * (len(v.shape) - 1)))
+    return ispecs, out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override: Optional[mcfg.ModelConfig] = None,
+               extra_tag: str = "") -> Dict[str, Any]:
+    cfg = cfg_override or configs.get(arch)
+    cell = shp.get_shape(shape_name)
+    skip = shp.skip_reason(cfg, cell)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": cell.kind, "tag": extra_tag,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+    }
+    if skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["mesh_desc"] = describe(mesh)
+    _am = activation_mesh(mesh)
+    _am.__enter__()
+    t0 = time.time()
+    opt_cfg = adamw.AdamWConfig(moment_dtype=cfg.optimizer_dtype)
+
+    if cell.kind == "train":
+        micro = _clamp_microbatches(cfg, cell, mesh)
+        rec["microbatches"] = micro
+        seq = cell.seq_len - (cfg.frontend_len if cfg.frontend == "vision"
+                              else 0)
+        dcfg = pipeline.DataConfig(cell.global_batch, seq)
+        state = steps.abstract_train_state(cfg, opt_cfg)
+        pspec = shd.param_spec_tree(state["params"], cfg, mesh)
+        ospec = {"m": pspec, "v": pspec, "count": P()}
+        ispecs, bspec = _batch_specs(cfg, cell, mesh, dcfg)
+        fn = steps.make_train_step(cfg, opt_cfg, microbatches=micro)
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(shd.named(mesh, pspec), shd.named(mesh, ospec),
+                              shd.named(mesh, bspec)),
+                out_shardings=(shd.named(mesh, pspec), shd.named(mesh, ospec),
+                               None),
+                donate_argnums=(0, 1),
+            ).lower(state["params"], state["opt"], ispecs)
+    elif cell.kind == "prefill":
+        seq = cell.seq_len - (cfg.frontend_len if cfg.frontend == "vision"
+                              else 0)
+        dcfg = pipeline.DataConfig(cell.global_batch, seq)
+        params = jax.eval_shape(
+            lambda: mdl.init_params(jax.random.PRNGKey(0), cfg))
+        pspec = shd.param_spec_tree(params, cfg, mesh)
+        ispecs, bspec = _batch_specs(cfg, cell, mesh, dcfg)
+        ispecs.pop("labels", None)
+        bspec.pop("labels", None)
+        # batch-chunking is OFF for the dry-run: the post-chunk cache
+        # merge relayouts across the sharded batch dim (observed 192 GiB on
+        # yi prefill); EP MoE + streaming attention bound prefill instead.
+        fn = steps.make_prefill_step(cfg, cache_len=cell.seq_len)
+        cache_out = None
+        if cfg.has_decode:
+            caches_abs = steps.abstract_caches(
+                cfg, cell.global_batch,
+                min(cell.seq_len, cfg.window) if cfg.window else cell.seq_len,
+                jnp.dtype(cfg.compute_dtype))
+            cache_out = shd.named(
+                mesh, shd.cache_spec_tree(caches_abs, cfg, mesh))
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(shd.named(mesh, pspec),
+                              shd.named(mesh, bspec)),
+                out_shardings=(None, cache_out),
+            ).lower(params, ispecs)
+    else:  # decode
+        b = cell.global_batch
+        params = jax.eval_shape(
+            lambda: mdl.init_params(jax.random.PRNGKey(0), cfg))
+        pspec = shd.param_spec_tree(params, cfg, mesh, inference=True)
+        caches = steps.abstract_caches(
+            cfg, b, cell.seq_len, jnp.dtype(cfg.compute_dtype))
+        cspec = shd.cache_spec_tree(caches, cfg, mesh)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        bsp = shd.batch_spec(cfg, mesh, b)
+        fn = steps.make_decode_step(cfg)
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(shd.named(mesh, pspec),
+                              shd.named(mesh, cspec),
+                              NamedSharding(mesh, P(bsp[0], None)),
+                              NamedSharding(mesh, P(bsp[0]))),
+                out_shardings=(None, shd.named(mesh, cspec)),
+                donate_argnums=(1,),
+            ).lower(params, caches, tok, pos)
+
+    _am.__exit__()
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    memstats = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(memstats.argument_size_in_bytes),
+        "output_bytes": int(memstats.output_size_in_bytes),
+        "temp_bytes": int(memstats.temp_size_in_bytes),
+        "alias_bytes": int(memstats.alias_size_in_bytes),
+        "peak_per_device_gib": round(
+            (memstats.argument_size_in_bytes
+             + memstats.output_size_in_bytes
+             + memstats.temp_size_in_bytes
+             - memstats.alias_size_in_bytes) / 2**30, 3),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis_raw"] = {
+        k: float(v) for k, v in ca.items()
+        if isinstance(v, (int, float)) and k in
+        ("flops", "bytes accessed", "transcendentals")
+    }
+    t2 = time.time()
+    hlo = compiled.as_text()
+    an = hlo_analysis.analyze_hlo(hlo, mesh.size)
+    rec["hlo"] = {
+        "flops_per_device": an.flops,
+        "dot_flops_per_device": an.dot_flops,
+        "bytes_out_per_device": an.bytes_out,
+        "collective_bytes_per_device": an.collective_bytes,
+        "collective_counts": an.collective_counts,
+        "while_trips": sorted(set(an.while_trips), reverse=True)[:8],
+        "hlo_chars": len(hlo),
+    }
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    rec["status"] = "ok"
+    return rec
+
+
+def load_results(path: str = RESULTS_PATH) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(results: Dict[str, Any], path: str = RESULTS_PATH) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def cell_key(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    k = f"{arch}|{shape}|{mesh}"
+    return f"{k}|{tag}" if tag else k
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"],
+                    default="both")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in shp.SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    pods = {"on": [True], "off": [False], "both": [False, True]}[
+        args.multi_pod]
+
+    results = load_results(args.out)
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                key = cell_key(arch, shape, mesh_name)
+                if key in results and not args.force \
+                        and results[key].get("status") in ("ok", "skipped"):
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[run] {key}", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                save_results(results, args.out)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f" mem={rec['memory']['peak_per_device_gib']}GiB"
+                             f" compile={rec['compile_s']}s")
+                elif status == "skipped":
+                    extra = f" ({rec['skip_reason'][:60]})"
+                else:
+                    extra = f" ({rec['error'][:80]})"
+                print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

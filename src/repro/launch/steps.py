@@ -1,0 +1,125 @@
+"""Step functions: train (grad-accumulated), prefill, decode.
+
+These are the jit roots that the dry-run lowers and the drivers execute.
+All are pure: ``train_step(params, opt_state, batch) → (params, opt_state,
+metrics)``; gradient accumulation is a ``lax.scan`` over microbatches
+(activation footprint stays one-microbatch-sized regardless of global
+batch — required for the 405B/671B cells to fit).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as mcfg
+from repro.models import model as mdl
+from repro.optim import adamw
+
+
+def make_train_step(cfg: mcfg.ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    *, microbatches: Optional[int] = None) -> Callable:
+    m = microbatches or cfg.microbatches
+
+    def loss(p, mb):
+        return mdl.loss_fn(p, cfg, mb)
+
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        if m > 1:
+            split = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (lv, _), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, l_acc + lv), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, lsum), _ = jax.lax.scan(accum, (zeros, jnp.float32(0.0)),
+                                            split)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            lv = lsum / m
+        else:
+            (lv, _), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                               opt_cfg)
+        return new_params, new_opt, {"loss": lv, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: mcfg.ModelConfig, *, cache_len: int,
+                      batch_chunks: int = 1) -> Callable:
+    """(params, batch) → (last-position logits, caches).
+
+    ``batch_chunks > 1`` processes the request batch in sequential chunks
+    (``lax.map``) — prefill has no gradient rematerialisation to bound its
+    footprint, so chunking the batch is what keeps 32k-token prefill of the
+    MoE giants inside HBM (EXPERIMENTS §Dry-run).
+    """
+
+    def one_chunk(params, batch):
+        if not cfg.has_decode:  # encoder: plain forward, no cache
+            logits, _, _ = mdl.forward(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"))
+            return logits, ()
+        logits, caches, _ = mdl.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), want_cache=True, cache_len=cache_len)
+        return logits[:, -1:], caches
+
+    if batch_chunks <= 1:
+        return one_chunk
+
+    def prefill_step(params, batch):
+        split = jax.tree.map(
+            lambda x: x.reshape(batch_chunks, x.shape[0] // batch_chunks,
+                                *x.shape[1:]), batch)
+        logits, caches = jax.lax.map(
+            lambda mb: one_chunk(params, mb), split)
+        # un-chunk the leading batch axis everywhere
+        merge = lambda x: x.reshape(x.shape[0] * x.shape[1], *x.shape[2:])
+        logits = merge(logits)
+        caches = jax.tree.map(
+            lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                x.shape[1], x.shape[0] * x.shape[2], *x.shape[3:]), caches)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: mcfg.ModelConfig) -> Callable:
+    """(params, caches, tokens (B,1), positions (B,)) → (logits, caches)."""
+
+    def serve_step(params, caches, tokens, positions):
+        return mdl.decode_step(params, cfg, tokens, caches, positions)
+
+    return serve_step
+
+
+def init_train_state(key, cfg: mcfg.ModelConfig,
+                     opt_cfg: adamw.AdamWConfig) -> Dict[str, Any]:
+    params = mdl.init_params(key, cfg)
+    return {"params": params, "opt": adamw.init(params, opt_cfg)}
+
+
+def abstract_train_state(cfg: mcfg.ModelConfig,
+                         opt_cfg: adamw.AdamWConfig):
+    """ShapeDtypeStruct pytree of the train state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+
+
+def abstract_caches(cfg: mcfg.ModelConfig, batch: int, max_len: int, dtype):
+    return jax.eval_shape(
+        lambda: mdl.init_caches(cfg, batch, max_len, dtype))

@@ -1,0 +1,313 @@
+"""Attention mixers: GQA (qk-norm / sliding-window options) and MLA.
+
+Two execution modes share each mixer:
+
+* ``full``  — training / prefill over a whole sequence (causal or
+  bidirectional).  Optionally emits the KV cache for subsequent decoding.
+* ``decode`` — one new token against a cache (per-sequence positions), the
+  ``serve_step`` path.  Sliding-window caches are ring buffers bounded by the
+  window (why h2o-danube's 500k-context decode is feasible); MLA caches the
+  compressed latent + rope key only (576 B/token·layer at full size) and uses
+  the *absorbed* formulation for decode.
+
+SSR tie-in: the ``full`` path's attention is the streamed flash kernel
+(``kernels/attention.py``) when the ssr region is enabled on TPU; the XLA
+path below is the semantically identical ``ssrcfg=0`` fallback that the
+multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.activations import BATCH, MODEL, constrain
+
+from .config import MLAConfig, ModelConfig
+from .flash import flash_sdpa
+from .layers import apply_rope, init_dense, rms_norm, rope_angles
+
+_NEG = -1e30
+
+# above this many kv positions the full-sequence path switches from naive
+# SDPA (exact, simple — fine for smoke tests) to the chunked flash schedule
+# (same math, O(tile) memory — required at train_4k/prefill_32k scale)
+FLASH_THRESHOLD = 1024
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    q_norm: Optional[jax.Array]
+    k_norm: Optional[jax.Array]
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": init_dense(ks[0], d, h * hd, dt),
+        "wk": init_dense(ks[1], d, kv * hd, dt),
+        "wv": init_dense(ks[2], d, kv * hd, dt),
+        "wo": init_dense(ks[3], h * hd, d, dt),
+        "q_norm": jnp.ones((hd,), dt) if cfg.qk_norm else None,
+        "k_norm": jnp.ones((hd,), dt) if cfg.qk_norm else None,
+    }
+
+
+def _mask(sq: int, sk: int, q_pos, k_pos, causal: bool,
+          window: Optional[int], valid_len=None):
+    """(…, sq, sk) boolean mask from absolute positions."""
+    m = jnp.ones(q_pos.shape[:-1] + (sq, sk), bool) if q_pos.ndim > 1 else \
+        jnp.ones((sq, sk), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m = m & (kp <= qp)
+    if window is not None:
+        m = m & (kp > qp - window)
+    if valid_len is not None:
+        m = m & (kp < valid_len[..., None, None])
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,dh), k (B,Sk,KV,dh), v (B,Sk,KV,dv); f32 softmax."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, dh)
+    # preferred_element_type (NOT .astype) keeps the KV operands in their
+    # storage dtype — an .astype(f32) here makes XLA materialise an f32
+    # copy of the whole cache, hoisted out of the layer loop (observed:
+    # +8.4 GiB/device on llama3 decode_32k).
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask,
+                       logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attn_full(params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, want_cache: bool, cache_len: int = 0):
+    """Full-sequence attention.  positions (B, S) absolute indices."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, s, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, s, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, s, kv, hd)
+    q = constrain(q, BATCH, None, MODEL, None)
+    k = constrain(k, BATCH, None, MODEL, None)
+    v = constrain(v, BATCH, None, MODEL, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if s > FLASH_THRESHOLD:
+        out = flash_sdpa(q, k, v, q_pos=positions, k_pos=positions,
+                         causal=cfg.causal, window=cfg.window,
+                         scale=1.0 / math.sqrt(hd))
+    else:
+        mask = _mask(s, s, positions, positions, cfg.causal, cfg.window)
+        out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(hd))
+    out = jnp.dot(out.reshape(b, s, h * hd), params["wo"])
+    cache = None
+    if want_cache:
+        cache = init_attn_cache(cfg, b, cache_len, dtype=x.dtype)
+        cache = _cache_write_bulk(cache, k, v, positions, cfg)
+    return out.astype(x.dtype), cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+    }
+
+
+def _cache_write_bulk(cache, k, v, positions, cfg: ModelConfig):
+    """Prefill write: place the last ``size`` tokens (ring for SWA)."""
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= size:
+        ksel, vsel = k[:, -size:], v[:, -size:]
+        if cfg.window:  # ring layout: slot = pos % size
+            psel = positions[:, -size:] % size
+            order = jnp.argsort(psel, axis=1)
+            ksel = jnp.take_along_axis(ksel, order[..., None, None], axis=1)
+            vsel = jnp.take_along_axis(vsel, order[..., None, None], axis=1)
+        return {"k": ksel, "v": vsel}
+    k0 = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+    v0 = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    return {"k": k0, "v": v0}
+
+
+def attn_decode(params, x: jax.Array, cfg: ModelConfig, cache, *,
+                positions: jax.Array):
+    """One-token step.  x (B, 1, D); positions (B,) next absolute index."""
+    b, s, d = x.shape
+    assert s == 1
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, hd)
+    k = jnp.dot(x, params["wk"]).reshape(b, 1, kv, hd)
+    v = jnp.dot(x, params["wv"]).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions[:, None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    size = cache["k"].shape[1]
+    slot = positions % size if cfg.window else positions
+
+    def write(buf, new):
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+        )(buf, new, slot)
+
+    k_cache = write(cache["k"], k)
+    v_cache = write(cache["v"], v)
+
+    if cfg.window:
+        # ring buffer: slot s holds absolute position  s + size*floor(...)
+        # valid iff abs_pos > pos - window; reconstruct abs positions.
+        idx = jnp.arange(size)[None, :]
+        cur = positions[:, None]
+        abs_pos = jnp.where(idx <= cur % size, cur - cur % size + idx,
+                            cur - cur % size + idx - size)
+        valid = (abs_pos >= 0) & (abs_pos > cur - cfg.window) & (abs_pos <= cur)
+        k_pos = abs_pos
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(size)[None, :], (b, size))
+        valid = k_pos <= positions[:, None]
+    mask = valid[:, None, :]  # (B, 1, S)
+    out = _sdpa(q, k_cache, v_cache, mask, 1.0 / math.sqrt(hd))
+    out = jnp.dot(out.reshape(b, 1, h * hd), params["wo"])
+    return out.astype(x.dtype), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V3 multi-head latent attention.
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wdq": init_dense(ks[0], d, m.q_lora_rank, dt),
+        "q_norm": jnp.ones((m.q_lora_rank,), dt),
+        "wuq": init_dense(ks[1], m.q_lora_rank, h * m.qk_head_dim, dt),
+        "wdkv": init_dense(ks[2], d, m.kv_lora_rank, dt),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+        "wkr": init_dense(ks[3], d, m.qk_rope_head_dim, dt),
+        "wuk": init_dense(ks[4], m.kv_lora_rank, h * m.qk_nope_head_dim, dt),
+        "wuv": init_dense(ks[5], m.kv_lora_rank, h * m.v_head_dim, dt),
+        "wo": init_dense(ks[6], h * m.v_head_dim, d, dt),
+    }
+
+
+def _mla_qkr(params, x, cfg, positions):
+    """Shared q / latent / rope-key computation."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    cq = rms_norm(jnp.dot(x, params["wdq"]), params["q_norm"], cfg.norm_eps)
+    q = jnp.dot(cq, params["wuq"]).reshape(b, s, h, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    ckv = rms_norm(jnp.dot(x, params["wdkv"]), params["kv_norm"], cfg.norm_eps)
+    kr = jnp.dot(x, params["wkr"]).reshape(b, s, 1, m.qk_rope_head_dim)
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr = apply_rope(kr, cos, sin)[:, :, 0]  # shared across heads
+    return q_nope, q_rope, ckv, kr
+
+
+def mla_full(params, x, cfg: ModelConfig, *, positions, want_cache: bool,
+             cache_len: int = 0):
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope, ckv, kr = _mla_qkr(params, x, cfg, positions)
+    k_nope = jnp.dot(ckv, params["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = jnp.dot(ckv, params["wuv"]).reshape(b, s, h, m.v_head_dim)
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    # fold the shared rope key in: q' = [q_nope, q_rope], k' = [k_nope, kr]
+    qq = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                   BATCH, None, MODEL, None)
+    kk = constrain(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1),
+        BATCH, None, MODEL, None)
+    v = constrain(v, BATCH, None, MODEL, None)
+    if s > FLASH_THRESHOLD:
+        out = flash_sdpa(qq, kk, v, q_pos=positions, k_pos=positions,
+                         causal=cfg.causal, window=cfg.window, scale=scale)
+    else:
+        mask = _mask(s, s, positions, positions, cfg.causal, cfg.window)
+        out = _sdpa(qq, kk, v, mask, scale)
+    out = jnp.dot(out.reshape(b, s, h * m.v_head_dim).astype(x.dtype),
+                  params["wo"])
+    cache = None
+    if want_cache:
+        cache = init_mla_cache(cfg, b, cache_len, x.dtype)
+        lat = jnp.concatenate([ckv, kr], axis=-1)
+        cache = {"lat": jax.lax.dynamic_update_slice(
+            cache["lat"], lat[:, : cache["lat"].shape[1]], (0, 0, 0))}
+    return out.astype(x.dtype), cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"lat": jnp.zeros((batch, max_len, cfg.mla.cache_dim), dtype)}
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache, *, positions):
+    """Absorbed-formulation decode: scores & values via the latent only."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope, ckv, kr = _mla_qkr(params, x, cfg, positions[:, None])
+    lat_new = jnp.concatenate([ckv, kr], axis=-1)  # (B,1,r+dr)
+    lat = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0))
+    )(cache["lat"], lat_new, positions)
+    ckv_all = lat[..., : m.kv_lora_rank]
+    kr_all = lat[..., m.kv_lora_rank:]
+    # absorb W_uk into q: q_lat (B,H,r)
+    wuk = params["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(m.qk_head_dim)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv_all.dtype),
+                         ckv_all, preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], kr_all,
+                           preferred_element_type=jnp.float32)) * scale
+    size = lat.shape[1]
+    valid = jnp.arange(size)[None, :] <= positions[:, None]
+    logits = jnp.where(valid[:, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_all.dtype), ckv_all,
+                       preferred_element_type=jnp.float32)
+    wuv = params["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat.astype(wuv.dtype), wuv,
+                     preferred_element_type=jnp.float32)
+    out = jnp.dot(out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype),
+                  params["wo"])
+    return out.astype(x.dtype), {"lat": lat}

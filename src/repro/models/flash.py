@@ -1,0 +1,132 @@
+"""XLA flash-style chunked attention (the ssrcfg=0 path at scale).
+
+The naive SDPA materialises (B, H, S, S) logits — at train_4k/prefill_32k
+scale that alone overflows HBM.  This module is the XLA mirror of the
+streamed Pallas kernel (kernels/attention.py): an outer ``lax.map`` over
+query tiles and an inner ``lax.scan`` over KV tiles with the online-softmax
+accumulator, double-``jax.checkpoint``ed so backward never holds more than
+one (bq × bk) tile of logits.  The KV tile walk is literally the SSR read
+stream; the (m, l, acc) carry is the accumulator register.
+
+Semantics identical to ``ref.attention_ref`` / ``_sdpa`` (tested) — only
+the schedule differs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.activations import BATCH, MODEL, constrain
+
+_NEG = -1e30
+
+
+def _pick(block: int, size: int) -> int:
+    b = min(block, size)
+    while size % b:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int], scale: float,
+               bq: int = 512, bk: int = 1024) -> jax.Array:
+    """q (B,Sq,H,dh); k/v (B,Sk,KV,dh); positions (B,S·) → (B,Sq,H,dh)."""
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    bq = _pick(bq, sq)
+    bk = _pick(bk, sk)
+    nq, nk = sq // bq, sk // bk
+    masked = causal or (window is not None)
+
+    qr = constrain(q.reshape(b, nq, bq, h, dh).transpose(1, 0, 2, 3, 4),
+                   None, BATCH, None, MODEL, None)
+    qpr = q_pos.reshape(b, nq, bq).transpose(1, 0, 2)
+    kr = constrain(k.reshape(b, nk, bk, kv, dh).transpose(1, 0, 2, 3, 4),
+                   None, BATCH, None, MODEL, None)
+    vr = constrain(v.reshape(b, nk, bk, kv, dv).transpose(1, 0, 2, 3, 4),
+                   None, BATCH, None, MODEL, None)
+    kpr = k_pos.reshape(b, nk, bk).transpose(1, 0, 2)
+
+    def kv_step(carry, xs):
+        m, l, acc = carry
+        qc, qpc, kc, vc, kpc = xs
+        qg = qc.reshape(b, bq, kv, g, dh).astype(jnp.float32)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                            kc.astype(jnp.float32)) * scale
+        if masked:
+            mask = jnp.ones((b, bq, bk), bool)
+            qp = qpc[:, :, None]
+            kp = kpc[:, None, :]
+            if causal:
+                mask = mask & (kp <= qp)
+            if window is not None:
+                mask = mask & (kp > qp - window)
+            logits = jnp.where(mask[:, None, None], logits, _NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        m_new = constrain(m_new, BATCH, MODEL, None, None)
+        l = constrain(l, BATCH, MODEL, None, None)
+        acc = constrain(acc, BATCH, MODEL, None, None, None)
+        return (m_new, l, acc), None
+
+    kv_step = jax.checkpoint(kv_step)
+
+    def per_q(xs):
+        qc, qpc = xs
+        init = (constrain(jnp.full((b, kv, g, bq), _NEG, jnp.float32),
+                          BATCH, MODEL, None, None),
+                constrain(jnp.zeros((b, kv, g, bq), jnp.float32),
+                          BATCH, MODEL, None, None),
+                constrain(jnp.zeros((b, kv, g, bq, dv), jnp.float32),
+                          BATCH, MODEL, None, None, None))
+
+        def step(carry, kxs):
+            kc, vc, kpc = kxs
+            return kv_step(carry, (qc, qpc, kc, vc, kpc))
+
+        (m, l, acc), _ = jax.lax.scan(step, init, (kr, vr, kpr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, bq, h, dv)
+
+    per_q = jax.checkpoint(per_q)
+    out = jax.lax.map(per_q, (qr, qpr))          # (nq, B, bq, H, dv)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def chunked_scan(step_fn, init, xs, *, chunk: int, length: int):
+    """scan-of-scans with a remat boundary per chunk.
+
+    Backward stores only chunk-boundary carries (+ the chunk's input slice)
+    instead of per-step residuals — the standard O(√S)-memory recurrence
+    trick, needed by every sequential mixer at 4k–32k tokens.
+
+    ``xs`` leaves have leading dim ``length``; chunk must divide it.
+    """
+    c = _pick(chunk, length)
+    n = length // c
+
+    def rechunk(x):
+        return x.reshape(n, c, *x.shape[1:])
+
+    xs_c = jax.tree.map(rechunk, xs)
+
+    def chunk_body(carry, x_chunk):
+        return jax.lax.scan(step_fn, carry, x_chunk)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    carry, ys = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape(n * c, *y.shape[2:]), ys)
+    return carry, ys

@@ -1,0 +1,75 @@
+"""Shared layer primitives: norms, RoPE, FFNs, embeddings, initialisers."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions; shapes (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) = (x[..., :h], x[..., h:]).
+
+    ``x``: (..., positions, heads, head_dim); cos/sin: (..., positions, h/2)
+    broadcast over heads.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.dot(h, w_down, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.dot(x, w_up, preferred_element_type=jnp.float32))
+    return jnp.dot(h.astype(x.dtype), w_down,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy in f32; labels (B, S) int, logits (B, S, V)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

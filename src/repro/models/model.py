@@ -1,0 +1,105 @@
+"""Full model: embeddings → scan groups → head; train/prefill/decode paths."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.activations import BATCH, MODEL, constrain
+
+from . import blocks
+from .config import ModelConfig
+from .layers import init_dense, init_embed, rms_norm, softmax_xent
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, len(cfg.groups) + 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Dict[str, Any] = {}
+    if cfg.frontend != "audio":
+        params["embed"] = init_embed(ks[0], cfg.vocab_size, cfg.d_model, dt)
+    if cfg.frontend is not None:
+        # stub frontend: precomputed frame/patch embeddings → linear adapter
+        params["frontend_proj"] = init_dense(ks[1], cfg.d_model, cfg.d_model, dt)
+    params["groups"] = [
+        blocks.init_group(ks[2 + i], g, cfg) for i, g in enumerate(cfg.groups)
+    ]
+    params["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(
+            ks[len(cfg.groups) + 2], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens: Optional[jax.Array],
+                  embeds: Optional[jax.Array]) -> jax.Array:
+    """Token and/or frontend-stub embeddings → (B, S_total, D)."""
+    parts = []
+    if embeds is not None:
+        parts.append(jnp.dot(embeds, params["frontend_proj"]))
+    if tokens is not None:
+        parts.append(jnp.take(params["embed"], tokens, axis=0))
+    h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return h.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _head(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    return constrain(logits, BATCH, None, MODEL)
+
+
+def forward(params, cfg: ModelConfig, *, tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None, want_cache: bool = False,
+            cache_len: int = 0, positions: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Optional[list], jax.Array]:
+    """Full-sequence pass → (logits f32, caches | None, aux_loss)."""
+    h = _embed_inputs(params, cfg, tokens, embeds)
+    h = constrain(h, BATCH, None, None)
+    b, s, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    caches = [] if want_cache else None
+    aux = jnp.float32(0.0)
+    for gp, g in zip(params["groups"], cfg.groups):
+        h, cache, a = blocks.group_full(
+            gp, h, cfg, g, positions=positions, want_cache=want_cache,
+            cache_len=cache_len)
+        aux = aux + a
+        if want_cache:
+            caches.append(cache)
+    return _head(params, cfg, h), caches, aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return [blocks.init_group_cache(g, cfg, batch, max_len, dtype)
+            for g in cfg.groups]
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches,
+                positions: jax.Array) -> Tuple[jax.Array, list]:
+    """One-token step: tokens (B, 1), positions (B,) → (logits, caches)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    new_caches = []
+    for gp, g, gc in zip(params["groups"], cfg.groups, caches):
+        h, c = blocks.group_decode(gp, h, cfg, g, caches=gc,
+                                   positions=positions)
+        new_caches.append(c)
+    return _head(params, cfg, h), new_caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token loss (LM) or frame-classification loss (encoder)."""
+    logits, _, aux = forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    if labels.shape[1] != logits.shape[1]:  # vlm: labels only on text tail
+        logits = logits[:, -labels.shape[1]:]
+    ce = softmax_xent(logits, labels, batch.get("mask"))
+    total = ce + (cfg.moe.router_aux_weight * aux if cfg.moe else 0.0)
+    return total, {"ce": ce, "aux": aux}

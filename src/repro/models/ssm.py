@@ -1,0 +1,403 @@
+"""Recurrent mixers: Mamba selective SSM and xLSTM (mLSTM / sLSTM) cells.
+
+These are the paper's *scan* kernel at model scale: a sequential recurrence
+whose operands stream past a small resident state — the SSR accumulator
+pattern.  Training uses ``lax.scan`` over time (one rolled HLO loop, cheap to
+compile at any depth); decode is a single-step state update, giving the O(1)
+per-token cost that makes the 500k-context cells feasible (DESIGN §4).
+
+Simplifications vs the reference CUDA implementations are noted inline and
+in DESIGN.md (hardware-adaptation): the selective scan is a straight
+``lax.scan`` rather than a chunked parallel scan (a hillclimb candidate),
+and the xLSTM blocks omit the small causal-conv pre-layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.activations import BATCH, MODEL, constrain
+
+from .config import MambaConfig, ModelConfig, XLSTMConfig
+from .flash import chunked_scan
+from .layers import init_dense, rms_norm
+
+# sequence-chunk length for the O(√S)-memory scan schedules below
+SCAN_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    m = cfg.mamba
+    return m.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(key, cfg: ModelConfig):
+    m: MambaConfig = cfg.mamba
+    d = cfg.d_model
+    di = m.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    a = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "w_in": init_dense(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_xproj": init_dense(ks[2], di, dtr + 2 * m.d_state, dt),
+        "w_dt": init_dense(ks[3], dtr, di, dt),
+        "dt_bias": jnp.zeros((di,), dt),
+        "a_log": jnp.log(a).astype(dt),
+        "d_skip": jnp.ones((di,), dt),
+        "w_out": init_dense(ks[4], di, d, dt),
+    }
+
+
+def _mamba_inner(params, xc, cfg):
+    """Per-step SSM tensors from the conv output xc (..., di)."""
+    m = cfg.mamba
+    dtr = _dt_rank(cfg)
+    proj = jnp.dot(xc, params["w_xproj"])
+    dt_in = proj[..., :dtr]
+    b_ssm = proj[..., dtr:dtr + m.d_state]
+    c_ssm = proj[..., dtr + m.d_state:]
+    delta = jax.nn.softplus(
+        jnp.dot(dt_in, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    return delta, a, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def mamba_full(params, x: jax.Array, cfg: ModelConfig, *,
+               want_cache: bool = False):
+    """x (B, S, D) → (B, S, D); optional terminal recurrent state.
+
+    The selective scan runs chunk-by-chunk with a remat boundary per chunk:
+    the (Δ, A, B, C) projections and the (B, chunk, di, d_state) transition
+    tensors are (re)computed inside the chunk, so backward holds one chunk's
+    worth of scan residuals instead of the full sequence's — the adaptation
+    that lets train_4k/prefill_32k fit (DESIGN.md §Hardware-adaptation).
+    """
+    m: MambaConfig = cfg.mamba
+    b, s, d = x.shape
+    di = m.expand * d
+    xz = constrain(jnp.dot(x, params["w_in"]), BATCH, None, MODEL)
+    xi, z = xz[..., :di], xz[..., di:]
+    # depthwise causal conv along S
+    pad = jnp.pad(xi, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    xc = sum(pad[:, j:j + s, :] * params["conv_w"][j] for j in range(m.d_conv))
+    xc = constrain(jax.nn.silu(xc + params["conv_b"]), BATCH, None, MODEL)
+
+    c = SCAN_CHUNK
+    while s % c:
+        c //= 2
+    n = s // c
+    xcc = xc.reshape(b, n, c, di).transpose(1, 0, 2, 3)    # (n, B, c, di)
+
+    def chunk_body(h, xck):
+        delta, a, b_ssm, c_ssm = _mamba_inner(params, xck, cfg)
+        da = jnp.exp(delta[..., None] * a)                 # (B,c,di,ds)
+        dbx = (delta * xck.astype(jnp.float32))[..., None] \
+            * b_ssm[:, :, None, :]
+
+        def step(hh, t):
+            da_t, dbx_t, c_t = t
+            hh = da_t * hh + dbx_t
+            return hh, jnp.einsum("bds,bs->bd", hh, c_t)
+
+        h, ys = jax.lax.scan(
+            step, h, (da.transpose(1, 0, 2, 3), dbx.transpose(1, 0, 2, 3),
+                      c_ssm.transpose(1, 0, 2)))
+        return constrain(h, BATCH, MODEL, None), \
+            constrain(ys, None, BATCH, MODEL)              # ys (c, B, di)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    h0 = constrain(jnp.zeros((b, di, m.d_state), jnp.float32),
+                   BATCH, MODEL, None)
+    hT, ys = jax.lax.scan(chunk_body, h0, xcc)             # ys (n, c, B, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    out = jnp.dot((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                  params["w_out"])
+    cache = None
+    if want_cache:
+        cache = {"conv": xi[:, -(m.d_conv - 1):, :],
+                 "ssm": hT.astype(jnp.float32)}
+    return out.astype(x.dtype), cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32)}
+
+
+def mamba_decode(params, x: jax.Array, cfg: ModelConfig, cache, *,
+                 positions=None):
+    m: MambaConfig = cfg.mamba
+    b = x.shape[0]
+    d = cfg.d_model
+    di = m.expand * d
+    xz = jnp.dot(x[:, 0], params["w_in"])
+    xi, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([cache["conv"], xi[:, None, :]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"])
+    xc = jax.nn.silu(xc + params["conv_b"])
+    delta, a, b_ssm, c_ssm = _mamba_inner(params, xc, cfg)
+    da = jnp.exp(delta[..., None] * a)
+    h = da * cache["ssm"] + (delta * xc.astype(jnp.float32))[..., None] \
+        * b_ssm[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_ssm)
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    out = jnp.dot((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                  params["w_out"])
+    return out[:, None, :].astype(x.dtype), \
+        {"conv": window[:, 1:], "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks.
+# d_ff = 0 in the xlstm-125m config: the blocks own their projections
+# (mLSTM pre-up-projection ×2, sLSTM post gated FFN ×4/3).
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    dp = int(xc.mlstm_proj_factor * d)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_up": init_dense(ks[0], d, dp, dt),
+        "w_gate": init_dense(ks[1], d, dp, dt),
+        "wq": init_dense(ks[2], dp, dp, dt),
+        "wk": init_dense(ks[3], dp, dp, dt),
+        "wv": init_dense(ks[4], dp, dp, dt),
+        "w_ifo": init_dense(ks[5], dp, 3 * h, dt),   # input/forget gates per head
+        "skip_norm": jnp.ones((dp,), dt),
+        "w_down": init_dense(ks[6], dp, d, dt),
+    }
+
+
+def _mlstm_gates(params, u, h):
+    g = jnp.dot(u, params["w_ifo"]).astype(jnp.float32)
+    i_pre, f_pre, _ = jnp.split(g, 3, axis=-1)
+    return i_pre, f_pre
+
+
+def mlstm_full(params, x, cfg: ModelConfig, *, want_cache: bool = False):
+    """Chunkwise-parallel mLSTM (the xLSTM paper's training form).
+
+    Within a chunk the decayed outer-product memory is evaluated as a masked
+    (c × c) attention-like contraction; across chunks the (C, n, m) state
+    carries recurrently, in stabilised (÷ exp(m)) units identical to the
+    decode path.  This replaces a per-token scan whose backward residuals
+    (B·H·dh² per step) were the 2 TiB/device blow-up seen in the first
+    dry-run — the chunk form is the TPU-native adaptation (MXU-sized
+    contractions, √S memory).
+    """
+    xcfg = cfg.xlstm
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dp = int(xcfg.mlstm_proj_factor * d)
+    dh = dp // h
+    u = constrain(jnp.dot(x, params["w_up"]), BATCH, None, MODEL)
+    gate = constrain(jnp.dot(x, params["w_gate"]), BATCH, None, MODEL)
+    q = constrain(jnp.dot(u, params["wq"]).reshape(b, s, h, dh),
+                  BATCH, None, MODEL, None)
+    k = constrain(jnp.dot(u, params["wk"]).reshape(b, s, h, dh),
+                  BATCH, None, MODEL, None) / math.sqrt(dh)
+    v = constrain(jnp.dot(u, params["wv"]).reshape(b, s, h, dh),
+                  BATCH, None, MODEL, None)
+    i_pre, f_pre = _mlstm_gates(params, u, h)      # (B,S,H)
+
+    c = SCAN_CHUNK
+    while s % c:
+        c //= 2
+    n_chunks = s // c
+
+    def rechunk(a):  # (B,S,...) -> (n,B,c,...)
+        return a.astype(jnp.float32).reshape(
+            b, n_chunks, c, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    qs, ks, vs = rechunk(q), rechunk(k), rechunk(v)
+    is_, fs = rechunk(i_pre), rechunk(f_pre)
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_body(carry, t):
+        C, n, m = carry                     # stabilised state (÷ exp(m))
+        qc, kc, vc, ic, fc = t              # (B,c,H,dh) / (B,c,H)
+        lf = jax.nn.log_sigmoid(fc)
+        Lf = jnp.cumsum(lf, axis=1)                        # inclusive (B,c,H)
+        a_inter = m[:, None] + Lf                          # (B,c,H)
+        # intra-chunk decay: D[t,s] = Lf_t − Lf_s + i_s  (s ≤ t)
+        D = Lf[:, :, None] - Lf[:, None, :] + ic[:, None, :]   # (B,c,c,H)
+        D = jnp.where(causal[None, :, :, None], D, -jnp.inf)
+        m_t = jnp.maximum(a_inter, jnp.max(D, axis=2))     # (B,c,H)
+        # inter-chunk path
+        scale_in = jnp.exp(a_inter - m_t)                  # (B,c,H)
+        num_in = jnp.einsum("bhvk,bthk->bthv", C, qc) * scale_in[..., None]
+        den_in = jnp.einsum("bhk,bthk->bth", n, qc) * scale_in
+        # intra-chunk path
+        w = jnp.exp(D - m_t[:, :, None, :])                # (B,c,c,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        wqk = w * qk
+        num = num_in + jnp.einsum("btsh,bshd->bthd", wqk, vc)
+        den = den_in + jnp.sum(wqk, axis=2)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # end-of-chunk state update (stabilised against m_new)
+        LfT = Lf[:, -1]                                    # (B,H)
+        m_new = jnp.maximum(m + LfT, jnp.max(
+            LfT[:, None] - Lf + ic, axis=1))
+        wS = jnp.exp(LfT[:, None] - Lf + ic - m_new[:, None])  # (B,c,H)
+        C_new = jnp.exp(m + LfT - m_new)[:, :, None, None] * C \
+            + jnp.einsum("bsh,bshv,bshk->bhvk", wS, vc, kc)
+        n_new = jnp.exp(m + LfT - m_new)[..., None] * n \
+            + jnp.einsum("bsh,bshk->bhk", wS, kc)
+        C_new = constrain(C_new, BATCH, None, None, None)
+        n_new = constrain(n_new, BATCH, None, None)
+        m_new = constrain(m_new, BATCH, None)
+        return (C_new, n_new, m_new), constrain(y, BATCH, None, None, None)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    init = (constrain(jnp.zeros((b, h, dh, dh), jnp.float32),
+                      BATCH, None, None, None),
+            constrain(jnp.zeros((b, h, dh), jnp.float32), BATCH, None, None),
+            constrain(jnp.zeros((b, h), jnp.float32), BATCH, None))
+    (C, n, m), ys = jax.lax.scan(chunk_body, init, (qs, ks, vs, is_, fs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, dp)
+    y = rms_norm(y.astype(x.dtype), params["skip_norm"], cfg.norm_eps)
+    out = jnp.dot((y.astype(jnp.float32)
+                   * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype),
+                  params["w_down"])
+    cache = {"C": C, "n": n, "m": m} if want_cache else None
+    return out.astype(x.dtype), cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    h = cfg.num_heads
+    dp = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    dh = dp // h
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_decode(params, x, cfg: ModelConfig, cache, *, positions=None):
+    xc = cfg.xlstm
+    b = x.shape[0]
+    h = cfg.num_heads
+    d = cfg.d_model
+    dp = int(xc.mlstm_proj_factor * d)
+    dh = dp // h
+    u = jnp.dot(x[:, 0], params["w_up"])
+    gate = jnp.dot(x[:, 0], params["w_gate"])
+    q = jnp.dot(u, params["wq"]).reshape(b, h, dh).astype(jnp.float32)
+    k = (jnp.dot(u, params["wk"]).reshape(b, h, dh)
+         / math.sqrt(dh)).astype(jnp.float32)
+    v = jnp.dot(u, params["wv"]).reshape(b, h, dh).astype(jnp.float32)
+    i_pre, f_pre = _mlstm_gates(params, u, h)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(logf + cache["m"] - m_new)
+    C = f_sc[..., None, None] * cache["C"] + i_sc[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f_sc[..., None] * cache["n"] + i_sc[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, dp)
+    y = rms_norm(y.astype(x.dtype), params["skip_norm"], cfg.norm_eps)
+    out = jnp.dot((y.astype(jnp.float32)
+                   * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype),
+                  params["w_down"])
+    return out[:, None].astype(x.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    xc = cfg.xlstm
+    df = int(xc.slstm_proj_factor * d)
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_zifo": init_dense(ks[0], d, 4 * d, dt),
+        "r_zifo": init_dense(ks[1], d, 4 * d, dt, scale=0.5),
+        "b_zifo": jnp.zeros((4 * d,), dt),
+        "ffn_up": init_dense(ks[2], d, 2 * df, dt),
+        "ffn_down": init_dense(ks[3], df, d, dt),
+    }
+
+
+def _slstm_step(params, x_t, carry):
+    """x_t (B, D) f32; carry (c, n, h, m) each (B, D) f32."""
+    c, n, h, m = carry
+    d = x_t.shape[-1]
+    pre = (jnp.dot(x_t, params["w_zifo"].astype(jnp.float32))
+           + jnp.dot(h, params["r_zifo"].astype(jnp.float32))
+           + params["b_zifo"].astype(jnp.float32))
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    logf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(logf + m, i_p)
+    i_sc = jnp.exp(i_p - m_new)
+    f_sc = jnp.exp(logf + m - m_new)
+    c_new = constrain(f_sc * c + i_sc * z, BATCH, MODEL)
+    n_new = constrain(f_sc * n + i_sc, BATCH, MODEL)
+    h_new = constrain(o * c_new / jnp.maximum(n_new, 1.0), BATCH, MODEL)
+    m_new = constrain(m_new, BATCH, MODEL)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_full(params, x, cfg: ModelConfig, *, want_cache: bool = False):
+    """sLSTM has a true hidden-to-hidden recurrence (no parallel form, per
+    the xLSTM paper) — trained with the chunked-remat scan (√S memory)."""
+    b, s, d = x.shape
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    carry, ys = chunked_scan(
+        lambda cr, xt: _slstm_step(params, xt, cr),
+        init, x.astype(jnp.float32).transpose(1, 0, 2),
+        chunk=SCAN_CHUNK, length=s)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    # post gated FFN (×4/3)
+    df2 = params["ffn_up"].shape[1]
+    up = jnp.dot(y, params["ffn_up"]).astype(jnp.float32)
+    g, u = up[..., : df2 // 2], up[..., df2 // 2:]
+    out = jnp.dot((jax.nn.silu(g) * u).astype(x.dtype), params["ffn_down"])
+    cache = None
+    if want_cache:
+        cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return out.astype(x.dtype), cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in "cnhm"}
+
+
+def slstm_decode(params, x, cfg: ModelConfig, cache, *, positions=None):
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, y = _slstm_step(params, x[:, 0].astype(jnp.float32), carry)
+    y = y[:, None].astype(x.dtype)
+    df2 = params["ffn_up"].shape[1]
+    up = jnp.dot(y, params["ffn_up"]).astype(jnp.float32)
+    g, u = up[..., : df2 // 2], up[..., df2 // 2:]
+    out = jnp.dot((jax.nn.silu(g) * u).astype(x.dtype), params["ffn_down"])
+    return out.astype(x.dtype), \
+        {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

@@ -1,0 +1,10 @@
+"""Optimizers and distributed-optimization tricks."""
+
+from .adamw import AdamWConfig, global_norm, init, update, warmup_cosine  # noqa: F401
+from .compress import (  # noqa: F401
+    compress_leaf,
+    compressed_psum,
+    dequantize,
+    init_residuals,
+    quantize,
+)

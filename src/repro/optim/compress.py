@@ -1,0 +1,74 @@
+"""Int8 gradient compression with error feedback — distributed-optimization
+trick for the cross-pod gradient all-reduce.
+
+The ``pod`` axis crosses data-center-interconnect-class links, so the
+once-per-step gradient all-reduce there is the natural compression target:
+grads are quantised to int8 with a per-leaf absmax scale, summed over the
+axis, and dequantised; the quantisation error is fed back into the next
+step's gradients (error-feedback keeps SGD/Adam convergence — tested on a
+small model in tests/test_distributed.py).
+
+Used via ``shard_map`` (``compressed_psum``) where explicit collective
+control exists; the jit-SPMD training path keeps XLA's fused all-reduce by
+default and enables this only when ``--compress-grads`` is set.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (quantised, scale, new_residual) with error feedback."""
+    gf = g.astype(jnp.float32) + residual
+    q, scale = quantize(gf)
+    new_res = gf - dequantize(q, scale)
+    return q, scale, new_res
+
+
+def init_residuals(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads: Any, residuals: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """All-reduce-mean ``grads`` over ``axis_name`` in int8 (+error feedback).
+
+    Must run inside ``shard_map``/``pmap`` where ``axis_name`` is bound.
+    int8 summands are widened to int32 for the reduction (n ≤ 2^23 devices
+    before overflow at |q| ≤ 127) and rescaled by the max scale across the
+    axis so all peers dequantise identically.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        q, scale, new_r = compress_leaf(g, r)
+        scale_max = jax.lax.pmax(scale, axis_name)
+        # requantise against the shared scale so the sum is well-defined
+        q_shared = jnp.clip(
+            jnp.round(dequantize(q, scale) / scale_max), -127, 127
+        ).astype(jnp.int32)
+        total = jax.lax.psum(q_shared, axis_name)
+        mean = total.astype(jnp.float32) * scale_max / n
+        return mean.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,289 @@
+"""Sharding policy: DP / FSDP / TP / EP / SP rules as PartitionSpec trees.
+
+Axes
+----
+``data``  — batch (DP) and the FSDP shard axis for parameters/optimizer state
+``model`` — tensor parallelism (attention heads, FFN hidden, MoE experts=EP,
+            long-context cache sequence=SP)
+``pod``   — outer data-parallel axis on the multi-pod mesh (gradient
+            all-reduce crosses the pod axis once per step)
+
+Parameters get explicit per-leaf rules (FSDP+TP hybrid, ZeRO-3 style: every
+weight is sharded on both an FSDP dim and, where it exists, a TP dim; XLA
+inserts the per-layer all-gathers).  Optimizer moments mirror their
+parameter's spec.  Caches/activations use a shape-driven heuristic
+(divisibility-checked), which also covers the B=1 long-context cells by
+falling back to sequence sharding (SP) when batch cannot split.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+# --- parameter rules -------------------------------------------------------
+# map: leaf name -> (spec pattern per dim); DP marks the FSDP axis group,
+# "model" the TP axis.  1-D leaves (norms, biases) follow their own rules.
+
+_DP = "__dp__"
+
+_PARAM_RULES = {
+    # embeddings / head
+    "embed": ("model", _DP),
+    "lm_head": (_DP, "model"),
+    "frontend_proj": (_DP, "model"),
+    # attention
+    "wq": (_DP, "model"),
+    "wk": (_DP, None),     # GQA: kv heads replicated across TP shards
+    "wv": (_DP, None),
+    "wo": ("model", _DP),
+    # MLA
+    "wdq": (_DP, None),
+    "wuq": (None, "model"),
+    "wdkv": (_DP, None),
+    "wkr": (_DP, None),
+    "wuk": (None, "model"),
+    "wuv": (None, "model"),
+    # mlp
+    "w_gate": (_DP, "model"),
+    "w_up": (_DP, "model"),
+    "w_down": ("model", _DP),
+    "ffn_up": (_DP, "model"),
+    "ffn_down": ("model", _DP),
+    # router
+    "router": (None, None),
+    # mamba
+    "w_in": (_DP, "model"),
+    "conv_w": (None, "model"),
+    "w_xproj": ("model", None),
+    "w_dt": (None, "model"),
+    "a_log": ("model", None),
+    "w_out": ("model", _DP),
+    # xlstm
+    "w_ifo": ("model", None),
+    "w_zifo": (_DP, "model"),
+    "r_zifo": (_DP, "model"),
+}
+
+_EXPERT_RULES = {  # leaves under an "experts" subtree: dim0 = expert (EP)
+    "w_gate": ("model", _DP, None),
+    "w_up": ("model", _DP, None),
+    "w_down": ("model", None, _DP),
+}
+
+_VEC_RULES = {  # 1-D leaves
+    "conv_b": ("model",),
+    "dt_bias": ("model",),
+    "d_skip": ("model",),
+    "b_zifo": ("model",),
+}
+
+
+def _fits(shape, spec, mesh: Mesh, dp) -> bool:
+    for size, axis in zip(shape, spec):
+        if axis is None:
+            continue
+        n = int(np.prod([mesh.shape[a] for a in axis])) if isinstance(
+            axis, tuple) else mesh.shape[axis]
+        if size % n:
+            return False
+    return True
+
+
+def _resolve(pattern, mesh: Mesh, shape) -> P:
+    dp = dp_axes(mesh)
+    spec = tuple(dp if x == _DP else x for x in pattern)
+    # drop axes that don't divide the dim (e.g. tiny models on big meshes)
+    out = []
+    for size, axis in zip(shape, spec):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        keep: list = []
+        for a in axes:
+            n = mesh.shape[a]
+            if size % n == 0 and size // n >= 1 and (size // int(
+                    np.prod([mesh.shape[k] for k in keep + [a]]))) >= 1 \
+                    and size % int(
+                    np.prod([mesh.shape[k] for k in keep + [a]])) == 0:
+                keep.append(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def param_spec_tree(shapes: Any, cfg: ModelConfig, mesh: Mesh, *,
+                    inference: bool = False):
+    """PartitionSpec tree matching an ``eval_shape`` of ``init_params``.
+
+    ``inference=True`` stores MoE expert weights sharded over
+    ('model', 'data') jointly on the expert dim (weights-stationary 2-D EP
+    for decode) when E divides the combined size.
+    """
+
+    expert_rules = _EXPERT_RULES
+    if inference and cfg.moe is not None:
+        combined = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                                if a in ("model", "data")]))
+        if cfg.moe.num_experts % combined == 0:
+            # 2-D EP: experts spread over (model × data) jointly
+            ep2d = tuple(a for a in ("model", "data")
+                         if a in mesh.axis_names)
+            expert_rules = {
+                "w_gate": (ep2d, None, None),
+                "w_up": (ep2d, None, None),
+                "w_down": (ep2d, None, None),
+            }
+        elif "data" in mesh.axis_names:
+            # D-stationary small-E decode: experts over model, hidden over
+            # data — matches _moe_apply_ep_dstat's in_specs exactly
+            expert_rules = {
+                "w_gate": ("model", "data", None),
+                "w_up": ("model", "data", None),
+                "w_down": ("model", "data", None),
+            }
+
+    def _inference_2d(core_shape) -> Optional[P]:
+        """Weights-stationary decode sharding: shard a feature dim over
+        ('model','data') jointly — weights never move at decode (activations
+        are tiny; per-token FSDP gathers were 50 GB/token on llama3).
+        Prefers the output dim (no psum); falls back to the input dim
+        (XLA inserts a cheap psum of the tiny activations); else replicates.
+        """
+        axes = tuple(a for a in ("model", "data") if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if len(core_shape) != 2 or size <= 1:
+            return None
+        d_in, d_out = core_shape
+        if d_out % size == 0:
+            return P(None, axes)
+        if d_in % size == 0:
+            return P(axes, None)
+        if d_out % mesh.shape["model"] == 0 if "model" in mesh.axis_names                 else False:
+            return P(None, "model")
+        return P(None, None)
+
+    def rule(path, leaf) -> P:
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        in_group = names and names[0] == "groups"
+        in_experts = "experts" in names
+        shape = leaf.shape
+        core_shape = shape[1:] if in_group else shape  # strip repeats axis
+        if in_experts and name in expert_rules:
+            pat = expert_rules[name]
+            spec = _resolve(pat, mesh, core_shape)
+        elif inference and len(core_shape) == 2:
+            spec = _inference_2d(core_shape)
+            if spec is None:
+                spec = _resolve((None,) * len(core_shape), mesh, core_shape)
+        elif len(core_shape) == 1:
+            spec = _resolve(_VEC_RULES.get(name, (None,)), mesh, core_shape)
+        elif name in _PARAM_RULES:
+            spec = _resolve(_PARAM_RULES[name], mesh, core_shape)
+        else:
+            spec = _resolve((None,) * len(core_shape), mesh, core_shape)
+        if in_group:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+# --- activation / cache / batch heuristics ---------------------------------
+
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> P:
+    """Leading-dim spec for per-example inputs (tokens/labels/embeds)."""
+    dp = dp_axes(mesh)
+    keep = []
+    rem = global_batch
+    for a in dp:
+        if rem % mesh.shape[a] == 0:
+            keep.append(a)
+            rem //= mesh.shape[a]
+    return P(tuple(keep) if keep else None)
+
+
+def heuristic_spec(shape: Sequence[int], mesh: Mesh, *, batch_dim: int = 0,
+                   seq_dim: Optional[int] = None) -> P:
+    """Greedy: shard batch over dp; then the sequence (or largest) dim over
+    'model'; leave the rest replicated.  Used for KV caches and decode state.
+    """
+    dp = dp_axes(mesh)
+    spec: list = [None] * len(shape)
+    rem = shape[batch_dim]
+    keep = []
+    for a in dp:
+        if rem % mesh.shape[a] == 0 and rem // mesh.shape[a] >= 1:
+            keep.append(a)
+            rem //= mesh.shape[a]
+    if keep:
+        spec[batch_dim] = tuple(keep) if len(keep) > 1 else keep[0]
+    unused = [a for a in dp if a not in keep] + ["model"]
+    # choose the dim to shard over remaining axes: prefer seq_dim, else max
+    cand = seq_dim
+    if cand is None or spec[cand] is not None or shape[cand] < 2:
+        sizes = [(s, i) for i, s in enumerate(shape)
+                 if spec[i] is None and i != batch_dim]
+        cand = max(sizes)[1] if sizes else None
+    if cand is not None:
+        keep2 = []
+        rem2 = shape[cand]
+        for a in unused:
+            if a in mesh.shape and rem2 % mesh.shape[a] == 0 \
+                    and rem2 // mesh.shape[a] >= 1:
+                keep2.append(a)
+                rem2 //= mesh.shape[a]
+        if keep2:
+            spec[cand] = tuple(keep2) if len(keep2) > 1 else keep2[0]
+    return P(*spec)
+
+
+def cache_spec_tree(cache_shapes: Any, cfg: ModelConfig, mesh: Mesh):
+    """Specs for decode caches: batch over dp, sequence over model (SP)."""
+
+    def rule(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        # group caches carry a leading repeats axis
+        core = shape[1:]
+        seq_dim = None
+        if name in ("k", "v"):
+            seq_dim = 1  # (B, S, KV, dh)
+        elif name == "lat":
+            seq_dim = 1  # (B, S, latent)
+        spec = heuristic_spec(core, mesh, batch_dim=0, seq_dim=seq_dim)
+        return P(None, *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,71 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store plain host arrays (checkpoint/manager.py), so elastic
+restart is: build the new mesh → derive the sharding-policy specs for the
+*same* config on the *new* mesh → ``restore(..., shardings=...)``.  Batch
+size / microbatching are re-derived so the global batch is preserved when
+the data-parallel size changes (gradient-equivalent rescale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    microbatches: int          # re-derived grad-accumulation factor
+    note: str
+
+
+def plan_rescale(cfg: ModelConfig, global_batch: int, old_mesh: Mesh,
+                 new_mesh: Mesh) -> ElasticPlan:
+    old_dp = shd.dp_size(old_mesh)
+    new_dp = shd.dp_size(new_mesh)
+    # keep global batch: if dp shrank k×, accumulate k× more microbatches
+    micro = max(1, cfg.microbatches * max(1, old_dp // max(new_dp, 1)))
+    while global_batch % micro or (global_batch // micro) % max(new_dp, 1):
+        micro -= 1
+        if micro == 0:
+            micro = 1
+            break
+    return ElasticPlan(
+        old_devices=old_mesh.size, new_devices=new_mesh.size,
+        microbatches=micro,
+        note=(f"dp {old_dp}→{new_dp}; grad-accum ×{micro} preserves "
+              f"global batch {global_batch}"))
+
+
+def restore_on_mesh(ckpt: CheckpointManager, step: int, template: Any,
+                    cfg: ModelConfig, mesh: Mesh,
+                    params_key: str = "params") -> Any:
+    """Restore ``{params, opt, ...}`` state resharded for ``mesh``."""
+    pspecs = shd.param_spec_tree(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     template[params_key]), cfg, mesh)
+    shardings = {
+        params_key: shd.named(mesh, pspecs),
+        "opt": {
+            "m": shd.named(mesh, pspecs),
+            "v": shd.named(mesh, pspecs),
+            "count": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+        },
+    }
+    # leave any extra top-level entries replicated
+    for k in template:
+        if k not in shardings:
+            shardings[k] = jax.tree.map(
+                lambda _: jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()), template[k])
+    return ckpt.restore(step, template, shardings=shardings)

@@ -1,0 +1,10 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in
+# a separate process).  Distributed tests spawn subprocesses with their own
+# flags — see tests/test_distributed.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

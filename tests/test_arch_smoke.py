@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, output shapes + finiteness (brief requirement f)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.data import pipeline
+from repro.launch import steps
+from repro.models import decode_step, forward, init_caches, init_params
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+class TestSmoke:
+    def test_train_step(self, arch):
+        cfg = configs.get_smoke(arch)
+        dcfg = pipeline.DataConfig(global_batch=2, seq_len=32)
+        batch = pipeline.make_batch(cfg, dcfg, step=0)
+        opt_cfg = adamw.AdamWConfig(learning_rate=1e-3)
+        state = steps.init_train_step_state = steps.init_train_state(
+            KEY, cfg, opt_cfg)
+        train = steps.make_train_step(cfg, opt_cfg, microbatches=1)
+        params, opt, metrics = train(state["params"], state["opt"], batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), (arch, loss)
+        assert np.isfinite(float(metrics["grad_norm"]))
+        # params actually changed
+        delta = sum(
+            float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(params),
+                            jax.tree.leaves(state["params"])))
+        assert delta > 0
+
+    def test_forward_shapes(self, arch):
+        cfg = configs.get_smoke(arch)
+        dcfg = pipeline.DataConfig(global_batch=2, seq_len=16)
+        batch = pipeline.make_batch(cfg, dcfg, step=1)
+        logits, _, _ = forward(params=init_params(KEY, cfg), cfg=cfg,
+                               tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"))
+        b = 2
+        s = 16 + (cfg.frontend_len if cfg.frontend == "vision" else 0)
+        if cfg.frontend == "audio":
+            s = 16
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_decode_if_causal(self, arch):
+        cfg = configs.get_smoke(arch)
+        if not cfg.has_decode:
+            pytest.skip("encoder-only: no decode step (documented skip)")
+        params = init_params(KEY, cfg)
+        caches = init_caches(cfg, 2, 32, jnp.dtype(cfg.compute_dtype))
+        toks = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+        logits, caches = decode_step(params, cfg, toks, caches,
+                                     jnp.zeros((2,), jnp.int32))
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+
+class TestShapeCells:
+    def test_cell_accounting(self):
+        """40 cells total: 33 runnable + 7 documented skips (DESIGN §4)."""
+        runnable, skipped = 0, 0
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get(arch)
+            for cell, reason in shp.cells_for(cfg):
+                if reason is None:
+                    runnable += 1
+                else:
+                    skipped += 1
+        assert runnable + skipped == 40
+        assert runnable == 33
+        assert skipped == 7
+
+    def test_skip_reasons(self):
+        hubert = configs.get("hubert_xlarge")
+        assert shp.skip_reason(hubert, shp.get_shape("decode_32k"))
+        assert shp.skip_reason(hubert, shp.get_shape("long_500k"))
+        yi = configs.get("yi_6b")
+        assert shp.skip_reason(yi, shp.get_shape("long_500k"))
+        assert shp.skip_reason(yi, shp.get_shape("train_4k")) is None
+        # sub-quadratic archs run long_500k
+        for a in ("xlstm_125m", "jamba_v01_52b", "h2o_danube_18b",
+                  "deepseek_v3_671b"):
+            assert shp.skip_reason(configs.get(a),
+                                   shp.get_shape("long_500k")) is None
+
+    def test_param_counts_match_published(self):
+        expected = {
+            "yi_6b": 6.1e9, "llama3_405b": 405.9e9,
+            "deepseek_v3_671b": 671e9, "dbrx_132b": 131.6e9,
+            "jamba_v01_52b": 51.6e9, "qwen3_14b": 14.8e9,
+            "h2o_danube_18b": 1.83e9, "hubert_xlarge": 0.95e9,
+        }
+        for arch, want in expected.items():
+            got = configs.get(arch).param_count()
+            assert abs(got - want) / want < 0.02, (arch, got, want)
+
+    def test_active_params(self):
+        # DeepSeek-V3: 37B active of 671B; Jamba: 12B active of 52B
+        ds = configs.get("deepseek_v3_671b")
+        assert abs(ds.active_param_count() - 37.5e9) / 37.5e9 < 0.05
+        jb = configs.get("jamba_v01_52b")
+        assert abs(jb.active_param_count() - 12.1e9) / 12.1e9 < 0.05

@@ -1,0 +1,99 @@
+"""Tests for the §3.2 SSR-ification compiler pass."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Direction, LoopNest, MemRef, dot_product_nest,
+                        gemm_nest, isa, ssrify)
+
+
+class TestDotProduct:
+    def test_fig4_plan(self):
+        plan = ssrify(dot_product_nest(1000))
+        assert plan.ssrified
+        assert len(plan.allocations) == 2          # two data movers
+        assert plan.n_ssr == 1012                  # Fig. 4 exact
+        assert plan.n_base == 3001
+        assert plan.speedup == pytest.approx(3001 / 1012)
+
+    def test_short_loop_not_ssrified(self):
+        # Eq. (3): 1-D needs more than 5 iterations
+        assert not ssrify(dot_product_nest(5)).ssrified
+        assert ssrify(dot_product_nest(6)).ssrified
+
+    def test_force_overrides(self):
+        plan = ssrify(dot_product_nest(2), force=True)
+        assert plan.ssrified
+
+
+class TestAllocation:
+    def test_deepest_first(self):
+        """With one lane, the deepest access wins (§3.2 step 3)."""
+        nest = LoopNest(
+            bounds=(8, 8),
+            refs=(
+                MemRef("outer", Direction.READ, (1, 0)),   # varies with i only
+                MemRef("inner", Direction.READ, (8, 1)),   # varies with i,j
+            ),
+            compute_per_level=(0, 1),
+        )
+        plan = ssrify(nest, num_lanes=1)
+        assert plan.ssrified
+        assert plan.allocations[0].ref.name == "inner"
+        assert any(r.name == "outer" for r in plan.residual)
+
+    def test_non_affine_stays_explicit(self):
+        nest = LoopNest(
+            bounds=(64,),
+            refs=(
+                MemRef("a", Direction.READ, (1,)),
+                MemRef("idx", Direction.READ, None),   # data-dependent
+            ),
+            compute_per_level=(1,),
+        )
+        plan = ssrify(nest)
+        assert plan.ssrified
+        names = [a.ref.name for a in plan.allocations]
+        assert "idx" not in names
+        assert any(r.name == "idx" for r in plan.residual)
+
+    def test_nest_depth_limit(self):
+        with pytest.raises(ValueError, match="AGU dims"):
+            LoopNest(bounds=(2, 2, 2, 2, 2), refs=(),
+                     compute_per_level=(0,) * 5)
+
+
+class TestRepeatRegister:
+    def test_trailing_zero_coeff_becomes_repeat(self):
+        """A read reused across the innermost loop maps to `repeat` (§3.1)."""
+        nest = LoopNest(
+            bounds=(4, 8),
+            refs=(MemRef("x", Direction.READ, (1, 0)),),  # constant in j
+            compute_per_level=(0, 1),
+        )
+        plan = ssrify(nest, force=True)
+        spec = plan.allocations[0].spec
+        assert spec.repeat == 8
+        assert spec.bounds == (4,)
+
+    def test_gemm_streams(self):
+        plan = ssrify(gemm_nest(32, 32, 32))
+        assert plan.ssrified
+        by_name = {a.ref.name: a.spec for a in plan.allocations}
+        # A walks (m, k) and re-reads across n (stride-0 middle dim)
+        assert by_name["A"].strides == (32, 0, 1)
+        # B walks (n, k) independent of m
+        assert by_name["B"].strides == (0, 1, 32)
+
+
+class TestCostConsistency:
+    @given(
+        n=st.integers(1, 4096),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_plan_matches_isa_model(self, n):
+        plan = ssrify(dot_product_nest(n))
+        if plan.ssrified:
+            assert plan.n_ssr == isa.n_ssr([n], [1], 2)
+            assert plan.n_ssr <= plan.n_base
+        assert plan.n_base == isa.n_base([n], [1], 2)

@@ -1,0 +1,215 @@
+"""Distributed behaviour on fake devices (subprocess: 8 host CPU devices).
+
+These spawn fresh interpreters with ``--xla_force_host_platform_device_count``
+so the main pytest process keeps its single device (dry-run contract).
+Covered: sharded-vs-single-device train parity, compressed all-reduce,
+elastic checkpoint resharding, sharding-policy divisibility.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+class TestShardedTraining:
+    def test_sharded_step_matches_single_device(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.models import ModelConfig
+            from repro.models.config import ScanGroup
+            from repro.launch import steps as SL
+            from repro.launch.mesh import make_host_mesh
+            from repro.parallel import sharding as shd
+            from repro.parallel.activations import activation_mesh
+            from repro.data import pipeline
+            from repro.optim import adamw
+
+            cfg = ModelConfig(name="t", family="dense", d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                groups=(ScanGroup((("attn","mlp"),), 2),), remat=False)
+            opt = adamw.AdamWConfig(learning_rate=1e-3)
+            dcfg = pipeline.DataConfig(global_batch=8, seq_len=32)
+            batch = pipeline.make_batch(cfg, dcfg, 0)
+            state = SL.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+            train = SL.make_train_step(cfg, opt, microbatches=2)
+
+            # single device reference
+            p1, o1, m1 = jax.jit(train)(state["params"], state["opt"], batch)
+
+            mesh = make_host_mesh(data=4, model=2)
+            pspec = shd.param_spec_tree(
+                jax.eval_shape(lambda: state["params"]), cfg, mesh)
+            ospec = {"m": pspec, "v": pspec, "count": P()}
+            bspec = {k: P("data") for k in batch}
+            with mesh:
+                with activation_mesh(mesh):
+                    fn = jax.jit(train,
+                        in_shardings=(shd.named(mesh, pspec),
+                                      shd.named(mesh, ospec),
+                                      shd.named(mesh, bspec)),
+                        out_shardings=(shd.named(mesh, pspec),
+                                       shd.named(mesh, ospec), None))
+                    p8, o8, m8 = fn(state["params"], state["opt"], batch)
+            assert abs(float(m1["loss"]) - float(m8["loss"])) < 2e-4, (
+                float(m1["loss"]), float(m8["loss"]))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=3e-5, rtol=3e-4)
+            print("PARITY OK", float(m1["loss"]))
+        """)
+
+
+class TestCompressedAllReduce:
+    def test_compressed_psum_close_to_exact(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.launch.mesh import make_host_mesh
+            from repro.optim import compress
+
+            mesh = make_host_mesh(data=8, model=1)
+            g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+
+            def body(gs, rs):
+                mean, new_r = compress.compressed_psum(
+                    {"g": gs[0]}, {"g": rs[0]}, "data")
+                return mean["g"][None], new_r["g"][None]
+
+            f = shard_map(body, mesh=mesh,
+                          in_specs=(P("data", None), P("data", None)),
+                          out_specs=(P("data", None), P("data", None)))
+            mean, resid = f(g, jnp.zeros_like(g))
+            exact = jnp.mean(g, axis=0)
+            got = np.asarray(mean[0])
+            err = np.abs(got - np.asarray(exact)).max()
+            scale = float(jnp.abs(g).max()) / 127.0
+            assert err <= 2 * scale, (err, scale)
+            # error feedback: residual holds the quantisation error
+            assert float(jnp.abs(resid).max()) <= scale + 1e-6
+            print("COMPRESS OK", err)
+        """)
+
+
+class TestElastic:
+    def test_reshard_across_meshes(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp, tempfile
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.checkpoint.manager import CheckpointManager
+            from repro.runtime.elastic import plan_rescale, restore_on_mesh
+            from repro.models import ModelConfig
+            from repro.models.config import ScanGroup
+            from repro.launch import steps as SL
+            from repro.launch.mesh import make_host_mesh
+            from repro.optim import adamw
+            import numpy as onp
+
+            cfg = ModelConfig(name="t", family="dense", d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                groups=(ScanGroup((("attn","mlp"),), 2),), remat=False,
+                microbatches=2)
+            opt = adamw.AdamWConfig()
+            state = SL.init_train_state(jax.random.PRNGKey(1), cfg, opt)
+            d = tempfile.mkdtemp()
+            mgr = CheckpointManager(d)
+            mgr.save(5, state)
+
+            devs = onp.array(jax.devices())
+            big = make_host_mesh(data=4, model=2)
+            small = Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+            plan = plan_rescale(cfg, 8, big, small)
+            assert plan.microbatches >= cfg.microbatches, plan
+            restored = restore_on_mesh(mgr, 5, state, cfg, small)
+            # values preserved exactly, now placed on the 4-device mesh
+            for a, b in zip(jax.tree.leaves(state["params"]),
+                            jax.tree.leaves(restored["params"])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            leaf = jax.tree.leaves(restored["params"])[0]
+            assert len(leaf.sharding.device_set) <= 4
+            print("ELASTIC OK", plan.note)
+        """)
+
+
+class TestShardingPolicy:
+    def test_param_specs_divide_shapes(self):
+        run_sub("""
+            import jax
+            from jax.sharding import PartitionSpec as P
+            from repro import configs
+            from repro.launch.mesh import make_host_mesh
+            from repro.models import init_params
+            from repro.parallel import sharding as shd
+            import numpy as np
+
+            mesh = make_host_mesh(data=2, model=4)
+            for arch in ("yi_6b", "deepseek_v3_671b", "jamba_v01_52b"):
+                cfg = configs.get(arch)
+                shapes = jax.eval_shape(
+                    lambda c=cfg: init_params(jax.random.PRNGKey(0), c))
+                specs = shd.param_spec_tree(shapes, cfg, mesh)
+                flat_s = jax.tree.leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P))
+                flat_x = jax.tree.leaves(shapes)
+                assert len(flat_s) == len(flat_x)
+                sharded = 0
+                for spec, leaf in zip(flat_s, flat_x):
+                    for dim, ax in zip(leaf.shape, tuple(spec)):
+                        if ax is None:
+                            continue
+                        axes = ax if isinstance(ax, tuple) else (ax,)
+                        n = int(np.prod([mesh.shape[a] for a in axes]))
+                        assert dim % n == 0, (arch, leaf.shape, spec)
+                        sharded += 1
+                assert sharded > 10, arch  # policy actually shards things
+            print("SPECS OK")
+        """)
+
+
+class TestRingMatmul:
+    def test_ring_matches_plain(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp
+            from repro.launch.mesh import make_host_mesh
+            from repro.parallel.collectives import (reduce_scatter_matmul,
+                                                    ring_matmul)
+
+            mesh = make_host_mesh(data=4, model=2)
+            key = jax.random.PRNGKey(0)
+            x = jax.random.normal(key, (16, 64), jnp.float32)
+            w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32),
+                                  jnp.float32)
+            want = np.asarray(x @ w)
+            got = np.asarray(jax.jit(
+                lambda x, w: ring_matmul(x, w, mesh, axis="data",
+                                         batch_axes=None))(x, w))
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+            got2 = np.asarray(jax.jit(
+                lambda x, w: reduce_scatter_matmul(
+                    x, w, mesh, axis="model"))(x, w))
+            np.testing.assert_allclose(got2, want, rtol=2e-5, atol=2e-5)
+            # grads flow through the ring
+            g = jax.jit(jax.grad(lambda w: ring_matmul(
+                x, w, mesh, axis="data").sum()))(w)
+            assert bool(jnp.isfinite(g).all())
+            print("RING OK")
+        """)

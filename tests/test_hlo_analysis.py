@@ -1,0 +1,95 @@
+"""HLO walker correctness: trip counts, dot FLOPs, collective traffic."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis as H
+
+
+def lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestShapes:
+    def test_shape_bytes(self):
+        b, e = H._shape_bytes_elems("bf16[128,256]{1,0}")
+        assert e == 128 * 256
+        assert b == 128 * 256 * 2
+
+    def test_tuple_types(self):
+        b, e = H._shape_bytes_elems("(f32[8,8]{1,0}, s32[4]{0})")
+        assert b == 8 * 8 * 4 + 4 * 4
+
+
+class TestTripCounts:
+    @pytest.mark.parametrize("r", [3, 7, 16])
+    def test_scan_flops_scale_with_trip_count(self, r):
+        def f(w, x):
+            def body(h, wi):
+                return jnp.tanh(h @ wi), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h.sum()
+
+        w = jnp.ones((r, 64, 64))
+        x = jnp.ones((8, 64))
+        an = H.analyze_hlo(lower_text(f, w, x), world=1)
+        want_dot = r * 2 * 8 * 64 * 64
+        assert an.dot_flops == pytest.approx(want_dot, rel=0.01), (
+            r, an.dot_flops, an.while_trips)
+        assert r in an.while_trips
+
+    def test_nested_scans_multiply(self):
+        def f(x):
+            def outer(c, _):
+                def inner(ci, _):
+                    return jnp.tanh(ci @ ci), None
+                ci, _ = jax.lax.scan(inner, c, None, length=5)
+                return ci, None
+            c, _ = jax.lax.scan(outer, x, None, length=4)
+            return c.sum()
+
+        x = jnp.ones((32, 32))
+        an = H.analyze_hlo(lower_text(f, x), world=1)
+        want = 4 * 5 * 2 * 32 * 32 * 32
+        assert an.dot_flops == pytest.approx(want, rel=0.01)
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        f = lambda a, b: a @ b
+        a = jnp.ones((64, 128))
+        b = jnp.ones((128, 256))
+        an = H.analyze_hlo(lower_text(f, a, b), world=1)
+        assert an.dot_flops == pytest.approx(2 * 64 * 128 * 256, rel=0.01)
+
+    def test_batched_einsum(self):
+        f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+        a = jnp.ones((4, 32, 64))
+        b = jnp.ones((4, 64, 16))
+        an = H.analyze_hlo(lower_text(f, a, b), world=1)
+        assert an.dot_flops == pytest.approx(2 * 4 * 32 * 64 * 16, rel=0.01)
+
+
+class TestCollectives:
+    def test_group_size_parse(self):
+        assert H._group_size("replica_groups=[2,4]<=[8]", 8) == 4
+        assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 8) == 4
+        assert H._group_size("no groups here", 8) == 8
+
+    def test_ring_factors(self):
+        # synthetic single-op module
+        hlo = """
+HloModule m
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  ROOT %ar = f32[64]{0} all-reduce(%p), replica_groups=[1,4]<=[4], to_apply=%add
+}
+"""
+        an = H.analyze_hlo(hlo, world=4)
+        # all-reduce ring traffic = 2·S·(n−1)/n
+        assert an.collective_bytes == pytest.approx(2 * 256 * 3 / 4)
+        assert an.collective_counts.get("all-reduce") == 1

@@ -1,0 +1,238 @@
+"""Per-kernel shape/dtype sweeps: streamed Pallas (interpret) vs jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BlockStream, Direction, ssr_pallas
+from repro.kernels import ops, ref
+from repro.kernels.gemm import baseline_matmul, ssr_matmul
+from repro.kernels.gemv import baseline_gemv
+from repro.kernels.reduction import baseline_dot
+from repro.kernels.relu import baseline_relu
+from repro.kernels.scan import baseline_scan
+from repro.kernels.stencil import baseline_stencil1d
+
+RNG = np.random.default_rng(42)
+
+
+def arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestReduction:
+    @pytest.mark.parametrize("n", [1024, 2048, 5000, 8192])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_ssr_dot(self, n, dtype):
+        x, y = arr(n, dtype), arr(n, dtype)
+        got = ops.dot(x, y, ssr=True)
+        want = ref.dot_ref(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-2 * np.sqrt(n) / 30)
+
+    def test_baseline_matches(self):
+        x, y = arr(2048), arr(2048)
+        np.testing.assert_allclose(baseline_dot(x, y), ref.dot_ref(x, y),
+                                   rtol=1e-4)
+
+
+class TestScan:
+    @pytest.mark.parametrize("n", [1024, 4096, 3000])
+    def test_ssr_scan(self, n):
+        x = arr(n)
+        np.testing.assert_allclose(ops.prefix_sum(x, ssr=True),
+                                   ref.scan_ref(x), rtol=1e-3, atol=1e-3)
+
+    def test_baseline(self):
+        x = arr(4096)
+        np.testing.assert_allclose(baseline_scan(x), ref.scan_ref(x),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestRelu:
+    @pytest.mark.parametrize("n", [1024, 1025, 4096])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_ssr_relu(self, n, dtype):
+        x = arr(n, dtype)
+        np.testing.assert_array_equal(np.asarray(ops.relu(x, ssr=True)),
+                                      np.asarray(ref.relu_ref(x)))
+
+    def test_baseline(self):
+        x = arr(1024)
+        np.testing.assert_array_equal(np.asarray(baseline_relu(x)),
+                                      np.asarray(ref.relu_ref(x)))
+
+
+class TestStencil:
+    @pytest.mark.parametrize("n", [1024, 512])
+    def test_1d(self, n):
+        x, w = arr(n + 10), arr(11, scale=0.3)
+        np.testing.assert_allclose(ops.stencil1d(x, w, ssr=True),
+                                   ref.stencil1d_ref(x, w),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_1d_baseline(self):
+        x, w = arr(1034), arr(11, scale=0.3)
+        np.testing.assert_allclose(baseline_stencil1d(x, w),
+                                   ref.stencil1d_ref(x, w),
+                                   rtol=1e-3, atol=1e-4)
+
+    @pytest.mark.parametrize("hw", [(74, 74), (42, 74)])
+    def test_2d(self, hw):
+        x = arr(hw)
+        wx, wy = arr(11, scale=0.3), arr(11, scale=0.3)
+        np.testing.assert_allclose(ops.stencil2d(x, wx, wy, ssr=True),
+                                   ref.stencil2d_ref(x, wx, wy),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestGemv:
+    @pytest.mark.parametrize("mn", [(64, 64), (128, 96), (60, 64)])
+    def test_ssr(self, mn):
+        a, x = arr(mn), arr(mn[1])
+        np.testing.assert_allclose(ops.gemv(a, x, ssr=True),
+                                   ref.gemv_ref(a, x), rtol=1e-3, atol=1e-3)
+
+    def test_baseline(self):
+        a, x = arr((64, 64)), arr(64)
+        np.testing.assert_allclose(baseline_gemv(a, x), ref.gemv_ref(a, x),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestGemm:
+    @pytest.mark.parametrize("mnk", [(32, 32, 32), (256, 512, 384),
+                                     (100, 130, 70)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_ssr_matmul(self, mnk, dtype):
+        m, n, k = mnk
+        a, b = arr((m, k), dtype), arr((k, n), dtype)
+        got = ssr_matmul(a, b, out_dtype=jnp.float32)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL[dtype])
+
+    def test_block_reuse_reporting(self):
+        """The A-panel repeat-register reuse shows up in the stream report."""
+        from repro.kernels.gemm import _dispatch
+        a, b = arr((256, 256)), arr((256, 512))
+        fn_out = ssr_matmul(a, b, bm=128, bn=128, bk=128)  # warm path
+        assert fn_out.shape == (256, 512)
+
+    def test_baseline(self):
+        a, b = arr((64, 128)), arr((128, 64))
+        np.testing.assert_allclose(np.asarray(baseline_matmul(a, b)),
+                                   np.asarray(ref.matmul_ref(a, b)),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestFFT:
+    @pytest.mark.parametrize("n", [256, 1024, 2048])
+    def test_ssr_fft(self, n):
+        re, im = arr(n), arr(n)
+        rr, ii = ops.fft(re, im, ssr=True)
+        r0, i0 = ref.fft_ref(re, im)
+        np.testing.assert_allclose(rr, r0, rtol=1e-3, atol=5e-2)
+        np.testing.assert_allclose(ii, i0, rtol=1e-3, atol=5e-2)
+
+    def test_non_power_of_two_rejected(self):
+        with pytest.raises(ValueError):
+            ops.fft(arr(100), arr(100), ssr=True)
+
+
+class TestBitonic:
+    @pytest.mark.parametrize("n", [64, 1024])
+    def test_sorts(self, n):
+        x = arr(n)
+        np.testing.assert_array_equal(np.asarray(ops.sort(x, ssr=True)),
+                                      np.sort(np.asarray(x)))
+
+    def test_permutation_preserved(self):
+        x = jnp.asarray(RNG.permutation(512).astype(np.float32))
+        out = np.asarray(ops.sort(x, ssr=True))
+        np.testing.assert_array_equal(out, np.arange(512, dtype=np.float32))
+
+
+class TestAttention:
+    @pytest.mark.parametrize("causal,window", [(False, None), (True, None),
+                                               (True, 64)])
+    @pytest.mark.parametrize("sq,sk", [(256, 256), (128, 256)])
+    def test_vs_oracle(self, causal, window, sq, sk):
+        q, k, v = arr((sq, 64)), arr((sk, 64)), arr((sk, 64))
+        got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  ssr=True)
+        want = ref.attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_vmap_heads(self):
+        q, k, v = arr((4, 128, 32)), arr((4, 128, 32)), arr((4, 128, 32))
+        got = jax.vmap(lambda a, b, c: ops.flash_attention(
+            a, b, c, causal=True, ssr=True))(q, k, v)
+        want = jax.vmap(lambda a, b, c: ref.attention_ref(
+            a, b, c, causal=True))(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestSSRPallasBuilder:
+    def test_non_affine_index_map_rejected(self):
+        def body(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        with pytest.raises(ValueError, match="not affine"):
+            ssr_pallas(
+                body, grid=(4,),
+                in_streams=[BlockStream((8, 128), lambda i: (i * i, 0))],
+                out_streams=[BlockStream((8, 128), lambda i: (i, 0),
+                                         Direction.WRITE)],
+                out_shapes=[jax.ShapeDtypeStruct((32, 128), jnp.float32)],
+            )
+
+    def test_direction_enforced(self):
+        def body(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        with pytest.raises(ValueError, match="read stream"):
+            ssr_pallas(
+                body, grid=(1,),
+                in_streams=[BlockStream((8, 128), lambda i: (0, 0),
+                                        Direction.WRITE)],
+                out_streams=[BlockStream((8, 128), lambda i: (0, 0),
+                                         Direction.WRITE)],
+                out_shapes=[jax.ShapeDtypeStruct((8, 128), jnp.float32)],
+            )
+
+    def test_stream_report_reuse(self):
+        """GEMM A-panel: streamed bytes ≫ unique bytes (repeat register)."""
+        def body(a_ref, o_ref):
+            o_ref[...] = a_ref[...]
+
+        fn = ssr_pallas(
+            body, grid=(2, 4),
+            in_streams=[BlockStream((8, 128), lambda i, j: (i, 0), name="A")],
+            out_streams=[BlockStream((8, 128), lambda i, j: (i, j),
+                                     Direction.WRITE, name="O")],
+            out_shapes=[jax.ShapeDtypeStruct((16, 512), jnp.float32)],
+        )
+        rep = fn.report(dtypes=[jnp.float32, jnp.float32])
+        # A is fetched once per (i) but streamed 4× (reused across j)
+        assert rep.reuse_factor > 1.5
+
+    def test_vmem_budget_enforced(self):
+        def body(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        fn = ssr_pallas(
+            body, grid=(1,),
+            in_streams=[BlockStream((8192, 4096), lambda i: (0, 0))],
+            out_streams=[BlockStream((8192, 4096), lambda i: (0, 0),
+                                     Direction.WRITE)],
+            out_shapes=[jax.ShapeDtypeStruct((8192, 4096), jnp.float32)],
+        )
+        with pytest.raises(ValueError, match="VMEM"):
+            fn.report(dtypes=[jnp.float32, jnp.float32])

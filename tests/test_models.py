@@ -1,0 +1,193 @@
+"""Model-stack behaviour: forward/grad finiteness, decode-vs-full parity,
+ssrcfg on/off equivalence, MoE routing invariants, flash vs naive SDPA."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import (ModelConfig, decode_step, forward, init_params,
+                          loss_fn)
+from repro.models.config import (MLAConfig, MambaConfig, MoEConfig, ScanGroup,
+                                 XLSTMConfig)
+from repro.models.flash import chunked_scan, flash_sdpa
+from repro.models.moe import capacity, moe_apply
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tiny(name, **kw):
+    base = dict(
+        name=name, family="dense", d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=97, groups=(ScanGroup((("attn", "mlp"),), 2),),
+        head_dim=16, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CONFIGS = {
+    "dense": tiny("dense", qk_norm=True),
+    "swa": tiny("swa", window=24),
+    "moe": tiny("moe", groups=(ScanGroup((("attn", "moe"),), 2),),
+                moe=MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                              num_shared=1, capacity_factor=2.0)),
+    "mla": tiny("mla", num_kv_heads=4,
+                groups=(ScanGroup((("mla", "mlp"),), 2),),
+                mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)),
+    "hybrid": tiny("hybrid",
+                   groups=(ScanGroup((("mamba", "mlp"), ("attn", "mlp")), 1),),
+                   mamba=MambaConfig(d_state=4)),
+    "xlstm": tiny("xlstm", num_kv_heads=4, d_ff=0,
+                  groups=(ScanGroup((("mlstm", "none"), ("slstm", "none")),
+                                    1),),
+                  xlstm=XLSTMConfig()),
+}
+
+
+@pytest.mark.parametrize("kind", list(CONFIGS))
+class TestFamilies:
+    def test_forward_grad(self, kind):
+        cfg = CONFIGS[kind]
+        params = init_params(KEY, cfg)
+        toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        loss, metrics = loss_fn(params, cfg, batch)
+        assert np.isfinite(float(loss))
+        grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+        assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+    def test_decode_matches_full(self, kind):
+        cfg = CONFIGS[kind]
+        params = init_params(KEY, cfg)
+        B, S = 2, 48
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        logits, caches, _ = forward(params, cfg, tokens=toks,
+                                    want_cache=True, cache_len=64)
+        nxt = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        pos = jnp.full((B,), S, jnp.int32)
+        step_logits, caches = decode_step(params, cfg, nxt, caches, pos)
+        full2, _, _ = forward(params, cfg,
+                              tokens=jnp.concatenate([toks, nxt], 1))
+        err = float(jnp.max(jnp.abs(step_logits[:, 0] - full2[:, -1])))
+        assert err < 5e-3, err
+
+    def test_multi_step_decode(self, kind):
+        """Greedy continuation via cache equals greedy via full re-forward."""
+        cfg = CONFIGS[kind]
+        params = init_params(KEY, cfg)
+        B, S, T = 1, 24, 4
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        logits, caches, _ = forward(params, cfg, tokens=toks,
+                                    want_cache=True, cache_len=S + T + 1)
+        cur = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        seq = toks
+        for t in range(T):
+            seq = jnp.concatenate([seq, cur], axis=1)
+            step_logits, caches = decode_step(
+                params, cfg, cur, caches, jnp.full((B,), S + t, jnp.int32))
+            full, _, _ = forward(params, cfg, tokens=seq)
+            got = int(jnp.argmax(step_logits[0, 0]))
+            want = int(jnp.argmax(full[0, -1]))
+            assert got == want, f"step {t}: {got} != {want}"
+            cur = jnp.array([[got]], jnp.int32)
+
+
+class TestFlashEquivalence:
+    @pytest.mark.parametrize("causal,window", [(False, None), (True, None),
+                                               (True, 48)])
+    def test_flash_matches_oracle(self, causal, window):
+        B, S, H, KV, dh = 2, 256, 4, 2, 16
+        q = jax.random.normal(KEY, (B, S, H, dh))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, dh))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, dh))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        got = flash_sdpa(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                         window=window, scale=0.25, bq=64, bk=64)
+        for h in range(H):
+            want = jax.vmap(lambda qq, kk, vv: ref.attention_ref(
+                qq, kk, vv, causal=causal, window=window, scale=0.25))(
+                q[:, :, h], k[:, :, h // (H // KV)], v[:, :, h // (H // KV)])
+            np.testing.assert_allclose(np.asarray(got[:, :, h]),
+                                       np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_chunked_scan_matches_plain(self):
+        def step(c, x):
+            c = 0.9 * c + x
+            return c, c
+
+        xs = jax.random.normal(KEY, (64, 8))
+        c0 = jnp.zeros((8,))
+        want_c, want_ys = jax.lax.scan(step, c0, xs)
+        got_c, got_ys = chunked_scan(step, c0, xs, chunk=16, length=64)
+        np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_ys), np.asarray(want_ys),
+                                   rtol=1e-6)
+
+
+class TestMoE:
+    def test_capacity_formula(self):
+        m = MoEConfig(num_experts=4, top_k=2, d_expert=32,
+                      capacity_factor=1.25)
+        assert capacity(64, m) == 40  # ceil(64·2·1.25/4)=40
+
+    def test_all_tokens_routed_when_capacity_ample(self):
+        cfg = CONFIGS["moe"]
+        params = init_params(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+        moe_params = jax.tree.map(lambda p: p[0], params["groups"][0][0])["ffn"]
+        y, aux = moe_apply(moe_params, x, cfg)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all())
+        # Switch aux loss ≈ 1 at balance (hard counts vs soft probs may dip
+        # slightly below the ideal bound)
+        assert 0.85 <= float(aux) <= float(cfg.moe.num_experts)
+
+    def test_expert_permutation_equivariance(self):
+        """Permuting expert weights (and router cols) leaves output unchanged."""
+        cfg = CONFIGS["moe"]
+        params = init_params(KEY, cfg)
+        moe_params = jax.tree.map(lambda p: p[0], params["groups"][0][0])["ffn"]
+        x = jax.random.normal(KEY, (1, 8, cfg.d_model))
+        y1, _ = moe_apply(moe_params, x, cfg)
+        perm = jnp.array([2, 0, 3, 1])
+        p2 = {
+            "router": moe_params["router"][:, perm],
+            "experts": jax.tree.map(lambda w: w[perm],
+                                    moe_params["experts"]),
+        }
+        if "shared" in moe_params:
+            p2["shared"] = moe_params["shared"]
+        y2, _ = moe_apply(p2, x, cfg)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestSSRRegion:
+    def test_region_toggles(self):
+        from repro.core import ssr_enabled, ssr_region
+        assert not ssr_enabled()
+        with ssr_region():
+            assert ssr_enabled()
+            with ssr_region(False):
+                assert not ssr_enabled()
+            assert ssr_enabled()
+        assert not ssr_enabled()
+
+    def test_ops_equivalent_on_and_off(self):
+        """ssrcfg=1 and ssrcfg=0 execute identical semantics (§2.2.2)."""
+        from repro.core import ssr_region
+        from repro.kernels import ops
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal(2048), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(2048), jnp.float32)
+        with ssr_region():
+            on = [ops.dot(x, y), ops.prefix_sum(x), ops.relu(x)]
+        off = [ops.dot(x, y), ops.prefix_sum(x), ops.relu(x)]
+        for a, b in zip(on, off):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-3)

@@ -1,0 +1,129 @@
+"""Property tests for the StreamSpec / AGU address model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (Direction, StreamSpec, address_sequence,
+                        affine_coefficients, block_grid, contiguous,
+                        gather_stream, scatter_stream, validate_no_race)
+
+
+@st.composite
+def stream_specs(draw):
+    ndim = draw(st.integers(1, 4))
+    bounds = tuple(draw(st.lists(st.integers(1, 6), min_size=ndim,
+                                 max_size=ndim)))
+    strides = tuple(draw(st.lists(st.integers(-8, 8), min_size=ndim,
+                                  max_size=ndim)))
+    base = draw(st.integers(0, 64))
+    repeat = draw(st.integers(1, 3))
+    return StreamSpec(bounds=bounds, strides=strides, base=base,
+                      repeat=repeat)
+
+
+class TestAddressModel:
+    @given(spec=stream_specs())
+    @settings(max_examples=100, deadline=None)
+    def test_vectorised_agu_matches_oracle(self, spec):
+        """The mixed-radix AGU equals the nested-loop enumeration."""
+        want = np.array(list(spec.addresses()), dtype=np.int32)
+        got = np.asarray(address_sequence(spec))
+        np.testing.assert_array_equal(want, got)
+
+    @given(spec=stream_specs())
+    @settings(max_examples=50, deadline=None)
+    def test_transaction_counts(self, spec):
+        assert spec.num_transactions == spec.num_iterations * spec.repeat
+        assert len(list(spec.addresses())) == spec.num_transactions
+
+    @given(spec=stream_specs())
+    @settings(max_examples=50, deadline=None)
+    def test_address_range_bounds_all_addresses(self, spec):
+        lo, hi = spec.address_range()
+        addrs = np.asarray(address_sequence(spec))
+        assert addrs.min() >= lo
+        assert addrs.max() <= hi
+
+    def test_gather_matches_manual(self):
+        data = jnp.arange(64, dtype=jnp.float32)
+        spec = StreamSpec(bounds=(4, 4), strides=(8, 2), base=1)
+        got = np.asarray(gather_stream(data, spec))
+        want = [1 + 8 * i + 2 * j for i in range(4) for j in range(4)]
+        np.testing.assert_array_equal(got, np.array(want, dtype=np.float32))
+
+    def test_repeat_register(self):
+        data = jnp.arange(8, dtype=jnp.float32)
+        spec = StreamSpec(bounds=(4,), strides=(2,), repeat=3)
+        got = np.asarray(gather_stream(data, spec))
+        np.testing.assert_array_equal(got, np.repeat([0, 2, 4, 6], 3))
+
+    def test_scatter_writes_in_order(self):
+        spec = StreamSpec(bounds=(4,), strides=(1,), base=2,
+                          direction=Direction.WRITE)
+        out = np.asarray(scatter_stream(8, jnp.arange(4.0), spec))
+        np.testing.assert_array_equal(out, [0, 0, 0, 1, 2, 3, 0, 0])
+
+
+class TestValidation:
+    def test_max_dims(self):
+        with pytest.raises(ValueError):
+            StreamSpec(bounds=(2, 2, 2, 2, 2), strides=(1, 1, 1, 1, 1))
+
+    def test_write_repeat_rejected(self):
+        with pytest.raises(ValueError):
+            StreamSpec(bounds=(4,), strides=(1,), repeat=2,
+                       direction=Direction.WRITE)
+
+    def test_race_detection(self):
+        r = contiguous(16)
+        w = StreamSpec(bounds=(4,), strides=(1,), base=8,
+                       direction=Direction.WRITE)
+        with pytest.raises(ValueError, match="SSR race"):
+            validate_no_race([r], [w])
+        w_far = StreamSpec(bounds=(4,), strides=(1,), base=100,
+                           direction=Direction.WRITE)
+        validate_no_race([r], [w_far])  # disjoint: fine
+
+
+class TestBlockGrid:
+    def test_exact_tiling(self):
+        spec = StreamSpec(bounds=(4, 32, 128), strides=(4096, 128, 1))
+        assert block_grid(spec, (8, 128)) == (4, 4, 1)
+
+    def test_rejects_non_tiling(self):
+        spec = StreamSpec(bounds=(10,), strides=(1,))
+        with pytest.raises(ValueError):
+            block_grid(spec, (3,))
+
+
+class TestAffineProbe:
+    def test_affine_map_recovered(self):
+        f = lambda i, j, k: (2 * i + 1, 3 * k)
+        got = affine_coefficients(f, (4, 5, 6))
+        assert got is not None
+        f0, coeffs = got
+        np.testing.assert_array_equal(f0, [1, 0])
+        np.testing.assert_array_equal(coeffs[0], [2, 0])
+        np.testing.assert_array_equal(coeffs[2], [0, 3])
+
+    def test_non_affine_rejected(self):
+        f = lambda i, j: (i * j, 0)  # bilinear, not affine
+        assert affine_coefficients(f, (4, 4)) is None
+
+    @given(
+        c0=st.integers(-3, 3), c1=st.integers(-3, 3),
+        off=st.integers(-4, 4),
+        grid=st.tuples(st.integers(2, 5), st.integers(2, 5)),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_affine_always_accepted(self, c0, c1, off, grid):
+        f = lambda i, j: (c0 * i + c1 * j + off,)
+        got = affine_coefficients(f, grid)
+        assert got is not None
+        f0, coeffs = got
+        assert f0[0] == off
+        assert coeffs[0][0] == c0
+        assert coeffs[1][0] == c1

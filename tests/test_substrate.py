@@ -1,0 +1,173 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing."""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline
+from repro.models import ModelConfig
+from repro.models.config import ScanGroup
+from repro.optim import adamw, compress
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(learning_rate=0.1, weight_decay=0.0,
+                                clip_norm=None)
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros((3,))}
+        state = adamw.init(params, cfg)
+        for _ in range(300):
+            grads = jax.grad(
+                lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state, _ = adamw.update(grads, state, params, cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=1e-2)
+
+    def test_bf16_moments(self):
+        cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+        params = {"w": jnp.ones((4, 4))}
+        state = adamw.init(params, cfg)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        grads = {"w": jnp.ones((4, 4))}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+        assert state["v"]["w"].dtype == jnp.bfloat16
+
+    def test_clip_norm(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0, learning_rate=1.0,
+                                weight_decay=0.0)
+        params = {"w": jnp.zeros((2,))}
+        state = adamw.init(params, cfg)
+        huge = {"w": jnp.asarray([3e4, 4e4])}
+        p2, _, m = adamw.update(huge, state, params, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(5e4, rel=1e-3)
+        assert bool(jnp.isfinite(p2["w"]).all())
+
+    def test_no_decay_on_1d(self):
+        cfg = adamw.AdamWConfig(learning_rate=0.0, weight_decay=1.0)
+        # lr=0 ⇒ params unchanged regardless of decay
+        params = {"norm": jnp.ones((4,)), "w": jnp.ones((4, 4))}
+        state = adamw.init(params, cfg)
+        grads = jax.tree.map(jnp.zeros_like, params)
+        p2, _, _ = adamw.update(grads, state, params, cfg)
+        np.testing.assert_allclose(np.asarray(p2["norm"]), 1.0)
+
+    def test_warmup_cosine(self):
+        sched = adamw.warmup_cosine(peak=1.0, warmup=10, total=110)
+        assert float(sched(jnp.asarray(0))) == 0.0
+        assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(sched(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-3)
+
+
+class TestCompression:
+    @given(scale=st.floats(1e-5, 1e4))
+    @settings(max_examples=30, deadline=None)
+    def test_quant_roundtrip_error_bounded(self, scale):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(256)
+                        * scale, jnp.float32)
+        q, s = compress.quantize(x)
+        err = np.abs(np.asarray(compress.dequantize(q, s) - x))
+        assert err.max() <= float(s) * 0.5 + 1e-9
+
+    def test_error_feedback_accumulates(self):
+        g = jnp.full((64,), 0.3e-2)
+        residual = jnp.zeros((64,))
+        total = jnp.zeros((64,))
+        for _ in range(50):
+            q, s, residual = compress.compress_leaf(g, residual)
+            total = total + compress.dequantize(q, s)
+        # with error feedback, the long-run mean equals the true gradient
+        np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g),
+                                   rtol=0.05)
+
+
+class TestDataPipeline:
+    def test_deterministic_per_step(self):
+        cfg = ModelConfig(name="t", family="dense", d_model=32, num_heads=2,
+                          num_kv_heads=2, d_ff=64, vocab_size=101,
+                          groups=(ScanGroup((("attn", "mlp"),), 1),),
+                          remat=False)
+        dcfg = pipeline.DataConfig(global_batch=4, seq_len=16, seed=3)
+        a = pipeline.make_batch(cfg, dcfg, step=5)
+        b = pipeline.make_batch(cfg, dcfg, step=5)
+        c = pipeline.make_batch(cfg, dcfg, step=6)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))
+        assert int(a["tokens"].max()) < 101
+        # labels are next-token shifted
+        np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
+                                      np.asarray(a["labels"][:, :-1]))
+
+    def test_input_specs_match_batches(self):
+        for fe, fl in ((None, 0), ("audio", 8), ("vision", 8)):
+            cfg = ModelConfig(
+                name="t", family="dense", d_model=32, num_heads=2,
+                num_kv_heads=2, d_ff=64, vocab_size=101,
+                groups=(ScanGroup((("attn", "mlp"),), 1),),
+                frontend=fe, frontend_len=fl, remat=False)
+            dcfg = pipeline.DataConfig(global_batch=2, seq_len=8)
+            specs = pipeline.input_specs(cfg, dcfg)
+            batch = pipeline.make_batch(cfg, dcfg, 0)
+            assert set(specs) == set(batch)
+            for k in specs:
+                assert specs[k].shape == batch[k].shape, k
+                assert specs[k].dtype == batch[k].dtype, k
+
+
+class TestCheckpoint:
+    def _state(self, x=1.0):
+        return {"params": {"w": jnp.full((4, 4), x),
+                           "b": jnp.arange(4.0)},
+                "opt": {"m": {"w": jnp.zeros((4, 4)),
+                              "b": jnp.zeros((4,))},
+                        "count": jnp.asarray(3)}}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = self._state(2.5)
+        mgr.save(10, state)
+        assert mgr.latest_step() == 10
+        restored = mgr.restore(10, jax.tree.map(jnp.zeros_like, state))
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_and_keep_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._state(float(s)), blocking=False)
+        mgr.wait()
+        assert mgr.all_steps() == [3, 4]
+        assert mgr.latest_step() == 4
+
+    def test_manifest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(7, self._state(), extra={"data_step": 7})
+        m = mgr.manifest(7)
+        assert m["step"] == 7
+        assert m["extra"]["data_step"] == 7
+        assert "params/w" in m["leaves"]
+
+    def test_atomic_no_partial_on_existing(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._state(1.0))
+        mgr.save(1, self._state(9.0))  # overwrite same step atomically
+        r = mgr.restore(1, self._state(0.0))
+        assert float(r["params"]["w"][0, 0]) == 9.0
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._state())
+        bad = self._state()
+        bad["params"]["w"] = jnp.zeros((2, 2))
+        with pytest.raises(ValueError, match="shape"):
+            mgr.restore(1, bad)
