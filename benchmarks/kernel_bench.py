@@ -5,6 +5,11 @@ TPU silicon, so the honest comparison is: XLA-compiled reference path
 (μs/call, real) + static stream-analysis (bytes streamed, FIFO reuse, VMEM
 footprint — the quantities that decide TPU speed).  On a real TPU this file
 runs unchanged with ``interpret=False`` to time Mosaic kernels.
+
+The kernel set is *enumerated from the registry*: every ``@register_kernel``
+entry with an ``example`` factory is timed (``ref`` path) and smoke-run
+(``ssr`` path), so a newly registered kernel lands in this benchmark with
+zero edits here.
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import registry
 
 RNG = np.random.default_rng(0)
 
@@ -32,37 +37,35 @@ def _time(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def bench_reference_paths() -> List[Tuple[str, float, str]]:
-    """Time the jitted XLA reference path per paper kernel (problem sizes
-    as in §4.2)."""
+    """Time the jitted XLA reference path of every registered kernel
+    (problem sizes as in §4.2, from each entry's example factory)."""
     rows = []
-    x = jnp.asarray(RNG.standard_normal(2048), jnp.float32)
-    y = jnp.asarray(RNG.standard_normal(2048), jnp.float32)
-    s4096 = jnp.asarray(RNG.standard_normal(4096), jnp.float32)
-    r1024 = jnp.asarray(RNG.standard_normal(1024), jnp.float32)
-    xs = jnp.asarray(RNG.standard_normal(1024 + 10), jnp.float32)
-    w11 = jnp.asarray(RNG.standard_normal(11) * 0.1, jnp.float32)
-    g2d = jnp.asarray(RNG.standard_normal((74, 74)), jnp.float32)
-    a64 = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
-    v64 = jnp.asarray(RNG.standard_normal(64), jnp.float32)
-    a32 = jnp.asarray(RNG.standard_normal((32, 32)), jnp.float32)
-    b32 = jnp.asarray(RNG.standard_normal((32, 32)), jnp.float32)
-
-    cases = [
-        ("reduction/2048", jax.jit(ref.dot_ref), (x, y)),
-        ("scan/4096", jax.jit(ref.scan_ref), (s4096,)),
-        ("relu/1024", jax.jit(ref.relu_ref), (r1024,)),
-        ("stencil1d/1024", jax.jit(ref.stencil1d_ref), (xs, w11)),
-        ("stencil2d/64x64", jax.jit(ref.stencil2d_ref), (g2d, w11, w11)),
-        ("gemv/64", jax.jit(ref.gemv_ref), (a64, v64)),
-        ("gemm/32", jax.jit(ref.matmul_ref), (a32, b32)),
-        ("fft/2048", jax.jit(lambda r, i: ref.fft_ref(r, i)), (x, y)),
-        ("sort/1024", jax.jit(ref.sort_ref), (r1024,)),
-    ]
     print("\n== kernel reference path timings (XLA:CPU, μs/call) ==")
-    for name, fn, args in cases:
+    for entry in registry.entries():
+        if entry.example is None:
+            continue
+        args, kwargs = entry.example(RNG)
+        fn = jax.jit(lambda *a, _e=entry, _kw=kwargs: _e.ref(*a, **_kw))
         us = _time(fn, *args)
-        print(f"{name:18s} {us:10.1f} μs")
-        rows.append((f"kernel_ref/{name}", us, "xla_cpu us/call"))
+        print(f"{entry.name:12s} {entry.problem:26s} {us:10.1f} μs")
+        rows.append((f"kernel_ref/{entry.name}", us, "xla_cpu us/call"))
+    return rows
+
+
+def smoke_ssr_paths() -> List[Tuple[str, float, str]]:
+    """One interpret-mode call per registered streamed kernel (CI smoke)."""
+    rows = []
+    print("\n== kernel ssr-path smoke (Pallas interpret) ==")
+    for entry in registry.entries():
+        if entry.example is None:
+            continue
+        args, kwargs = entry.example(RNG)
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            jax.tree.leaves(entry.ssr(*args, **kwargs)))
+        ms = (time.perf_counter() - t0) * 1e3
+        print(f"{entry.name:12s} ok ({ms:7.1f} ms incl. trace)")
+        rows.append((f"kernel_ssr_smoke/{entry.name}", ms, "interpret ms"))
     return rows
 
 

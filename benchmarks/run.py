@@ -17,6 +17,7 @@ def main() -> None:
     for fn in paper_tables.ALL:
         rows.extend(fn())
     rows.extend(kernel_bench.bench_reference_paths())
+    rows.extend(kernel_bench.smoke_ssr_paths())
     rows.extend(kernel_bench.bench_stream_reports())
 
     if os.path.exists("dryrun_results.json"):

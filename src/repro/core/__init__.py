@@ -51,4 +51,14 @@ from .compiler import (  # noqa: F401
     gemm_nest,
     ssrify,
 )
+from .lowering import (  # noqa: F401
+    BlockPolicy,
+    DEFAULT_POLICY,
+    LoweredPlan,
+    LoweredStream,
+    LoweringError,
+    lower_plan,
+    plan_stats,
+    ssr_call,
+)
 from .region import ssr_enabled, ssr_region, set_ssr  # noqa: F401

@@ -1,0 +1,427 @@
+"""Lower compiler :class:`StreamPlan`\\ s to executable Pallas kernels.
+
+This module closes the §3.2 loop that the paper's LLVM pass closes in MIR:
+
+    LoopNest ──ssrify()──► StreamPlan ──lower_plan()──► (grid, BlockStreams)
+                                                         │
+                              ssr_call() ◄───────────────┘  → ssr_pallas()
+
+``ssrify`` allocates affine accesses to data-mover lanes and renders the
+Eq. (3) verdict; *nothing* in the seed tree executed that plan.  Here each
+allocated :class:`StreamSpec` becomes a Pallas ``grid`` + affine ``index_map``
+(the AGU at block granularity, derived via :func:`agu.block_grid`), and
+:func:`ssr_call` runs the whole pipeline end to end: feed it a nest, a block
+body, and the operand arrays, and the loop executes as a streamed Pallas
+kernel whose operand delivery *is* the plan's AGU schedule.
+
+Lowerable patterns (the TPU block-granularity subset of the AGU model):
+
+* unit-stride innermost walk (``coeffs[-1] == 1``) with *dense row-major*
+  outer levels — each grid step consumes one whole VMEM block;
+* levels with coefficient 0 — the index_map ignores that grid axis, so the
+  pipeline revisits the block: the paper's **repeat register**;
+* fully loop-invariant operands — a single block served to every step.
+
+Anything else (e.g. a strided column walk, expressible by the word-granular
+hardware AGU but not by whole-block DMA) raises :class:`LoweringError`; those
+kernels keep their hand-scheduled 2-D block layouts under ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import agu
+from .compiler import Allocation, LoopNest, StreamPlan, ssrify
+from .ssr import BlockStream, ssr_pallas
+from .stream import Direction, StreamSpec
+
+
+class LoweringError(ValueError):
+    """The plan's access pattern has no whole-block Pallas schedule."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPolicy:
+    """How element streams are blocked into VMEM tiles.
+
+    A TPU "word" for streaming purposes is one (rows × lanes) tile; the
+    policy is the stream's element width in the §2 correspondence.
+    """
+
+    rows: int = 8
+    lanes: int = 128
+
+    @property
+    def block_elems(self) -> int:
+        return self.rows * self.lanes
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return (self.rows, self.lanes)
+
+
+DEFAULT_POLICY = BlockPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredStream:
+    """One allocation lowered to block granularity.
+
+    ``logical_shape`` is the operand view the lowering expects *before*
+    padding (``None`` = take the array as-is, e.g. loop-invariant streams);
+    ``prepare`` turns the user's flat/logical array into the 2-D padded
+    layout whose row-blocks the ``index_map`` addresses.
+    """
+
+    name: str
+    stream: BlockStream
+    spec: StreamSpec                       # compiler allocation, for oracles
+    logical_shape: Optional[Tuple[int, ...]]
+    padded_last: int                       # innermost extent after padding
+    policy: BlockPolicy
+    offset: int = 0                        # base-pointer shift (AGU `base`)
+
+    def prepare(self, arr: jax.Array) -> jax.Array:
+        """Pad + reshape ``arr`` into the (rows, lanes) layout streamed."""
+        lanes = self.policy.lanes
+        if self.logical_shape is None:      # loop-invariant: one block
+            # The AGU base pointer shifts the view: element 0 of the block
+            # is data[offset], exactly what the spec's repeat walk emits.
+            flat = arr.reshape(-1)[self.offset:]
+            pad = (-flat.shape[0]) % lanes if flat.shape[0] else lanes
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            return flat.reshape(-1, lanes)
+        want = math.prod(self.logical_shape)
+        flat = arr.reshape(-1)
+        if flat.shape[0] != want:
+            raise ValueError(
+                f"stream '{self.name}': operand has {flat.shape[0]} elements, "
+                f"plan expects logical shape {self.logical_shape}")
+        view = flat.reshape(self.logical_shape)
+        pad = self.padded_last - self.logical_shape[-1]
+        if pad:
+            view = jnp.pad(view, [(0, 0)] * (view.ndim - 1) + [(0, pad)])
+        return view.reshape(-1, lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredPlan:
+    """A StreamPlan turned into a launchable Pallas schedule."""
+
+    plan: StreamPlan
+    policy: BlockPolicy
+    grid: Tuple[int, ...]
+    in_streams: Tuple[LoweredStream, ...]
+    out_streams: Tuple[LoweredStream, ...]
+
+    @property
+    def steps(self) -> int:
+        return math.prod(self.grid)
+
+
+def _inner_steps(nest: LoopNest, policy: BlockPolicy) -> int:
+    return -(-nest.bounds[-1] // policy.block_elems)
+
+
+def _lower_allocation(alloc: Allocation, nest: LoopNest,
+                      policy: BlockPolicy) -> LoweredStream:
+    """Turn one lane's affine access into a BlockStream over row-blocks."""
+    coeffs = alloc.ref.coeffs
+    assert coeffs is not None  # only affine refs are ever allocated
+    d = len(nest.bounds)
+    E = policy.block_elems
+    steps_inner = _inner_steps(nest, policy)
+    padded_inner = steps_inner * E
+
+    varying = [k for k, c in enumerate(coeffs) if c != 0]
+    if not varying:
+        # Loop-invariant operand: one block revisited by every grid step —
+        # the repeat register driven to its limit.
+        def invariant_map(*_g):
+            return (0, 0)
+
+        return LoweredStream(
+            name=alloc.ref.name,
+            stream=BlockStream(block_shape=(1, policy.lanes),
+                               index_map=invariant_map,
+                               direction=alloc.ref.kind,
+                               name=alloc.ref.name),
+            spec=alloc.spec, logical_shape=None, padded_last=policy.lanes,
+            policy=policy, offset=alloc.ref.offset)
+
+    if varying[-1] != d - 1 or coeffs[d - 1] != 1:
+        raise LoweringError(
+            f"stream '{alloc.ref.name}': innermost coefficient "
+            f"{coeffs[d - 1]} is not a unit-stride walk of the innermost "
+            "loop — the word-granular AGU supports it, whole-block DMA does "
+            "not; use a hand-scheduled 2-D block kernel")
+
+    # Dense row-major check for the outer varying levels: each coefficient
+    # must equal the extent-product of the faster-varying levels, so the
+    # operand is a plain (L_a, …, L_inner) array we can pad on its last dim.
+    extents: Dict[int, int] = {d - 1: nest.bounds[d - 1]}
+    expect = nest.bounds[d - 1]
+    for k in reversed(varying[:-1]):
+        if coeffs[k] != expect:
+            raise LoweringError(
+                f"stream '{alloc.ref.name}': level-{k} coefficient "
+                f"{coeffs[k]} != dense row-major stride {expect}; the "
+                "operand layout is not a contiguous array over its varying "
+                "loops")
+        extents[k] = nest.bounds[k]
+        expect *= nest.bounds[k]
+    if alloc.ref.offset % E:
+        raise LoweringError(
+            f"stream '{alloc.ref.name}': base offset {alloc.ref.offset} is "
+            f"not block-aligned (block = {E} elements)")
+
+    logical_shape = tuple(nest.bounds[k] for k in varying)
+    # Padded flat stride of each varying outer level (innermost padded to a
+    # whole number of blocks), expressed in *row-blocks*.
+    base_block = alloc.ref.offset // E
+    block_coeff: Dict[int, int] = {}
+    stride_blocks = steps_inner
+    for k in reversed(varying[:-1]):
+        block_coeff[k] = stride_blocks
+        stride_blocks *= nest.bounds[k]
+
+    def index_map(*g):
+        # grid axes = (outer nest levels …, tiled innermost); levels with a
+        # zero coefficient simply don't appear — Pallas sees an unchanged
+        # index and skips the re-fetch (repeat register).
+        row = base_block + g[d - 1]
+        for k, bc in block_coeff.items():
+            row = row + g[k] * bc
+        return (row, 0)
+
+    return LoweredStream(
+        name=alloc.ref.name,
+        stream=BlockStream(block_shape=policy.block_shape,
+                           index_map=index_map,
+                           direction=alloc.ref.kind,
+                           name=alloc.ref.name),
+        spec=alloc.spec,
+        logical_shape=logical_shape,
+        padded_last=padded_inner,
+        policy=policy)
+
+
+def lower_plan(plan: StreamPlan,
+               policy: BlockPolicy = DEFAULT_POLICY) -> LoweredPlan:
+    """Lower every allocated lane of ``plan`` to Pallas block schedules.
+
+    The grid is the nest's loop structure with the innermost level tiled by
+    the policy block — computed through :func:`agu.block_grid` on the nest's
+    canonical (dense row-major) iteration-space spec, so the kernel's block
+    schedule provably *is* the AGU pattern at block granularity.
+    """
+    if not plan.allocations:
+        raise LoweringError(
+            "plan has no stream allocations (Eq. (3) verdict was 'keep "
+            "baseline'); lower the force=True plan for the runtime-decision "
+            "path")
+    nest = plan.nest
+    E = policy.block_elems
+    padded_inner = _inner_steps(nest, policy) * E
+    padded_bounds = tuple(nest.bounds[:-1]) + (padded_inner,)
+    strides = [1] * len(padded_bounds)
+    for k in range(len(padded_bounds) - 2, -1, -1):
+        strides[k] = strides[k + 1] * padded_bounds[k + 1]
+    canonical = StreamSpec(bounds=padded_bounds, strides=tuple(strides))
+    grid = agu.block_grid(canonical, (E,))
+
+    lowered = [_lower_allocation(a, nest, policy) for a in plan.allocations]
+    ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
+    outs = tuple(s for s in lowered if s.stream.direction == Direction.WRITE)
+    return LoweredPlan(plan=plan, policy=policy, grid=grid,
+                       in_streams=ins, out_streams=outs)
+
+
+# --------------------------------------------------------------------------
+# End-to-end execution: ssr_call
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_for(nest: LoopNest, num_lanes: int) -> StreamPlan:
+    """Plan cache keyed on the nest signature (frozen dataclass hash).
+
+    ``force=True`` is the paper's runtime-decision path: the caller asked to
+    *execute* the streamed variant, so allocation must happen regardless of
+    the static Eq. (3) verdict (which remains available via ``plan_stats``).
+    """
+    return ssrify(nest, num_lanes=num_lanes, force=True)
+
+
+@functools.lru_cache(maxsize=256)
+def plan_stats(nest: LoopNest, num_lanes: int = 2) -> StreamPlan:
+    """The static-verdict plan (no force) — Eq. (1)–(3) cost accounting."""
+    return ssrify(nest, num_lanes=num_lanes)
+
+
+# Built-kernel cache, LRU-bounded.  Keys include the body function's
+# identity: pass a module-level (or otherwise long-lived) body to hit the
+# cache — a fresh inline lambda per call builds a fresh kernel each time.
+_KERNEL_CACHE_MAX = 256
+_kernel_cache: "collections.OrderedDict[Any, Callable]" = \
+    collections.OrderedDict()
+
+
+def _kernel_cache_get(key):
+    fn = _kernel_cache.get(key)
+    if fn is not None:
+        _kernel_cache.move_to_end(key)
+    return fn
+
+
+def _kernel_cache_put(key, fn) -> None:
+    _kernel_cache[key] = fn
+    _kernel_cache.move_to_end(key)
+    while len(_kernel_cache) > _KERNEL_CACHE_MAX:
+        _kernel_cache.popitem(last=False)
+
+
+def clear_caches() -> None:
+    _plan_for.cache_clear()
+    plan_stats.cache_clear()
+    _kernel_cache.clear()
+
+
+def _first_last(grid: Tuple[int, ...]):
+    """Predicates for the first/last step of a (possibly multi-dim) grid."""
+    from jax.experimental import pallas as pl
+
+    first = pl.program_id(0) == 0
+    last = pl.program_id(0) == pl.num_programs(0) - 1
+    for k in range(1, len(grid)):
+        first = jnp.logical_and(first, pl.program_id(k) == 0)
+        last = jnp.logical_and(last, pl.program_id(k) == pl.num_programs(k) - 1)
+    return first, last
+
+
+def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
+                  out_dtype, interpret: Optional[bool]) -> Callable:
+    """Wrap a block-level ``body`` into a full ssr_pallas kernel."""
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = lowered.grid
+    policy = lowered.policy
+    n_in = len(lowered.in_streams)
+    in_streams = [s.stream for s in lowered.in_streams]
+
+    if mode == "reduce":
+        def kernel(*refs):
+            in_refs, o_ref, acc_ref = refs[:n_in], refs[n_in], refs[n_in + 1]
+            first, last = _first_last(grid)
+
+            @pl.when(first)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            part = body(*[r[...] for r in in_refs])
+            acc_ref[...] += jnp.asarray(part, out_dtype).reshape(1, 1)
+
+            @pl.when(last)
+            def _write():
+                o_ref[...] = acc_ref[...]
+
+        out_streams = [BlockStream((1, 1), lambda *g: (0, 0),
+                                   Direction.WRITE, name="acc")]
+        out_shapes = [jax.ShapeDtypeStruct((1, 1), out_dtype)]
+        scratch = [pltpu.VMEM((1, 1), out_dtype)]
+    elif mode == "map":
+        steps = lowered.steps
+        # Output walks the grid dense row-major: one block per step.
+        place = [1] * len(grid)
+        for k in range(len(grid) - 2, -1, -1):
+            place[k] = place[k + 1] * grid[k + 1]
+
+        def out_map(*g):
+            row = g[0] * place[0]
+            for k in range(1, len(g)):
+                row = row + g[k] * place[k]
+            return (row, 0)
+
+        def kernel(*refs):
+            in_refs, o_ref = refs[:n_in], refs[n_in]
+            o_ref[...] = jnp.asarray(
+                body(*[r[...] for r in in_refs]), out_dtype
+            ).reshape(policy.block_shape)
+
+        out_streams = [BlockStream(policy.block_shape, out_map,
+                                   Direction.WRITE, name="out")]
+        out_shapes = [jax.ShapeDtypeStruct(
+            (steps * policy.rows, policy.lanes), out_dtype)]
+        scratch = []
+    else:
+        raise ValueError(f"unknown ssr_call mode {mode!r}")
+
+    return ssr_pallas(
+        kernel, grid=grid,
+        in_streams=in_streams, out_streams=out_streams,
+        out_shapes=out_shapes, scratch_shapes=scratch,
+        interpret=interpret,
+        dimension_semantics=("arbitrary",) * len(grid),
+    )
+
+
+def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
+             operands: Dict[str, jax.Array], *,
+             mode: str = "reduce",
+             out_dtype=jnp.float32,
+             policy: BlockPolicy = DEFAULT_POLICY,
+             num_lanes: Optional[int] = None,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Execute a :class:`LoopNest` as a streamed Pallas kernel.
+
+    ``body(*blocks)`` is the pure compute region: it receives one VMEM block
+    per allocated read stream (in allocation order — deepest-first, i.e. the
+    order ``plan.allocations`` lists them) and returns
+
+    * ``mode="reduce"`` — a scalar partial, accumulated across all grid
+      steps (the Fig. 4 ``%x`` accumulator register);
+    * ``mode="map"`` — one output block, written to a dense write stream
+      walking the grid (the output AGU); the result is trimmed to the
+      nest's iteration count.
+
+    ``operands`` maps :class:`MemRef` names to arrays.  Zero padding is
+    applied per stream, so bodies must be padding-neutral for ``reduce``
+    (sum/dot-style bodies are).  Plans are cached on the nest signature,
+    built kernels on (nest, policy, mode, body, dtypes, interpret).
+    """
+    if num_lanes is None:
+        num_lanes = sum(1 for r in nest.refs if r.is_affine())
+    plan = _plan_for(nest, num_lanes)
+    lowered = lower_plan(plan, policy)
+    missing = [s.name for s in lowered.in_streams if s.name not in operands]
+    if missing:
+        raise ValueError(f"missing operands for streams {missing}")
+    prepared = [s.prepare(operands[s.name]) for s in lowered.in_streams]
+
+    key = (nest, policy, mode, body, str(jnp.dtype(out_dtype)),
+           tuple((p.shape, str(p.dtype)) for p in prepared),
+           num_lanes, interpret)
+    fn = _kernel_cache_get(key)
+    if fn is None:
+        fn = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
+                           interpret)
+        _kernel_cache_put(key, fn)
+
+    out = fn(*prepared)
+    if mode == "reduce":
+        return out[0, 0]
+    # map: drop the inner-level padding (it interleaves for d > 1 nests),
+    # then flatten back to one value per nest iteration.
+    padded_inner = _inner_steps(nest, policy) * policy.block_elems
+    out_nd = out.reshape(*nest.bounds[:-1], padded_inner)
+    return out_nd[..., :nest.bounds[-1]].reshape(-1)

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import math
 from typing import Any, Callable, Optional, Sequence, Tuple
 
@@ -114,16 +115,20 @@ def _unique_blocks(stream: BlockStream, grid: Tuple[int, ...]) -> int:
     total = 1
     for g in grid:
         total *= g
-    if total > 65536:  # sample-based fallback for very large grids
-        f0, coeffs = agu.affine_coefficients(stream.index_map, grid)
+    if total > 65536:  # closed-form fallback for very large grids
+        affine = agu.affine_coefficients(stream.index_map, grid)
+        if affine is None:
+            # Non-affine map (possible when the kernel was built with
+            # validate=False): no closed form — count conservatively, as if
+            # every grid step touched a fresh block (no FIFO reuse credit).
+            return total
+        _, coeffs = affine
         # distinct blocks = product over grid dims with nonzero coeff
         distinct = 1
         for dim, c in enumerate(coeffs):
             if any(int(x) != 0 for x in c):
                 distinct *= grid[dim]
         return distinct
-    import itertools
-
     for idx in itertools.product(*[range(g) for g in grid]):
         seen.add(tuple(int(x) for x in stream.index_map(*idx)))
     return len(seen)

@@ -1,17 +1,21 @@
 """Pallas TPU kernels: the paper's §4.2 suite + production matmul/attention.
 
-Each kernel module pairs a streamed (SSR) variant with a baseline variant
-and is validated against the pure-jnp oracle in ``ref.py`` (interpret mode
-on CPU; Mosaic on real TPUs).
+Each kernel module declares only its compute body and stream geometry on the
+shared :mod:`frontend` (padding/reshape/dispatch/trim live there once) and
+self-registers in :mod:`registry`, which exposes ``ssr``/``baseline``/``ref``
+variants uniformly to benchmarks, tests, and the ``ssrcfg`` dispatch layer.
+All kernels are validated against the pure-jnp oracles in ``ref.py``
+(interpret mode on CPU; Mosaic on real TPUs).
 """
 
-from . import ops, ref  # noqa: F401
+from . import frontend, ops, ref, registry  # noqa: F401
 from .attention import ssr_flash_attention  # noqa: F401
 from .bitonic import ssr_sort  # noqa: F401
 from .fft import ssr_fft  # noqa: F401
 from .gemm import baseline_matmul, ssr_matmul  # noqa: F401
 from .gemv import baseline_gemv, ssr_gemv  # noqa: F401
 from .reduction import baseline_dot, ssr_dot  # noqa: F401
+from .registry import entries, get, register_kernel  # noqa: F401
 from .relu import baseline_relu, ssr_relu  # noqa: F401
 from .scan import baseline_scan, ssr_scan  # noqa: F401
 from .stencil import baseline_stencil1d, ssr_stencil1d, ssr_stencil2d  # noqa: F401

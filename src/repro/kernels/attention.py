@@ -20,7 +20,6 @@ and sliding-window (h2o-danube) masking.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -28,13 +27,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
+
+from .frontend import Launch, StreamKernel, promote
+from .registry import KernelEntry, register_kernel
 
 _NEG_INF = -1e30
 
 
-def _make_body(*, bq: int, bk: int, sq: int, sk: int, causal: bool,
-               window: int | None, scale: float):
+def _prepare(q, k, v, causal=False, window=None, scale=None,
+             bq=128, bk=128):
+    sq, d = q.shape
+    sk = k.shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    while sq % bq:
+        bq //= 2
+    while sk % bk:
+        bk //= 2
+    static = (max(bq, 1), max(bk, 1), sq, sk, bool(causal), window,
+              float(scale))
+    return (q, k, v), static, None
+
+
+def _body(static):
+    bq, bk, sq, sk, causal, window, scale = static
     offs = sk - sq  # query/key end alignment (decode-friendly)
 
     def body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
@@ -47,12 +66,13 @@ def _make_body(*, bq: int, bk: int, sq: int, sk: int, causal: bool,
             l_ref[...] = jnp.zeros_like(l_ref)
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        q = q_ref[...].astype(jnp.float32)
-        k = k_ref[...].astype(jnp.float32)
+        q = promote(q_ref[...])
+        k = promote(k_ref[...])
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
-        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offs
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + offs
         cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         mask = jnp.ones((bq, bk), bool)
         if causal:
@@ -67,7 +87,7 @@ def _make_body(*, bq: int, bk: int, sq: int, sk: int, causal: bool,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, promote(v_ref[...]), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
@@ -79,54 +99,60 @@ def _make_body(*, bq: int, bk: int, sq: int, sk: int, causal: bool,
     return body
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bq", "bk", "causal", "window", "scale", "interpret"))
-def _dispatch(q, k, v, bq, bk, causal, window, scale, interpret: bool = True):
-    sq, d = q.shape
-    sk = k.shape[0]
-    grid = (sq // bq, sk // bk)
-    body = _make_body(bq=bq, bk=bk, sq=sq, sk=sk, causal=causal,
-                      window=window, scale=scale)
-    fn = ssr_pallas(
-        body,
-        grid=grid,
-        in_streams=[
+def _launch(static, q, k, v):
+    bq, bk, sq, sk, _causal, _window, _scale = static
+    d = q.shape[1]
+    return Launch(
+        grid=(sq // bq, sk // bk),
+        in_streams=(
             BlockStream((bq, d), lambda i, j: (i, 0), name="Q"),
-            BlockStream((bk, d), lambda i, j: (j, 0), name="K"),  # reuse per i
+            BlockStream((bk, d), lambda i, j: (j, 0), name="K"),  # reuse/i
             BlockStream((bk, d), lambda i, j: (j, 0), name="V"),
-        ],
-        out_streams=[BlockStream((bq, d), lambda i, j: (i, 0),
-                                 Direction.WRITE, name="O")],
-        out_shapes=[jax.ShapeDtypeStruct((sq, d), q.dtype)],
-        scratch_shapes=[
+        ),
+        out_streams=(BlockStream((bq, d), lambda i, j: (i, 0),
+                                 Direction.WRITE, name="O"),),
+        out_shapes=(jax.ShapeDtypeStruct((sq, d), q.dtype),),
+        scratch_shapes=(
             pltpu.VMEM((bq, 1), jnp.float32),   # running max
             pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
             pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
-        ],
-        interpret=interpret,
+        ),
         dimension_semantics=("parallel", "arbitrary"),
     )
-    return fn(q, k, v)
+
+
+_ssr = StreamKernel("attention", prepare=_prepare, launch=_launch,
+                    body=_body)
 
 
 def ssr_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = False, window: int | None = None,
                         scale: float | None = None, bq: int = 128,
-                        bk: int = 128, interpret: bool = True) -> jax.Array:
+                        bk: int = 128, interpret=None) -> jax.Array:
     """Single-head streaming attention; q (Sq,D), k/v (Sk,D).
 
     Multi-head / batch: ``jax.vmap`` this (tested); GQA: vmap over kv heads
     with q reshaped (kv_heads, group, Sq, D).
     """
-    sq, d = q.shape
-    sk = k.shape[0]
-    if scale is None:
-        scale = 1.0 / math.sqrt(d)
-    bq = min(bq, sq)
-    bk = min(bk, sk)
-    while sq % bq:
-        bq //= 2
-    while sk % bk:
-        bk //= 2
-    return _dispatch(q, k, v, max(bq, 1), max(bk, 1), causal, window,
-                     float(scale), interpret)
+    return _ssr(q, k, v, causal=causal, window=window, scale=scale,
+                bq=bq, bk=bk, interpret=interpret)
+
+
+@register_kernel("attention")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def _ref(q, k, v, **kw):
+        return ref.attention_ref(q, k, v, **kw).astype(q.dtype)
+
+    def example(rng, odd: bool = False):
+        sq, sk = (128, 256) if odd else (256, 256)
+        d = 64
+        return ((jnp.asarray(rng.standard_normal((sq, d)), jnp.float32),
+                 jnp.asarray(rng.standard_normal((sk, d)), jnp.float32),
+                 jnp.asarray(rng.standard_normal((sk, d)), jnp.float32)),
+                {"causal": True})
+
+    return KernelEntry(name="attention", ssr=ssr_flash_attention, ref=_ref,
+                       example=example, tol={"rtol": 2e-4, "atol": 2e-4},
+                       problem="flash attention, S=256 D=64")

@@ -10,57 +10,76 @@ anywhere, so the body is min/max ops only).
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-
-def _body(x_ref, o_ref):
-    n = x_ref.shape[1]
-    x = x_ref[...].reshape(n)
-    stages = int(math.log2(n))
-    for ks in range(1, stages + 1):            # k = 2**ks
-        k = 1 << ks
-        for js in range(ks - 1, -1, -1):       # j = 2**js
-            j = 1 << js
-            X = x.reshape(n // (2 * j), 2, j)
-            a = X[:, 0, :]
-            b = X[:, 1, :]
-            # ascending iff (i & k) == 0; i = q·2j + h·j + r and k ≥ 2j, so
-            # the k-bit of i is carried entirely by q.
-            q = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0)
-            asc = ((q * 2 * j) & k) == 0
-            lo = jnp.minimum(a, b)
-            hi = jnp.maximum(a, b)
-            first = jnp.where(asc, lo, hi)
-            second = jnp.where(asc, hi, lo)
-            x = jnp.stack([first, second], axis=1).reshape(n)
-    o_ref[...] = x.reshape(1, n)
+from .frontend import Launch, StreamKernel, require_power_of_two
+from .registry import KernelEntry, register_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch(x2d, interpret: bool = True):
+def _prepare(x):
+    require_power_of_two(x.shape[0], "bitonic network")
+    return (x.reshape(1, -1),), None, None
+
+
+def _body(static):
+    def body(x_ref, o_ref):
+        n = x_ref.shape[1]
+        x = x_ref[...].reshape(n)
+        stages = int(math.log2(n))
+        for ks in range(1, stages + 1):        # k = 2**ks
+            k = 1 << ks
+            for js in range(ks - 1, -1, -1):   # j = 2**js
+                j = 1 << js
+                X = x.reshape(n // (2 * j), 2, j)
+                a = X[:, 0, :]
+                b = X[:, 1, :]
+                # ascending iff (i & k) == 0; i = q·2j + h·j + r and k ≥ 2j,
+                # so the k-bit of i is carried entirely by q.
+                q = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0)
+                asc = ((q * 2 * j) & k) == 0
+                lo = jnp.minimum(a, b)
+                hi = jnp.maximum(a, b)
+                first = jnp.where(asc, lo, hi)
+                second = jnp.where(asc, hi, lo)
+                x = jnp.stack([first, second], axis=1).reshape(n)
+        o_ref[...] = x.reshape(1, n)
+
+    return body
+
+
+def _launch(static, x2d):
     n = x2d.shape[1]
-    fn = ssr_pallas(
-        _body,
+    return Launch(
         grid=(1,),
-        in_streams=[BlockStream((1, n), lambda i: (0, 0), name="x")],
-        out_streams=[BlockStream((1, n), lambda i: (0, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct((1, n), x2d.dtype)],
-        interpret=interpret,
+        in_streams=(BlockStream((1, n), lambda i: (0, 0), name="x"),),
+        out_streams=(BlockStream((1, n), lambda i: (0, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct((1, n), x2d.dtype),),
     )
-    return fn(x2d)
 
 
-def ssr_sort(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+_ssr = StreamKernel("bitonic", prepare=_prepare, launch=_launch, body=_body,
+                    finish=lambda out, _: out.reshape(-1))
+
+
+def ssr_sort(x: jax.Array, *, interpret=None) -> jax.Array:
     """Ascending sort of a power-of-two length vector."""
-    n = x.shape[0]
-    if n & (n - 1):
-        raise ValueError("bitonic network needs power-of-two length")
-    return _dispatch(x.reshape(1, n), interpret).reshape(-1)
+    return _ssr(x, interpret=interpret)
+
+
+@register_kernel("bitonic")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        n = 64 if odd else 1024    # no odd sizes: the network requires 2^k
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),), {})
+
+    return KernelEntry(name="bitonic", ssr=ssr_sort, ref=ref.sort_ref,
+                       example=example, tol={"rtol": 0.0, "atol": 0.0},
+                       problem="sort network, n=1024")

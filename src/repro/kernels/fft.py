@@ -11,15 +11,16 @@ native complex tiles — hardware adaptation note in DESIGN.md).
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
+
+from .frontend import Launch, StreamKernel, promote, require_power_of_two
+from .registry import KernelEntry, register_kernel
 
 
 def twiddle_tables(n: int) -> tuple[np.ndarray, np.ndarray]:
@@ -40,63 +41,83 @@ def twiddle_tables(n: int) -> tuple[np.ndarray, np.ndarray]:
     return wr, wi
 
 
-def _body(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
-    n = xr_ref.shape[1]
-    stages = int(math.log2(n))
-    xr = xr_ref[...].reshape(n).astype(jnp.float32)
-    xi = xi_ref[...].reshape(n).astype(jnp.float32)
-    s_stride = 1
-    nc = n
-    for s in range(stages):                    # static unroll
-        m = nc // 2
-        Xr = xr.reshape(nc, s_stride)
-        Xi = xi.reshape(nc, s_stride)
-        ar, ai = Xr[:m], Xi[:m]
-        br, bi = Xr[m:], Xi[m:]
-        wr = wr_ref[s, :m].reshape(m, 1)
-        wi = wi_ref[s, :m].reshape(m, 1)
-        er, ei = ar + br, ai + bi              # even outputs
-        dr, di = ar - br, ai - bi
-        orr = dr * wr - di * wi                # odd outputs: (a−b)·w
-        oii = dr * wi + di * wr
-        xr = jnp.stack([er, orr], axis=1).reshape(nc * s_stride)
-        xi = jnp.stack([ei, oii], axis=1).reshape(nc * s_stride)
-        nc //= 2
-        s_stride *= 2
-    or_ref[...] = xr.reshape(1, n)
-    oi_ref[...] = xi.reshape(1, n)
+def _prepare(re, im):
+    n = re.shape[0]
+    require_power_of_two(n, "radix-2 FFT")
+    wr, wi = twiddle_tables(n)
+    return (re.reshape(1, n), im.reshape(1, n),
+            jnp.asarray(wr), jnp.asarray(wi)), None, None
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch(xr, xi, wr, wi, interpret: bool = True):
+def _body(static):
+    def body(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+        n = xr_ref.shape[1]
+        stages = int(math.log2(n))
+        xr = promote(xr_ref[...]).reshape(n)
+        xi = promote(xi_ref[...]).reshape(n)
+        s_stride = 1
+        nc = n
+        for s in range(stages):                # static unroll
+            m = nc // 2
+            Xr = xr.reshape(nc, s_stride)
+            Xi = xi.reshape(nc, s_stride)
+            ar, ai = Xr[:m], Xi[:m]
+            br, bi = Xr[m:], Xi[m:]
+            wr = wr_ref[s, :m].reshape(m, 1)
+            wi = wi_ref[s, :m].reshape(m, 1)
+            er, ei = ar + br, ai + bi          # even outputs
+            dr, di = ar - br, ai - bi
+            orr = dr * wr - di * wi            # odd outputs: (a−b)·w
+            oii = dr * wi + di * wr
+            xr = jnp.stack([er, orr], axis=1).reshape(nc * s_stride)
+            xi = jnp.stack([ei, oii], axis=1).reshape(nc * s_stride)
+            nc //= 2
+            s_stride *= 2
+        or_ref[...] = xr.reshape(1, n)
+        oi_ref[...] = xi.reshape(1, n)
+
+    return body
+
+
+def _launch(static, xr, xi, wr, wi):
     n = xr.shape[1]
-    fn = ssr_pallas(
-        _body,
+    return Launch(
         grid=(1,),
-        in_streams=[
+        in_streams=(
             BlockStream((1, n), lambda i: (0, 0), name="xr"),
             BlockStream((1, n), lambda i: (0, 0), name="xi"),
             BlockStream(wr.shape, lambda i: (0, 0), name="wr"),
             BlockStream(wi.shape, lambda i: (0, 0), name="wi"),
-        ],
-        out_streams=[
+        ),
+        out_streams=(
             BlockStream((1, n), lambda i: (0, 0), Direction.WRITE, name="yr"),
             BlockStream((1, n), lambda i: (0, 0), Direction.WRITE, name="yi"),
-        ],
-        out_shapes=[jax.ShapeDtypeStruct((1, n), jnp.float32),
-                    jax.ShapeDtypeStruct((1, n), jnp.float32)],
-        interpret=interpret,
+        ),
+        out_shapes=(jax.ShapeDtypeStruct((1, n), jnp.float32),
+                    jax.ShapeDtypeStruct((1, n), jnp.float32)),
     )
-    return fn(xr, xi, wr, wi)
+
+
+_ssr = StreamKernel(
+    "fft", prepare=_prepare, launch=_launch, body=_body,
+    finish=lambda out, _: (out[0].reshape(-1), out[1].reshape(-1)))
 
 
 def ssr_fft(re: jax.Array, im: jax.Array, *,
-            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+            interpret=None) -> tuple[jax.Array, jax.Array]:
     """Forward DFT of a power-of-two length vector, split re/im."""
-    n = re.shape[0]
-    if n & (n - 1):
-        raise ValueError("radix-2 FFT needs power-of-two length")
-    wr, wi = twiddle_tables(n)
-    yr, yi = _dispatch(re.reshape(1, n), im.reshape(1, n),
-                       jnp.asarray(wr), jnp.asarray(wi), interpret)
-    return yr.reshape(-1), yi.reshape(-1)
+    return _ssr(re, im, interpret=interpret)
+
+
+@register_kernel("fft")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        n = 256 if odd else 2048   # no odd sizes: radix-2 requires 2^k
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
+
+    return KernelEntry(name="fft", ssr=ssr_fft, ref=ref.fft_ref,
+                       example=example, tol={"rtol": 1e-3, "atol": 5e-2},
+                       problem="radix-2, n=2048")

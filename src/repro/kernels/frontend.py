@@ -1,0 +1,169 @@
+"""Shared kernel frontend: pad → reshape → stream dispatch → trim, once.
+
+Every kernel in the suite used to re-implement the same four steps around
+its compute body: zero-pad operands to whole VMEM blocks, reshape to the
+2-D (rows, lanes) layout the streams address, build + jit the ``ssr_pallas``
+call, and trim the padding off the result.  :class:`StreamKernel` owns that
+pipeline; a kernel module now declares only
+
+* ``prepare`` — operand canonicalisation (pure jnp pad/reshape, usually one
+  of the helpers below),
+* ``launch``  — the stream geometry (grid, BlockStreams, out shapes,
+  scratch) as a :class:`Launch`,
+* ``body``    — the compute region builder (``body(static) -> callable``),
+* ``finish``  — result trimming.
+
+Built kernels are cached on (static meta, operand shapes/dtypes, interpret),
+so repeated calls reuse the jitted ``pallas_call`` exactly like the old
+per-module ``functools.partial(jax.jit, static_argnames=…)`` dispatchers —
+but in one place.  ``interpret=None`` autodetects: Mosaic on a real TPU,
+interpreter elsewhere.
+
+Dtype policy: bodies compute in :data:`COMPUTE_DTYPE` (f32 — the MXU/VPU
+accumulation width) regardless of storage dtype; :func:`promote` is the one
+place that states it.
+
+:class:`MonolithicKernel` is the same contract for the *baseline* variants:
+a single-step ``pallas_call`` whose body walks blocks with explicit loads —
+the paper's serialised load→compute issue — with the identical caching and
+pad/trim treatment, so "baseline" and "ssr" differ only in how operands are
+delivered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import BlockStream  # noqa: F401  (re-export for kernels)
+from repro.core.ssr import _on_tpu, ssr_pallas
+
+ROWS = 8
+LANES = 128
+BLOCK_ELEMS = ROWS * LANES
+COMPUTE_DTYPE = jnp.float32
+
+
+def promote(x: jax.Array) -> jax.Array:
+    """Cast a block to the compute dtype (f32 accumulation everywhere)."""
+    return x.astype(COMPUTE_DTYPE)
+
+
+# -- operand canonicalisation helpers ---------------------------------------
+
+
+def pad_vector(x: jax.Array, *, block: int = BLOCK_ELEMS,
+               lanes: int = LANES) -> jax.Array:
+    """Zero-pad a 1-D array to whole blocks; reshape to (rows, lanes)."""
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape(-1, lanes)
+
+
+def trim_vector(out: jax.Array, n: int) -> jax.Array:
+    """Undo :func:`pad_vector`: flatten and drop the padding tail."""
+    return out.reshape(-1)[:n]
+
+
+def pad_leading(a: jax.Array, mult: int) -> jax.Array:
+    """Zero-pad the leading (row) dim of a matrix to a multiple of ``mult``."""
+    pad = (-a.shape[0]) % mult
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    return a
+
+
+def require_power_of_two(n: int, what: str) -> None:
+    if n & (n - 1):
+        raise ValueError(f"{what} needs a power-of-two length, got {n}")
+
+
+# -- declarative kernel shells ----------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Launch:
+    """One kernel's stream geometry, as declared by its module."""
+
+    grid: Tuple[int, ...]
+    in_streams: Tuple[BlockStream, ...]
+    out_streams: Tuple[BlockStream, ...]
+    out_shapes: Tuple[jax.ShapeDtypeStruct, ...]
+    scratch_shapes: Tuple[Any, ...] = ()
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+
+
+class _KernelBase:
+    """Shared call pipeline: prepare → cached build → run → finish."""
+
+    def __init__(self, name: str, *, prepare: Callable,
+                 finish: Optional[Callable] = None):
+        self.name = name
+        self._prepare = prepare
+        self._finish = finish
+        self._cache: Dict[Any, Callable] = {}
+
+    def _build(self, static, arrays, interpret: bool) -> Callable:
+        raise NotImplementedError
+
+    def __call__(self, *args, interpret: Optional[bool] = None, **params):
+        arrays, static, final = self._prepare(*args, **params)
+        arrays = tuple(arrays)
+        if interpret is None:
+            interpret = not _on_tpu()
+        key = (static,
+               tuple((a.shape, str(a.dtype)) for a in arrays),
+               bool(interpret))
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._build(static, arrays, bool(interpret))
+            self._cache[key] = fn
+        out = fn(*arrays)
+        return self._finish(out, final) if self._finish else out
+
+
+class StreamKernel(_KernelBase):
+    """A streamed (SSR) kernel: geometry from ``launch``, body per block."""
+
+    def __init__(self, name: str, *, prepare: Callable, launch: Callable,
+                 body: Callable, finish: Optional[Callable] = None):
+        super().__init__(name, prepare=prepare, finish=finish)
+        self._launch = launch
+        self._body = body
+
+    def _build(self, static, arrays, interpret: bool) -> Callable:
+        lc: Launch = self._launch(static, *arrays)
+        return ssr_pallas(
+            self._body(static),
+            grid=lc.grid,
+            in_streams=list(lc.in_streams),
+            out_streams=list(lc.out_streams),
+            out_shapes=list(lc.out_shapes),
+            scratch_shapes=list(lc.scratch_shapes),
+            interpret=interpret,
+            dimension_semantics=lc.dimension_semantics,
+        )
+
+
+class MonolithicKernel(_KernelBase):
+    """A baseline kernel: one grid step, explicit in-body block walk."""
+
+    def __init__(self, name: str, *, prepare: Callable, body: Callable,
+                 out_shape: Callable, finish: Optional[Callable] = None):
+        super().__init__(name, prepare=prepare, finish=finish)
+        self._body = body
+        self._out_shape = out_shape
+
+    def _build(self, static, arrays, interpret: bool) -> Callable:
+        call = pl.pallas_call(
+            self._body(static),
+            out_shape=self._out_shape(static, *arrays),
+            interpret=interpret,
+        )
+        return jax.jit(call)

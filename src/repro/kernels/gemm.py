@@ -15,65 +15,23 @@ with MXU-aligned default tiles.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction, auto_block, ssr_pallas
+from repro.core import BlockStream, Direction, auto_block
+
+from .frontend import Launch, MonolithicKernel, StreamKernel
+from .registry import KernelEntry, register_kernel
 
 
-def _body(a_ref, b_ref, o_ref, acc_ref):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jax.lax.dot_general(
-        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(k == pl.num_programs(2) - 1)
-    def _write():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
-def _dispatch(a, b, bm, bn, bk, out_dtype, interpret: bool = True):
-    m, kdim = a.shape
-    _, n = b.shape
-    grid = (m // bm, n // bn, kdim // bk)
-    fn = ssr_pallas(
-        _body,
-        grid=grid,
-        in_streams=[
-            # A ignores j: block reuse across the n axis (repeat semantics)
-            BlockStream((bm, bk), lambda i, j, k: (i, k), name="A"),
-            BlockStream((bk, bn), lambda i, j, k: (k, j), name="B"),
-        ],
-        out_streams=[BlockStream((bm, bn), lambda i, j, k: (i, j),
-                                 Direction.WRITE, name="C")],
-        out_shapes=[jax.ShapeDtypeStruct((m, n), out_dtype)],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-        dimension_semantics=("parallel", "parallel", "arbitrary"),
-    )
-    return fn(a, b)
-
-
-def ssr_matmul(a: jax.Array, b: jax.Array, *,
-               bm: int = 256, bn: int = 256, bk: int = 512,
-               out_dtype=None, interpret: bool = True) -> jax.Array:
-    """C = A·B with streamed operand delivery.  Pads to tile multiples."""
+def _prepare(a, b, bm=256, bn=256, bk=512, out_dtype=None):
     m, kdim = a.shape
     k2, n = b.shape
     if kdim != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
-    out_dtype = out_dtype or a.dtype
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
     bm = auto_block(m, bm, 8) if m % bm else bm
     bn = auto_block(n, bn, 128) if n % bn else bn
     bk = auto_block(kdim, bk, 128) if kdim % bk else bk
@@ -82,38 +40,119 @@ def ssr_matmul(a: jax.Array, b: jax.Array, *,
         a = jnp.pad(a, ((0, pm), (0, pk)))
     if pk or pn:
         b = jnp.pad(b, ((0, pk), (0, pn)))
-    out = _dispatch(a, b, bm, bn, bk, jnp.dtype(out_dtype).name, interpret)
-    return out[:m, :n]
+    return (a, b), (bm, bn, bk, out_dtype.name), (m, n)
 
 
-def _baseline_body(a_ref, b_ref, o_ref):
-    # Monolithic single-step kernel: operands resident, explicit k-walk with
-    # dynamic-slice loads — compute stalls behind each "load", no run-ahead.
-    m, kdim = a_ref.shape
-    n = b_ref.shape[1]
-    bk = min(kdim, 128)
+def _ssr_body(static):
+    def body(a_ref, b_ref, o_ref, acc_ref):
+        k = pl.program_id(2)
 
-    def step(i, acc):
-        a = a_ref[:, pl.dslice(i * bk, bk)]
-        b = b_ref[pl.dslice(i * bk, bk), :]
-        return acc + jax.lax.dot_general(
-            a, b, (((1,), (0,)), ((), ())),
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-    acc = jax.lax.fori_loop(0, kdim // bk, step,
-                            jnp.zeros((m, n), jnp.float32))
-    o_ref[...] = acc.astype(o_ref.dtype)
+        @pl.when(k == pl.num_programs(2) - 1)
+        def _write():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return body
 
 
-def baseline_matmul(a: jax.Array, b: jax.Array, *, out_dtype=None,
-                    interpret: bool = True) -> jax.Array:
-    out_dtype = out_dtype or a.dtype
+def _launch(static, a, b):
+    bm, bn, bk, out_dtype = static
+    m, kdim = a.shape
+    n = b.shape[1]
+    return Launch(
+        grid=(m // bm, n // bn, kdim // bk),
+        in_streams=(
+            # A ignores j: block reuse across the n axis (repeat semantics)
+            BlockStream((bm, bk), lambda i, j, k: (i, k), name="A"),
+            BlockStream((bk, bn), lambda i, j, k: (k, j), name="B"),
+        ),
+        out_streams=(BlockStream((bm, bn), lambda i, j, k: (i, j),
+                                 Direction.WRITE, name="C"),),
+        out_shapes=(jax.ShapeDtypeStruct((m, n), out_dtype),),
+        scratch_shapes=(pltpu.VMEM((bm, bn), jnp.float32),),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )
+
+
+_ssr = StreamKernel("gemm", prepare=_prepare, launch=_launch, body=_ssr_body,
+                    finish=lambda out, mn: out[:mn[0], :mn[1]])
+
+
+def ssr_matmul(a: jax.Array, b: jax.Array, *,
+               bm: int = 256, bn: int = 256, bk: int = 512,
+               out_dtype=None, interpret=None) -> jax.Array:
+    """C = A·B with streamed operand delivery.  Pads to tile multiples."""
+    return _ssr(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                interpret=interpret)
+
+
+def _prepare_base(a, b, out_dtype=None):
+    out_dtype = jnp.dtype(out_dtype or a.dtype)
     pk = (-a.shape[1]) % 128
     if pk:
         a = jnp.pad(a, ((0, 0), (0, pk)))
         b = jnp.pad(b, ((0, pk), (0, 0)))
-    return pl.pallas_call(
-        _baseline_body,
-        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), out_dtype),
-        interpret=interpret,
-    )(a, b)
+    return (a, b), out_dtype.name, None
+
+
+def _baseline_body(static):
+    def body(a_ref, b_ref, o_ref):
+        # Monolithic single-step kernel: operands resident, explicit k-walk
+        # with dynamic-slice loads — compute stalls behind each "load", no
+        # run-ahead.
+        m, kdim = a_ref.shape
+        n = b_ref.shape[1]
+        bk = min(kdim, 128)
+
+        def step(i, acc):
+            a = a_ref[:, pl.dslice(i * bk, bk)]
+            b = b_ref[pl.dslice(i * bk, bk), :]
+            return acc + jax.lax.dot_general(
+                a, b, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        acc = jax.lax.fori_loop(0, kdim // bk, step,
+                                jnp.zeros((m, n), jnp.float32))
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+    return body
+
+
+_base = MonolithicKernel(
+    "gemm", prepare=_prepare_base, body=_baseline_body,
+    out_shape=lambda out_dtype, a, b: jax.ShapeDtypeStruct(
+        (a.shape[0], b.shape[1]), out_dtype))
+
+
+def baseline_matmul(a: jax.Array, b: jax.Array, *, out_dtype=None,
+                    interpret=None) -> jax.Array:
+    return _base(a, b, out_dtype=out_dtype, interpret=interpret)
+
+
+@register_kernel("gemm")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def _ref(a, b, out_dtype=None, **tile_kw):
+        # the ``ssrcfg``-off path keeps the storage dtype unless overridden;
+        # tile-tuning kwargs (bm/bn/bk) only steer the streamed engine and
+        # are ignored here, so one call site works under both ssrcfg states
+        return ref.matmul_ref(a, b).astype(out_dtype or a.dtype)
+
+    def example(rng, odd: bool = False):
+        m, n, k = (100, 130, 70) if odd else (32, 32, 32)
+        return ((jnp.asarray(rng.standard_normal((m, k)), jnp.float32),
+                 jnp.asarray(rng.standard_normal((k, n)), jnp.float32)),
+                {"out_dtype": jnp.float32})
+
+    return KernelEntry(name="gemm", ssr=ssr_matmul, baseline=baseline_matmul,
+                       ref=_ref, example=example,
+                       tol={"rtol": 2e-4, "atol": 2e-4},
+                       problem="32×32 · 32×32")

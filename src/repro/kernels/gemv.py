@@ -9,78 +9,93 @@ panels.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-_ROWS = 8
+from .frontend import (ROWS, Launch, MonolithicKernel, StreamKernel,
+                       pad_leading, promote)
+from .registry import KernelEntry, register_kernel
 
 
-def _body(a_ref, x_ref, o_ref):
-    a = a_ref[...].astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)
-    o_ref[...] = jax.lax.dot_general(
-        a, x, (((1,), (1,)), ((), ())),
+def _matvec(a, x):
+    return jax.lax.dot_general(
+        promote(a), promote(x), (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch(a, x2d, interpret: bool = True):
+def _prepare(a, x):
     m, n = a.shape
-    grid = (m // _ROWS,)
-    fn = ssr_pallas(
-        _body,
-        grid=grid,
-        in_streams=[
-            BlockStream((_ROWS, n), lambda i: (i, 0), name="A"),
-            BlockStream((1, n), lambda i: (0, 0), name="x"),   # repeat stream
-        ],
-        out_streams=[BlockStream((_ROWS, 1), lambda i: (i, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct((m, 1), jnp.float32)],
-        interpret=interpret,
+    return (pad_leading(a, ROWS), x.reshape(1, n)), None, m
+
+
+def _ssr_body(static):
+    def body(a_ref, x_ref, o_ref):
+        o_ref[...] = _matvec(a_ref[...], x_ref[...])
+
+    return body
+
+
+def _launch(static, a, x2d):
+    m, n = a.shape
+    return Launch(
+        grid=(m // ROWS,),
+        in_streams=(
+            BlockStream((ROWS, n), lambda i: (i, 0), name="A"),
+            BlockStream((1, n), lambda i: (0, 0), name="x"),  # repeat stream
+        ),
+        out_streams=(BlockStream((ROWS, 1), lambda i: (i, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct((m, 1), jnp.float32),),
         dimension_semantics=("parallel",),
     )
-    return fn(a, x2d)
 
 
-def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    m, n = a.shape
-    pad_m = (-m) % _ROWS
-    if pad_m:
-        a = jnp.pad(a, ((0, pad_m), (0, 0)))
-    out = _dispatch(a, x.reshape(1, n), interpret)
-    return out.reshape(-1)[:m]
+_ssr = StreamKernel("gemv", prepare=_prepare, launch=_launch, body=_ssr_body,
+                    finish=lambda out, m: out.reshape(-1)[:m])
 
 
-def _baseline_body(a_ref, x_ref, o_ref):
-    m = a_ref.shape[0]
-    nblk = m // _ROWS
+def _baseline_body(static):
+    def body(a_ref, x_ref, o_ref):
+        nblk = a_ref.shape[0] // ROWS
 
-    def step(i, _):
-        a = a_ref[pl.dslice(i * _ROWS, _ROWS), :].astype(jnp.float32)
-        x = x_ref[...].astype(jnp.float32)
-        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = jax.lax.dot_general(
-            a, x, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        return 0
+        def step(i, _):
+            a = a_ref[pl.dslice(i * ROWS, ROWS), :]
+            o_ref[pl.dslice(i * ROWS, ROWS), :] = _matvec(a, x_ref[...])
+            return 0
 
-    jax.lax.fori_loop(0, nblk, step, 0)
+        jax.lax.fori_loop(0, nblk, step, 0)
+
+    return body
 
 
-def baseline_gemv(a: jax.Array, x: jax.Array, *,
-                  interpret: bool = True) -> jax.Array:
-    m, n = a.shape
-    pad_m = (-m) % _ROWS
-    if pad_m:
-        a = jnp.pad(a, ((0, pad_m), (0, 0)))
-    out = pl.pallas_call(
-        _baseline_body,
-        out_shape=jax.ShapeDtypeStruct((m + pad_m, 1), jnp.float32),
-        interpret=interpret,
-    )(a, x.reshape(1, n))
-    return out.reshape(-1)[:m]
+_base = MonolithicKernel(
+    "gemv", prepare=_prepare, body=_baseline_body,
+    out_shape=lambda static, a, x2d: jax.ShapeDtypeStruct((a.shape[0], 1),
+                                                          jnp.float32),
+    finish=lambda out, m: out.reshape(-1)[:m])
+
+
+def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret=None) -> jax.Array:
+    return _ssr(a, x, interpret=interpret)
+
+
+def baseline_gemv(a: jax.Array, x: jax.Array, *, interpret=None) -> jax.Array:
+    return _base(a, x, interpret=interpret)
+
+
+@register_kernel("gemv")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        m, n = (60, 64) if odd else (64, 64)
+        return ((jnp.asarray(rng.standard_normal((m, n)), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
+
+    return KernelEntry(name="gemv", ssr=ssr_gemv, baseline=baseline_gemv,
+                       ref=ref.gemv_ref, example=example,
+                       tol={"rtol": 1e-3, "atol": 1e-3},
+                       problem="64×64 · 64")

@@ -6,70 +6,53 @@ plain-XLA path outside it — the software form of the paper's opt-in CSR
 engine.  The XLA path is also what the multi-pod dry-run lowers (Pallas
 interpret mode is CPU-only scaffolding; on a real TPU fleet the flag enables
 the Mosaic kernels).
+
+Each function is a thin typed façade over :func:`registry.dispatch`; the
+registry owns the variant table, so adding a kernel means registering it
+once, not editing an import list here.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.region import ssr_enabled
-from . import ref
-from .attention import ssr_flash_attention
-from .bitonic import ssr_sort
-from .fft import ssr_fft
-from .gemm import ssr_matmul
-from .gemv import ssr_gemv
-from .reduction import ssr_dot
-from .relu import ssr_relu
-from .scan import ssr_scan
-from .stencil import ssr_stencil1d, ssr_stencil2d
-
-
-def _use_ssr(override: Optional[bool]) -> bool:
-    return ssr_enabled() if override is None else override
+from . import registry
 
 
 def dot(x, y, *, ssr: Optional[bool] = None):
-    return ssr_dot(x, y) if _use_ssr(ssr) else ref.dot_ref(x, y)
+    return registry.dispatch("reduction", x, y, ssr=ssr)
 
 
 def prefix_sum(x, *, ssr: Optional[bool] = None):
-    return ssr_scan(x) if _use_ssr(ssr) else ref.scan_ref(x)
+    return registry.dispatch("scan", x, ssr=ssr)
 
 
 def relu(x, *, ssr: Optional[bool] = None):
-    return ssr_relu(x) if _use_ssr(ssr) else ref.relu_ref(x)
+    return registry.dispatch("relu", x, ssr=ssr)
 
 
 def stencil1d(x, w, *, ssr: Optional[bool] = None):
-    return ssr_stencil1d(x, w) if _use_ssr(ssr) else ref.stencil1d_ref(x, w)
+    return registry.dispatch("stencil1d", x, w, ssr=ssr)
 
 
 def stencil2d(x, wx, wy, *, ssr: Optional[bool] = None):
-    if _use_ssr(ssr):
-        return ssr_stencil2d(x, wx, wy)
-    return ref.stencil2d_ref(x, wx, wy)
+    return registry.dispatch("stencil2d", x, wx, wy, ssr=ssr)
 
 
 def gemv(a, x, *, ssr: Optional[bool] = None):
-    return ssr_gemv(a, x) if _use_ssr(ssr) else ref.gemv_ref(a, x)
+    return registry.dispatch("gemv", a, x, ssr=ssr)
 
 
 def matmul(a, b, *, ssr: Optional[bool] = None, **kw):
-    if _use_ssr(ssr):
-        return ssr_matmul(a, b, **kw)
-    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    return registry.dispatch("gemm", a, b, ssr=ssr, **kw)
 
 
 def fft(re, im, *, ssr: Optional[bool] = None):
-    return ssr_fft(re, im) if _use_ssr(ssr) else ref.fft_ref(re, im)
+    return registry.dispatch("fft", re, im, ssr=ssr)
 
 
 def sort(x, *, ssr: Optional[bool] = None):
-    return ssr_sort(x) if _use_ssr(ssr) else ref.sort_ref(x)
+    return registry.dispatch("bitonic", x, ssr=ssr)
 
 
 def flash_attention(q, k, v, *, causal: bool = False,
@@ -77,8 +60,5 @@ def flash_attention(q, k, v, *, causal: bool = False,
                     scale: Optional[float] = None,
                     ssr: Optional[bool] = None):
     """Single-head attention; heads/batch via vmap (see models.attention)."""
-    if _use_ssr(ssr):
-        return ssr_flash_attention(q, k, v, causal=causal, window=window,
-                                   scale=scale)
-    return ref.attention_ref(q, k, v, causal=causal, window=window,
-                             scale=scale).astype(q.dtype)
+    return registry.dispatch("attention", q, k, v, causal=causal,
+                             window=window, scale=scale, ssr=ssr)

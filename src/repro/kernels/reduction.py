@@ -16,100 +16,98 @@ serialised load→compute issue.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-_BLOCK_ROWS = 8
-_LANES = 128
-BLOCK_ELEMS = _BLOCK_ROWS * _LANES
-
-
-def _ssr_body(x_ref, y_ref, o_ref, acc_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...].astype(jnp.float32)
-    y = y_ref[...].astype(jnp.float32)
-    acc_ref[...] += jnp.sum(x * y).reshape(1, 1)
-
-    @pl.when(i == pl.num_programs(0) - 1)
-    def _write():
-        o_ref[...] = acc_ref[...]
+from .frontend import (BLOCK_ELEMS, LANES, ROWS, Launch, MonolithicKernel,
+                       StreamKernel, pad_vector, promote)
+from .registry import KernelEntry, register_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch_ssr(x2d: jax.Array, y2d: jax.Array, interpret: bool = True):
-    rows = x2d.shape[0]
-    grid = (rows // _BLOCK_ROWS,)
-    fn = ssr_pallas(
-        _ssr_body,
-        grid=grid,
-        in_streams=[
-            BlockStream((_BLOCK_ROWS, _LANES), lambda i: (i, 0), name="x"),
-            BlockStream((_BLOCK_ROWS, _LANES), lambda i: (i, 0), name="y"),
-        ],
-        out_streams=[
-            BlockStream((1, 1), lambda i: (0, 0), Direction.WRITE, name="acc"),
-        ],
-        out_shapes=[jax.ShapeDtypeStruct((1, 1), jnp.float32)],
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
-        interpret=interpret,
+def _prepare(x, y):
+    return (pad_vector(x), pad_vector(y)), None, None
+
+
+def _ssr_body(static):
+    def body(x_ref, y_ref, o_ref, acc_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.sum(
+            promote(x_ref[...]) * promote(y_ref[...])).reshape(1, 1)
+
+        @pl.when(i == pl.num_programs(0) - 1)
+        def _write():
+            o_ref[...] = acc_ref[...]
+
+    return body
+
+
+def _launch(static, x2d, y2d):
+    return Launch(
+        grid=(x2d.shape[0] // ROWS,),
+        in_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0), name="x"),
+                    BlockStream((ROWS, LANES), lambda i: (i, 0), name="y")),
+        out_streams=(BlockStream((1, 1), lambda i: (0, 0), Direction.WRITE,
+                                 name="acc"),),
+        out_shapes=(jax.ShapeDtypeStruct((1, 1), jnp.float32),),
+        scratch_shapes=(pltpu.VMEM((1, 1), jnp.float32),),
         dimension_semantics=("arbitrary",),
     )
-    return fn(x2d, y2d)[0, 0]
 
 
-def ssr_dot(x: jax.Array, y: jax.Array, *, interpret: bool = True) -> jax.Array:
+_ssr = StreamKernel("reduction", prepare=_prepare, launch=_launch,
+                    body=_ssr_body, finish=lambda out, _: out[0, 0])
+
+
+def _baseline_body(static):
+    def body(x_ref, y_ref, o_ref):
+        nblk = x_ref.shape[0] // ROWS
+
+        def step(i, acc):
+            # Explicit "loads": dynamic-slice fetch + compute, serialised.
+            x = x_ref[pl.dslice(i * ROWS, ROWS), :]
+            y = y_ref[pl.dslice(i * ROWS, ROWS), :]
+            return acc + jnp.sum(promote(x) * promote(y))
+
+        o_ref[...] = jax.lax.fori_loop(
+            0, nblk, step, jnp.float32(0)).reshape(1, 1)
+
+    return body
+
+
+_base = MonolithicKernel(
+    "reduction", prepare=_prepare, body=_baseline_body,
+    out_shape=lambda static, *arrs: jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    finish=lambda out, _: out[0, 0])
+
+
+def ssr_dot(x: jax.Array, y: jax.Array, *, interpret=None) -> jax.Array:
     """Streamed dot product. n is padded up to a whole number of blocks."""
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-        y = jnp.pad(y, (0, pad))
-    rows = (n + pad) // _LANES
-    return _dispatch_ssr(x.reshape(rows, _LANES), y.reshape(rows, _LANES),
-                         interpret)
+    return _ssr(x, y, interpret=interpret)
 
 
-def _baseline_body(x_ref, y_ref, o_ref):
-    rows = x_ref.shape[0]
-    nblk = rows // _BLOCK_ROWS
-
-    def step(i, acc):
-        # Explicit "loads": dynamic-slice fetch + compute, serialised.
-        x = x_ref[pl.dslice(i * _BLOCK_ROWS, _BLOCK_ROWS), :]
-        y = y_ref[pl.dslice(i * _BLOCK_ROWS, _BLOCK_ROWS), :]
-        return acc + jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
-
-    o_ref[...] = jax.lax.fori_loop(0, nblk, step, jnp.float32(0)).reshape(1, 1)
+def baseline_dot(x: jax.Array, y: jax.Array, *, interpret=None) -> jax.Array:
+    return _base(x, y, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch_base(x2d, y2d, interpret: bool = True):
-    out = pl.pallas_call(
-        _baseline_body,
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )(x2d, y2d)
-    return out[0, 0]
+@register_kernel("reduction")
+def _entry() -> KernelEntry:
+    from . import ref
 
+    def example(rng, odd: bool = False):
+        n = 5000 if odd else 2048
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
 
-def baseline_dot(x: jax.Array, y: jax.Array, *,
-                 interpret: bool = True) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-        y = jnp.pad(y, (0, pad))
-    rows = (n + pad) // _LANES
-    return _dispatch_base(x.reshape(rows, _LANES), y.reshape(rows, _LANES),
-                          interpret)
+    return KernelEntry(name="reduction", ssr=ssr_dot, baseline=baseline_dot,
+                       ref=ref.dot_ref, example=example,
+                       tol={"rtol": 1e-2, "atol": 1e-2},
+                       problem="dot product, n=2048")

@@ -1,0 +1,125 @@
+"""Kernel registry: one uniform handle per kernel in the suite.
+
+Benchmarks, equivalence tests, and the ``ssrcfg`` dispatch layer used to
+hand-maintain parallel import lists of the kernel modules; adding a kernel
+meant editing four files.  Now a module self-registers at import time:
+
+    @register_kernel("reduction")
+    def _entry():
+        return KernelEntry(name="reduction", ssr=ssr_dot,
+                           baseline=baseline_dot, ref=ref.dot_ref,
+                           example=_example)
+
+and every consumer iterates :func:`entries`:
+
+* ``benchmarks/kernel_bench.py`` times each entry's ``ref`` path and smoke-
+  runs its ``ssr`` path from the same ``example`` factory;
+* ``tests/test_registry.py`` asserts ``ssr == baseline == ref`` per entry on
+  non-multiple-of-block sizes;
+* ``repro.kernels.ops`` routes its public functions through
+  :func:`dispatch`, which consults ``region.ssr_enabled()`` — the software
+  ``ssrcfg`` CSR — to pick the streamed or plain-XLA variant.
+
+Entries are lazy (factories resolved on first access) so registration adds
+zero import cost and no cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.region import ssr_enabled
+
+# Every module under repro.kernels that registers at least one kernel.  This
+# is the single place the suite is enumerated; consumers iterate the
+# registry, never this tuple.
+_KERNEL_MODULES = ("reduction", "scan", "relu", "stencil", "gemv", "gemm",
+                   "fft", "bitonic", "attention")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class KernelEntry:
+    """One kernel's public variants.
+
+    ``ssr``      — streamed Pallas kernel (operands delivered by BlockStreams)
+    ``baseline`` — monolithic Pallas kernel with explicit in-body loads
+                   (``None`` where the paper has no meaningful baseline)
+    ``ref``      — pure-jnp oracle, also the ``ssrcfg``-off execution path
+    ``example``  — ``example(rng, odd=False) -> (args, kwargs)`` sample-input
+                   factory; ``odd=True`` yields non-multiple-of-block sizes
+    ``tol``      — allclose tolerances for ssr/baseline-vs-ref comparisons
+    ``problem``  — human-readable §4.2 problem description
+    """
+
+    name: str
+    ssr: Callable
+    ref: Callable
+    baseline: Optional[Callable] = None
+    example: Optional[Callable] = None
+    tol: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {"rtol": 1e-3, "atol": 1e-3})
+    problem: str = ""
+
+    def variants(self) -> Dict[str, Callable]:
+        out = {"ssr": self.ssr, "ref": self.ref}
+        if self.baseline is not None:
+            out["baseline"] = self.baseline
+        return out
+
+
+_FACTORIES: Dict[str, Callable[[], KernelEntry]] = {}
+_RESOLVED: Dict[str, KernelEntry] = {}
+
+
+def register_kernel(name: str):
+    """Class/function decorator registering a lazy :class:`KernelEntry`."""
+
+    def deco(factory: Callable[[], KernelEntry]):
+        if name in _FACTORIES:
+            raise ValueError(f"kernel {name!r} registered twice")
+        _FACTORIES[name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    for mod in _KERNEL_MODULES:
+        importlib.import_module(f"repro.kernels.{mod}")
+
+
+def names() -> List[str]:
+    _ensure_loaded()
+    return sorted(_FACTORIES)
+
+
+def get(name: str) -> KernelEntry:
+    _ensure_loaded()
+    if name not in _RESOLVED:
+        if name not in _FACTORIES:
+            raise KeyError(
+                f"no kernel {name!r}; registered: {sorted(_FACTORIES)}")
+        entry = _FACTORIES[name]()
+        if entry.name != name:
+            raise ValueError(
+                f"entry name {entry.name!r} != registered name {name!r}")
+        _RESOLVED[name] = entry
+    return _RESOLVED[name]
+
+
+def entries() -> List[KernelEntry]:
+    return [get(n) for n in names()]
+
+
+def dispatch(name: str, *args, ssr: Optional[bool] = None, **kwargs):
+    """Run a kernel through the ``ssrcfg`` gate (paper §2.2.2).
+
+    ``ssr=None`` consults :func:`region.ssr_enabled`; semantics are identical
+    either way — only the execution engine changes.
+    """
+    entry = get(name)
+    use = ssr_enabled() if ssr is None else ssr
+    fn = entry.ssr if use else entry.ref
+    return fn(*args, **kwargs)

@@ -7,81 +7,91 @@ SSR structure is identical (§4.2 uses ReLU as the representative).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-_ROWS = 8
-_LANES = 128
-BLOCK_ELEMS = _ROWS * _LANES
-
-
-def _make_body(fn: Callable[[jax.Array], jax.Array]):
-    def body(x_ref, o_ref):
-        o_ref[...] = fn(x_ref[...])
-    return body
-
-
-@functools.partial(jax.jit, static_argnames=("fn", "interpret"))
-def _dispatch(x2d, fn, interpret: bool = True):
-    grid = (x2d.shape[0] // _ROWS,)
-    call = ssr_pallas(
-        _make_body(fn),
-        grid=grid,
-        in_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0), name="x")],
-        out_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)],
-        interpret=interpret,
-        dimension_semantics=("parallel",),
-    )
-    return call(x2d)
+from .frontend import (LANES, ROWS, Launch, MonolithicKernel, StreamKernel,
+                       pad_vector, trim_vector)
+from .registry import KernelEntry, register_kernel
 
 
 def _relu(x):
     return jnp.maximum(x, jnp.zeros((), x.dtype))
 
 
-def ssr_elementwise(x: jax.Array, fn: Callable, *,
-                    interpret: bool = True) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    rows = (n + pad) // _LANES
-    return _dispatch(x.reshape(rows, _LANES), fn, interpret).reshape(-1)[:n]
+def _prepare(x, fn=_relu):
+    return (pad_vector(x),), fn, x.shape[0]
 
 
-def ssr_relu(x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    return ssr_elementwise(x, _relu, interpret=interpret)
+def _ssr_body(fn):
+    def body(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...])
+
+    return body
 
 
-def _baseline_body(x_ref, o_ref):
-    rows = x_ref.shape[0]
-    nblk = rows // _ROWS
+def _launch(fn, x2d):
+    return Launch(
+        grid=(x2d.shape[0] // ROWS,),
+        in_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0), name="x"),),
+        out_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),),
+        dimension_semantics=("parallel",),
+    )
 
-    def step(i, _):
-        blk = x_ref[pl.dslice(i * _ROWS, _ROWS), :]
-        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = _relu(blk)
-        return 0
 
-    jax.lax.fori_loop(0, nblk, step, 0)
+_ssr = StreamKernel("relu", prepare=_prepare, launch=_launch, body=_ssr_body,
+                    finish=trim_vector)
 
 
-def baseline_relu(x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    rows = (n + pad) // _LANES
-    out = pl.pallas_call(
-        _baseline_body,
-        out_shape=jax.ShapeDtypeStruct((rows, _LANES), x.dtype),
-        interpret=interpret,
-    )(x.reshape(rows, _LANES))
-    return out.reshape(-1)[:n]
+def _baseline_body(fn):
+    def body(x_ref, o_ref):
+        nblk = x_ref.shape[0] // ROWS
+
+        def step(i, _):
+            blk = x_ref[pl.dslice(i * ROWS, ROWS), :]
+            o_ref[pl.dslice(i * ROWS, ROWS), :] = fn(blk)
+            return 0
+
+        jax.lax.fori_loop(0, nblk, step, 0)
+
+    return body
+
+
+_base = MonolithicKernel(
+    "relu", prepare=_prepare, body=_baseline_body,
+    out_shape=lambda fn, x2d: jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+    finish=trim_vector)
+
+
+def ssr_elementwise(x: jax.Array, fn: Callable, *, interpret=None):
+    """Streamed elementwise unary: one read stream, one write stream."""
+    return _ssr(x, fn, interpret=interpret)
+
+
+def ssr_relu(x: jax.Array, *, interpret=None) -> jax.Array:
+    return _ssr(x, interpret=interpret)
+
+
+def baseline_relu(x: jax.Array, *, interpret=None) -> jax.Array:
+    return _base(x, interpret=interpret)
+
+
+@register_kernel("relu")
+def _entry() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        n = 1025 if odd else 1024
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),), {})
+
+    return KernelEntry(name="relu", ssr=ssr_relu, baseline=baseline_relu,
+                       ref=ref.relu_ref, example=example,
+                       tol={"rtol": 0.0, "atol": 0.0},
+                       problem="max(0,x), n=1024")

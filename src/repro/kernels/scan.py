@@ -9,89 +9,95 @@ but the *fetch* of block i+1 still overlaps the compute of block i.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-_ROWS = 8
-_LANES = 128
-BLOCK_ELEMS = _ROWS * _LANES
-
-
-def _ssr_body(x_ref, o_ref, carry_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        carry_ref[...] = jnp.zeros_like(carry_ref)
-
-    flat = x_ref[...].astype(jnp.float32).reshape(-1)
-    csum = jnp.cumsum(flat)
-    o_ref[...] = (csum + carry_ref[0, 0]).reshape(_ROWS, _LANES)
-    carry_ref[...] = (carry_ref[0, 0] + csum[-1]).reshape(1, 1)
+from .frontend import (LANES, ROWS, Launch, MonolithicKernel, StreamKernel,
+                       pad_vector, promote, trim_vector)
+from .registry import KernelEntry, register_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch(x2d: jax.Array, interpret: bool = True) -> jax.Array:
-    grid = (x2d.shape[0] // _ROWS,)
-    fn = ssr_pallas(
-        _ssr_body,
-        grid=grid,
-        in_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0), name="x")],
-        out_streams=[BlockStream((_ROWS, _LANES), lambda i: (i, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct(x2d.shape, jnp.float32)],
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
-        interpret=interpret,
+def _prepare(x):
+    return (pad_vector(x),), None, x.shape[0]
+
+
+def _ssr_body(static):
+    def body(x_ref, o_ref, carry_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+
+        csum = jnp.cumsum(promote(x_ref[...]).reshape(-1))
+        o_ref[...] = (csum + carry_ref[0, 0]).reshape(ROWS, LANES)
+        carry_ref[...] = (carry_ref[0, 0] + csum[-1]).reshape(1, 1)
+
+    return body
+
+
+def _launch(static, x2d):
+    return Launch(
+        grid=(x2d.shape[0] // ROWS,),
+        in_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0), name="x"),),
+        out_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct(x2d.shape, jnp.float32),),
+        scratch_shapes=(pltpu.VMEM((1, 1), jnp.float32),),
         dimension_semantics=("arbitrary",),
     )
-    return fn(x2d)
 
 
-def ssr_scan(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+_ssr = StreamKernel("scan", prepare=_prepare, launch=_launch, body=_ssr_body,
+                    finish=trim_vector)
+
+
+def _baseline_body(static):
+    def body(x_ref, o_ref):
+        # Monolithic: single grid step, in-body block walk, explicit loads.
+        nblk = x_ref.shape[0] // ROWS
+
+        def step(i, carry):
+            x = promote(x_ref[pl.dslice(i * ROWS, ROWS), :])
+            csum = jnp.cumsum(x.reshape(-1))
+            o_ref[pl.dslice(i * ROWS, ROWS), :] = (
+                (csum + carry).reshape(ROWS, LANES))
+            return carry + csum[-1]
+
+        jax.lax.fori_loop(0, nblk, step, jnp.float32(0))
+
+    return body
+
+
+_base = MonolithicKernel(
+    "scan", prepare=_prepare, body=_baseline_body,
+    out_shape=lambda static, x2d: jax.ShapeDtypeStruct(x2d.shape,
+                                                       jnp.float32),
+    finish=trim_vector)
+
+
+def ssr_scan(x: jax.Array, *, interpret=None) -> jax.Array:
     """Inclusive prefix sum; input padded to whole blocks, result trimmed."""
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    rows = (n + pad) // _LANES
-    out = _dispatch(x.reshape(rows, _LANES), interpret)
-    return out.reshape(-1)[:n]
+    return _ssr(x, interpret=interpret)
 
 
-def _baseline_body(x_ref, o_ref):
-    # Monolithic: single grid step, in-body block walk with explicit loads.
-    rows = x_ref.shape[0]
-    nblk = rows // _ROWS
-
-    def step(i, carry):
-        x = x_ref[pl.dslice(i * _ROWS, _ROWS), :].astype(jnp.float32)
-        csum = jnp.cumsum(x.reshape(-1))
-        o_ref[pl.dslice(i * _ROWS, _ROWS), :] = (
-            (csum + carry).reshape(_ROWS, _LANES))
-        return carry + csum[-1]
-
-    jax.lax.fori_loop(0, nblk, step, jnp.float32(0))
+def baseline_scan(x: jax.Array, *, interpret=None) -> jax.Array:
+    return _base(x, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch_base(x2d, interpret: bool = True):
-    return pl.pallas_call(
-        _baseline_body,
-        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
-        interpret=interpret,
-    )(x2d)
+@register_kernel("scan")
+def _entry() -> KernelEntry:
+    from . import ref
 
+    def example(rng, odd: bool = False):
+        n = 3000 if odd else 4096
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),), {})
 
-def baseline_scan(x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % BLOCK_ELEMS
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    rows = (n + pad) // _LANES
-    return _dispatch_base(x.reshape(rows, _LANES), interpret).reshape(-1)[:n]
+    return KernelEntry(name="scan", ssr=ssr_scan, baseline=baseline_scan,
+                       ref=ref.scan_ref, example=example,
+                       tol={"rtol": 1e-3, "atol": 1e-3},
+                       problem="prefix sums, n=4096")

@@ -15,120 +15,183 @@ grid; the two arm loops unroll statically.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, ssr_pallas
+from repro.core import BlockStream, Direction
 
-_LANES = 128
+from .frontend import (LANES, Launch, MonolithicKernel, StreamKernel,
+                       promote, trim_vector)
+from .registry import KernelEntry, register_kernel
+
 TAPS = 11
 
 
-def _body_1d(lo_ref, hi_ref, w_ref, o_ref):
-    window = jnp.concatenate(
-        [lo_ref[...].astype(jnp.float32), hi_ref[...].astype(jnp.float32)],
-        axis=1)
-    acc = jnp.zeros((1, _LANES), jnp.float32)
-    for j in range(TAPS):                      # static unroll: fmadds only
-        acc = acc + w_ref[0, j].astype(jnp.float32) * window[:, j:j + _LANES]
-    o_ref[...] = acc
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch_1d(xp2d, w2d, interpret: bool = True):
-    nblk = xp2d.shape[0] - 1
-    fn = ssr_pallas(
-        _body_1d,
-        grid=(nblk,),
-        in_streams=[
-            BlockStream((1, _LANES), lambda i: (i, 0), name="x_lo"),
-            BlockStream((1, _LANES), lambda i: (i + 1, 0), name="x_hi"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="w"),  # repeat
-        ],
-        out_streams=[BlockStream((1, _LANES), lambda i: (i, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct((nblk, _LANES), jnp.float32)],
-        interpret=interpret,
-        dimension_semantics=("parallel",),
-    )
-    return fn(xp2d, xp2d, w2d)
-
-
-def ssr_stencil1d(x: jax.Array, w: jax.Array, *,
-                  interpret: bool = True) -> jax.Array:
-    """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1."""
+def _check_taps(w):
     if w.shape[0] != TAPS:
         raise ValueError(f"stencil diameter fixed at {TAPS} (paper §4.2)")
+
+
+# -- 1-D --------------------------------------------------------------------
+
+
+def _prepare_1d(x, w):
+    _check_taps(w)
     n = x.shape[0] - (TAPS - 1)
-    nblk = -(-n // _LANES)
+    nblk = -(-n // LANES)
     # pad so that blocks [0..nblk] exist (halo lane reads block i+1)
-    need = (nblk + 1) * _LANES
+    need = (nblk + 1) * LANES
     x = jnp.pad(x, (0, need - x.shape[0]))
-    out = _dispatch_1d(x.reshape(nblk + 1, _LANES), w.reshape(1, TAPS),
-                       interpret)
-    return out.reshape(-1)[:n]
+    xp2d = x.reshape(nblk + 1, LANES)
+    return (xp2d, xp2d, w.reshape(1, TAPS)), None, n
 
 
-def _body_2d(x_ref, wx_ref, wy_ref, o_ref):
-    r = TAPS // 2
-    h = o_ref.shape[0]
-    wgrid = o_ref.shape[1]
-    x = x_ref[...].astype(jnp.float32)
-    acc = jnp.zeros((h, wgrid), jnp.float32)
-    for j in range(TAPS):                      # static unroll, both arms
-        acc = acc + wx_ref[0, j].astype(jnp.float32) * x[r:r + h, j:j + wgrid]
-        acc = acc + wy_ref[0, j].astype(jnp.float32) * x[j:j + h, r:r + wgrid]
-    o_ref[...] = acc
+def _body_1d(static):
+    def body(lo_ref, hi_ref, w_ref, o_ref):
+        window = jnp.concatenate(
+            [promote(lo_ref[...]), promote(hi_ref[...])], axis=1)
+        acc = jnp.zeros((1, LANES), jnp.float32)
+        for j in range(TAPS):                  # static unroll: fmadds only
+            acc = acc + promote(w_ref[0, j]) * window[:, j:j + LANES]
+        o_ref[...] = acc
+
+    return body
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _dispatch_2d(xp, wx2d, wy2d, interpret: bool = True):
-    r = TAPS // 2
-    h, wgrid = xp.shape[0] - 2 * r, xp.shape[1] - 2 * r
-    fn = ssr_pallas(
-        _body_2d,
-        grid=(1,),
-        in_streams=[
-            BlockStream(xp.shape, lambda i: (0, 0), name="x"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="wx"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="wy"),
-        ],
-        out_streams=[BlockStream((h, wgrid), lambda i: (0, 0),
-                                 Direction.WRITE, name="y")],
-        out_shapes=[jax.ShapeDtypeStruct((h, wgrid), jnp.float32)],
-        interpret=interpret,
+def _launch_1d(static, xp2d, _xp2d, w2d):
+    nblk = xp2d.shape[0] - 1
+    return Launch(
+        grid=(nblk,),
+        in_streams=(
+            BlockStream((1, LANES), lambda i: (i, 0), name="x_lo"),
+            BlockStream((1, LANES), lambda i: (i + 1, 0), name="x_hi"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="w"),  # repeat
+        ),
+        out_streams=(BlockStream((1, LANES), lambda i: (i, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct((nblk, LANES), jnp.float32),),
+        dimension_semantics=("parallel",),
     )
-    return fn(xp, wx2d, wy2d)
 
 
-def ssr_stencil2d(x: jax.Array, wx: jax.Array, wy: jax.Array, *,
-                  interpret: bool = True) -> jax.Array:
-    """Star stencil over a padded grid ``x`` (pad r = TAPS//2 each side)."""
-    return _dispatch_2d(x, wx.reshape(1, TAPS), wy.reshape(1, TAPS),
-                        interpret)
+_ssr_1d = StreamKernel("stencil1d", prepare=_prepare_1d, launch=_launch_1d,
+                       body=_body_1d, finish=trim_vector)
 
 
-def _baseline_body_1d(x_ref, w_ref, o_ref):
-    n = o_ref.shape[1]
+def ssr_stencil1d(x: jax.Array, w: jax.Array, *, interpret=None) -> jax.Array:
+    """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1."""
+    return _ssr_1d(x, w, interpret=interpret)
 
-    def tap(j, acc):
-        return acc + w_ref[0, j] * jax.lax.dynamic_slice(
-            x_ref[...].astype(jnp.float32), (0, j), (1, n))
 
-    o_ref[...] = jax.lax.fori_loop(
-        0, TAPS, tap, jnp.zeros((1, n), jnp.float32))
+def _prepare_base_1d(x, w):
+    _check_taps(w)
+    n = x.shape[0] - (TAPS - 1)
+    return (x.reshape(1, -1), promote(w).reshape(1, TAPS)), n, None
+
+
+def _baseline_body_1d(n):
+    def body(x_ref, w_ref, o_ref):
+        def tap(j, acc):
+            return acc + w_ref[0, j] * jax.lax.dynamic_slice(
+                promote(x_ref[...]), (0, j), (1, n))
+
+        o_ref[...] = jax.lax.fori_loop(
+            0, TAPS, tap, jnp.zeros((1, n), jnp.float32))
+
+    return body
+
+
+_base_1d = MonolithicKernel(
+    "stencil1d", prepare=_prepare_base_1d, body=_baseline_body_1d,
+    out_shape=lambda n, *arrs: jax.ShapeDtypeStruct((1, n), jnp.float32),
+    finish=lambda out, _: out.reshape(-1))
 
 
 def baseline_stencil1d(x: jax.Array, w: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
+                       interpret=None) -> jax.Array:
     """Monolithic variant: explicit in-body dynamic-slice 'loads' per tap."""
-    n = x.shape[0] - (TAPS - 1)
-    out = pl.pallas_call(
-        _baseline_body_1d,
-        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
-        interpret=interpret,
-    )(x.reshape(1, -1), w.astype(jnp.float32).reshape(1, TAPS))
-    return out.reshape(-1)
+    return _base_1d(x, w, interpret=interpret)
+
+
+# -- 2-D --------------------------------------------------------------------
+
+
+def _prepare_2d(x, wx, wy):
+    _check_taps(wx)
+    _check_taps(wy)
+    return (x, wx.reshape(1, TAPS), wy.reshape(1, TAPS)), None, None
+
+
+def _body_2d(static):
+    def body(x_ref, wx_ref, wy_ref, o_ref):
+        r = TAPS // 2
+        h = o_ref.shape[0]
+        wgrid = o_ref.shape[1]
+        x = promote(x_ref[...])
+        acc = jnp.zeros((h, wgrid), jnp.float32)
+        for j in range(TAPS):                  # static unroll, both arms
+            acc = acc + promote(wx_ref[0, j]) * x[r:r + h, j:j + wgrid]
+            acc = acc + promote(wy_ref[0, j]) * x[j:j + h, r:r + wgrid]
+        o_ref[...] = acc
+
+    return body
+
+
+def _launch_2d(static, xp, wx2d, wy2d):
+    r = TAPS // 2
+    h, wgrid = xp.shape[0] - 2 * r, xp.shape[1] - 2 * r
+    return Launch(
+        grid=(1,),
+        in_streams=(
+            BlockStream(xp.shape, lambda i: (0, 0), name="x"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="wx"),
+            BlockStream((1, TAPS), lambda i: (0, 0), name="wy"),
+        ),
+        out_streams=(BlockStream((h, wgrid), lambda i: (0, 0),
+                                 Direction.WRITE, name="y"),),
+        out_shapes=(jax.ShapeDtypeStruct((h, wgrid), jnp.float32),),
+    )
+
+
+_ssr_2d = StreamKernel("stencil2d", prepare=_prepare_2d, launch=_launch_2d,
+                       body=_body_2d)
+
+
+def ssr_stencil2d(x: jax.Array, wx: jax.Array, wy: jax.Array, *,
+                  interpret=None) -> jax.Array:
+    """Star stencil over a padded grid ``x`` (pad r = TAPS//2 each side)."""
+    return _ssr_2d(x, wx, wy, interpret=interpret)
+
+
+@register_kernel("stencil1d")
+def _entry_1d() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        n = 500 if odd else 1024
+        return ((jnp.asarray(rng.standard_normal(n + TAPS - 1), jnp.float32),
+                 jnp.asarray(rng.standard_normal(TAPS) * 0.3, jnp.float32)),
+                {})
+
+    return KernelEntry(name="stencil1d", ssr=ssr_stencil1d,
+                       baseline=baseline_stencil1d, ref=ref.stencil1d_ref,
+                       example=example, tol={"rtol": 1e-3, "atol": 1e-4},
+                       problem="11-point star, n=1024")
+
+
+@register_kernel("stencil2d")
+def _entry_2d() -> KernelEntry:
+    from . import ref
+
+    def example(rng, odd: bool = False):
+        hw = (42, 74) if odd else (74, 74)
+        return ((jnp.asarray(rng.standard_normal(hw), jnp.float32),
+                 jnp.asarray(rng.standard_normal(TAPS) * 0.3, jnp.float32),
+                 jnp.asarray(rng.standard_normal(TAPS) * 0.3, jnp.float32)),
+                {})
+
+    return KernelEntry(name="stencil2d", ssr=ssr_stencil2d,
+                       ref=ref.stencil2d_ref, example=example,
+                       tol={"rtol": 1e-3, "atol": 1e-3},
+                       problem="11-point star, 64×64")

@@ -171,21 +171,30 @@ def _trip_count(comps: Dict[str, Computation], cond_name: str,
 
 
 def _dot_flops(op: OpLine, shapes: Dict[str, str]) -> float:
-    """2 · |out| · contraction-size.  Contraction from lhs dims."""
+    """2 · |out| · contraction-size.  Contraction from lhs dims.
+
+    Handles both HLO operand spellings: inline-typed
+    (``dot(f32[8,64]{1,0} %a, f32[64,64]{1,0} %b)``, jax ≤ 0.4.x) and bare
+    names (``dot(%a, %b)``), falling back to the computation's shape table.
+    """
     out_b, out_e = _shape_bytes_elems(op.result_type)
-    m = re.search(r"dot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", op.line)
+    m = re.search(r"\bdot\((.*?)\)", op.line)
     contraction = 1
     if m:
-        lhs = shapes.get(m.group(1))
+        operands = m.group(1)
+        # lhs shape: first inline type if present, else look the name up
+        shape_m = _SHAPE_RE.search(operands)
+        if shape_m is None:
+            name = operands.split(",")[0].strip().lstrip("%")
+            lhs_type = shapes.get(name)
+            shape_m = _SHAPE_RE.search(lhs_type) if lhs_type else None
         cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
-        if lhs and cd and cd.group(1):
-            dims_m = _SHAPE_RE.search(lhs)
-            if dims_m and dims_m.group(2):
-                dims = [int(d) for d in dims_m.group(2).split(",")]
-                for i in cd.group(1).split(","):
-                    i = int(i)
-                    if i < len(dims):
-                        contraction *= dims[i]
+        if shape_m and shape_m.group(2) and cd and cd.group(1):
+            dims = [int(d) for d in shape_m.group(2).split(",")]
+            for i in cd.group(1).split(","):
+                i = int(i)
+                if i < len(dims):
+                    contraction *= dims[i]
     return 2.0 * out_e * contraction
 
 

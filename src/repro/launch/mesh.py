@@ -14,12 +14,19 @@ any jax import; tests and benches must keep seeing 1 device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.38; older releases imply Auto axes
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 
 def _mesh(shape, axes) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

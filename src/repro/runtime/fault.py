@@ -94,6 +94,9 @@ class Supervisor:
     on_straggler: Optional[Callable[[int], None]] = None
     restarts: int = 0
     events: List[str] = dataclasses.field(default_factory=list)
+    # injectable time source so straggler detection is testable without
+    # depending on real wall-clock noise
+    clock: Callable[[], float] = time.perf_counter
 
     def run(self, state: Any, step_fn: Callable[[Any, int], Any],
             num_steps: int, *, start_step: int = 0,
@@ -113,9 +116,9 @@ class Supervisor:
             try:
                 if self.injector is not None:
                     self.injector.check(step)
-                t0 = time.perf_counter()
+                t0 = self.clock()
                 state = step_fn(state, step)
-                dt = time.perf_counter() - t0
+                dt = self.clock() - t0
                 if self.straggler is not None and self.straggler.observe(
                         step, dt):
                     self.events.append(f"straggler@{step}")

@@ -1,9 +1,25 @@
+import importlib.util
 import os
+import sys
 
 # Tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in
 # a separate process).  Distributed tests spawn subprocesses with their own
 # flags — see tests/test_distributed.py.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# ``hypothesis`` is an *optional* dev dependency (requirements-dev.txt).  When
+# absent, install the deterministic shim so property tests still run instead
+# of erroring at collection.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_shim.py"))
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 import jax  # noqa: E402
 

@@ -89,18 +89,18 @@ class TestStraggler:
         assert len(flagged) <= 4  # few false positives
 
     def test_supervisor_straggler_hook(self, tmp_path):
-        import time as _time
         mgr = CheckpointManager(str(tmp_path))
         mon = StragglerMonitor(threshold_sigma=3.0, warmup_steps=3)
         hits = []
+        # deterministic fake clock: advanced by the step function, so the
+        # test cannot flake under host load
+        fake = {"t": 0.0}
         sup = Supervisor(ckpt=mgr, straggler=mon,
-                         on_straggler=hits.append, checkpoint_every=100)
+                         on_straggler=hits.append, checkpoint_every=100,
+                         clock=lambda: fake["t"])
 
         def slow_step(state, step):
-            if step == 8:
-                _time.sleep(0.25)
-            else:
-                _time.sleep(0.01)
+            fake["t"] += 0.25 if step == 8 else 0.01
             return state
 
         sup.run({"x": jnp.zeros(())}, slow_step, 12)

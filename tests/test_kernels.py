@@ -118,7 +118,6 @@ class TestGemm:
 
     def test_block_reuse_reporting(self):
         """The A-panel repeat-register reuse shows up in the stream report."""
-        from repro.kernels.gemm import _dispatch
         a, b = arr((256, 256)), arr((256, 512))
         fn_out = ssr_matmul(a, b, bm=128, bn=128, bk=128)  # warm path
         assert fn_out.shape == (256, 512)

@@ -1,0 +1,79 @@
+"""Registry-driven kernel equivalence: every registered kernel's variants
+must agree on non-multiple-of-block sizes (padding correctness) and on the
+paper's §4.2 sizes.  Adding a kernel to the registry automatically adds it
+here — no per-kernel test edits."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import ssr_region
+from repro.kernels import ops, registry
+
+EXPECTED = {"reduction", "scan", "relu", "stencil1d", "stencil2d", "gemv",
+            "gemm", "fft", "bitonic", "attention"}
+
+
+def _assert_close(got, want, tol):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        if tol["rtol"] == 0.0 and tol["atol"] == 0.0:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), **tol)
+
+
+class TestRegistry:
+    def test_suite_registered(self):
+        assert EXPECTED <= set(registry.names())
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(KeyError, match="no kernel"):
+            registry.get("nope")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="registered twice"):
+            registry.register_kernel("reduction")(lambda: None)
+
+    def test_entries_have_examples(self):
+        for entry in registry.entries():
+            assert entry.example is not None, entry.name
+            args, kwargs = entry.example(np.random.default_rng(0))
+            assert isinstance(args, tuple) and isinstance(kwargs, dict)
+
+
+@pytest.mark.parametrize("odd", [False, True], ids=["paper-size", "odd-size"])
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+class TestEquivalence:
+    def test_ssr_matches_ref(self, name, odd):
+        entry = registry.get(name)
+        args, kwargs = entry.example(np.random.default_rng(3), odd=odd)
+        _assert_close(entry.ssr(*args, **kwargs),
+                      entry.ref(*args, **kwargs), entry.tol)
+
+    def test_baseline_matches_ref(self, name, odd):
+        entry = registry.get(name)
+        if entry.baseline is None:
+            pytest.skip(f"{name}: no baseline variant (paper has none)")
+        args, kwargs = entry.example(np.random.default_rng(3), odd=odd)
+        _assert_close(entry.baseline(*args, **kwargs),
+                      entry.ref(*args, **kwargs), entry.tol)
+
+
+class TestDispatch:
+    def test_ssrcfg_off_is_ref_path(self):
+        entry = registry.get("relu")
+        args, kwargs = entry.example(np.random.default_rng(1))
+        got = registry.dispatch("relu", *args, ssr=False, **kwargs)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(entry.ref(*args)))
+
+    def test_region_flips_engine_not_semantics(self):
+        entry = registry.get("reduction")
+        args, _ = entry.example(np.random.default_rng(2))
+        with ssr_region(True):
+            streamed = ops.dot(*args)
+        with ssr_region(False):
+            plain = ops.dot(*args)
+        np.testing.assert_allclose(np.asarray(streamed), np.asarray(plain),
+                                   rtol=1e-3, atol=1e-3)
