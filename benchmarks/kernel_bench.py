@@ -6,53 +6,84 @@ TPU silicon, so the honest comparison is: XLA-compiled reference path
 footprint — the quantities that decide TPU speed).  On a real TPU this file
 runs unchanged with ``interpret=False`` to time Mosaic kernels.
 
-The kernel set is *enumerated from the registry*: every ``@register_kernel``
-entry with an ``example`` factory is timed (``ref`` path) and smoke-run
-(``ssr`` path), so a newly registered kernel lands in this benchmark with
-zero edits here.
+Two kernel sets are enumerated with zero edits here:
+
+* every ``@register_kernel`` entry with an ``example`` factory is timed
+  (``ref`` path) and smoke-run (``ssr`` path);
+* every fused (stream-chained) variant from ``kernels.chained.fused_cases``
+  is raced against its unfused two-kernel composition — interleaved
+  best-of-N of the real call path, plus the compiled-HLO audit that the
+  intermediate buffer is gone.  Numeric disagreement beyond the case's
+  tolerance is a hard failure (exit 1): a fast wrong kernel is not a win.
+
+Run as a script to persist ``BENCH_kernels.json`` (schema below), the
+machine-readable perf trajectory tracked across PRs::
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
+
+Schema (version 1): ``{"schema": 1, "generated_unix": float, "quick": bool,
+"results": [{"name", "group", "variant", "value", "units", ...}, ...]}``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import registry
+from repro.kernels.chained import fused_cases
 
 RNG = np.random.default_rng(0)
 
+BENCH_SCHEMA = 1
+
+
+def _row(name: str, group: str, variant: str, value: float, units: str,
+         **extras) -> Dict:
+    row = {"name": name, "group": group, "variant": variant,
+           "value": float(value), "units": units}
+    row.update(extras)
+    return row
+
 
 def _time(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Best-of-N μs/call (min over iters absorbs scheduler noise)."""
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(fn(*args)))
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # μs
+        jax.block_until_ready(jax.tree.leaves(out))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # μs
 
 
-def bench_reference_paths() -> List[Tuple[str, float, str]]:
-    """Time the jitted XLA reference path of every registered kernel
-    (problem sizes as in §4.2, from each entry's example factory)."""
+def bench_reference_paths(iters: int = 5) -> List[Dict]:
+    """Best-of-N of the jitted XLA reference path of every registered
+    kernel (problem sizes as in §4.2, from each entry's example factory)."""
     rows = []
-    print("\n== kernel reference path timings (XLA:CPU, μs/call) ==")
+    print("\n== kernel reference path timings (XLA:CPU, best-of-N μs/call) ==")
     for entry in registry.entries():
         if entry.example is None:
             continue
         args, kwargs = entry.example(RNG)
         fn = jax.jit(lambda *a, _e=entry, _kw=kwargs: _e.ref(*a, **_kw))
-        us = _time(fn, *args)
-        print(f"{entry.name:12s} {entry.problem:26s} {us:10.1f} μs")
-        rows.append((f"kernel_ref/{entry.name}", us, "xla_cpu us/call"))
+        us = _time(fn, *args, iters=iters)
+        print(f"{entry.name:16s} {entry.problem:26s} {us:10.1f} μs")
+        rows.append(_row(f"kernel_ref/{entry.name}", "kernel_ref", "ref",
+                         us, "us/call", iters=iters))
     return rows
 
 
-def smoke_ssr_paths() -> List[Tuple[str, float, str]]:
+def smoke_ssr_paths() -> List[Dict]:
     """One interpret-mode call per registered streamed kernel (CI smoke)."""
     rows = []
     print("\n== kernel ssr-path smoke (Pallas interpret) ==")
@@ -64,12 +95,13 @@ def smoke_ssr_paths() -> List[Tuple[str, float, str]]:
         jax.block_until_ready(
             jax.tree.leaves(entry.ssr(*args, **kwargs)))
         ms = (time.perf_counter() - t0) * 1e3
-        print(f"{entry.name:12s} ok ({ms:7.1f} ms incl. trace)")
-        rows.append((f"kernel_ssr_smoke/{entry.name}", ms, "interpret ms"))
+        print(f"{entry.name:16s} ok ({ms:7.1f} ms incl. trace)")
+        rows.append(_row(f"kernel_ssr_smoke/{entry.name}", "kernel_ssr_smoke",
+                         "ssr", ms, "interpret ms"))
     return rows
 
 
-def bench_stream_reports() -> List[Tuple[str, float, str]]:
+def bench_stream_reports() -> List[Dict]:
     """Static stream analysis of the production matmul (FIFO reuse etc.)."""
     from repro.core import BlockStream, Direction, ssr_pallas
     from jax.experimental.pallas import tpu as pltpu
@@ -101,6 +133,166 @@ def bench_stream_reports() -> List[Tuple[str, float, str]]:
               f"streamed {rep.hbm_bytes_streamed / 2**20:.0f} MiB, "
               f"unique {rep.hbm_bytes_unique / 2**20:.0f} MiB, "
               f"reuse {rep.reuse_factor:.1f}x, AI {ai:.0f} flop/byte")
-        rows.append((f"stream/matmul{m}", rep.reuse_factor,
-                     f"vmem {rep.vmem_bytes} streamed {rep.hbm_bytes_streamed}"))
+        rows.append(_row(f"stream/matmul{m}", "stream", "ssr",
+                         rep.reuse_factor, "reuse_factor",
+                         vmem_bytes=rep.vmem_bytes,
+                         hbm_bytes_streamed=rep.hbm_bytes_streamed))
     return rows
+
+
+# --------------------------------------------------------------------------
+# Fused (stream-chained) variants vs their unfused compositions
+# --------------------------------------------------------------------------
+
+# Bench problem sizes, chosen so the quantity chaining eliminates (the
+# intermediate HBM round-trip + the second kernel dispatch) is resolvable
+# above CPU timing noise.  gemv_relu uses the paper's §4.2 GEMV size.
+_FUSED_BENCH_ARGS: Dict[str, Callable[[bool], Tuple[tuple, dict]]] = {
+    "gemv_relu": lambda quick: (
+        (jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32),
+         jnp.asarray(RNG.standard_normal(64), jnp.float32)), {}),
+    "stencil1d_relu": lambda quick: (
+        (jnp.asarray(RNG.standard_normal((2048 if quick else 16384) + 10),
+                     jnp.float32),
+         jnp.asarray(RNG.standard_normal(11) * 0.3, jnp.float32)), {}),
+    "sum_sq_diff": lambda quick: (
+        (jnp.asarray(RNG.standard_normal(16384 if quick else 262144),
+                     jnp.float32),
+         jnp.asarray(RNG.standard_normal(16384 if quick else 262144),
+                     jnp.float32)), {}),
+    "axpy_dot": lambda quick: (
+        (jnp.asarray(RNG.standard_normal(16384 if quick else 262144),
+                     jnp.float32),
+         jnp.asarray(RNG.standard_normal(16384 if quick else 262144),
+                     jnp.float32),
+         jnp.asarray(RNG.standard_normal(16384 if quick else 262144),
+                     jnp.float32)), {"alpha": 0.5}),
+}
+
+
+def _interleaved_best(f: Callable, u: Callable, args: tuple, kwargs: dict,
+                      warmup: int, iters: int) -> Tuple[float, float]:
+    """Race two callables back-to-back so drift hits both equally."""
+    for _ in range(warmup):
+        jax.block_until_ready(jax.tree.leaves(f(*args, **kwargs)))
+        jax.block_until_ready(jax.tree.leaves(u(*args, **kwargs)))
+    bf = bu = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(f(*args, **kwargs)))
+        bf = min(bf, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(u(*args, **kwargs)))
+        bu = min(bu, time.perf_counter() - t0)
+    return bf * 1e6, bu * 1e6
+
+
+def bench_fused(quick: bool = False, check_hlo: bool = True) -> List[Dict]:
+    """Fused single kernel vs unfused two-kernel composition, best-of-N.
+
+    Numeric disagreement beyond the case tolerance raises ``SystemExit`` —
+    the benchmark doubles as the CI agreement gate.  When ``check_hlo`` is
+    set, the compiled-HLO fusion audit (intermediate buffer counts) is also
+    recorded per case.
+    """
+    from repro.launch.hlo_analysis import check_fusion
+
+    rows = []
+    warmup, iters = (1, 3) if quick else (2, 9)
+    print("\n== fused (stream-chained) vs unfused composition "
+          f"(interpret, best-of-{iters} μs/call) ==")
+    for case in fused_cases():
+        bench_args = _FUSED_BENCH_ARGS.get(case.name)
+        # a case without a tuned bench size still benches at its example
+        # size — new FusedCases land here with zero edits
+        args, kwargs = (bench_args(quick) if bench_args
+                        else case.example(RNG))
+
+        fused_out = case.fused(*args, **kwargs)
+        unfused_out = case.unfused(*args, **kwargs)
+        for g, w in zip(jax.tree.leaves(fused_out),
+                        jax.tree.leaves(unfused_out)):
+            if not np.allclose(np.asarray(g), np.asarray(w), **case.tol):
+                print(f"FAIL {case.name}: fused disagrees with unfused "
+                      f"beyond tol {case.tol}", file=sys.stderr)
+                raise SystemExit(1)
+
+        tf, tu = _interleaved_best(case.fused, case.unfused, args, kwargs,
+                                   warmup, iters)
+        speedup = tu / tf
+        extras: Dict = {"iters": iters}
+        if check_hlo:
+            dtype, dims = case.inter_type(*args, **kwargs)
+            chk = check_fusion(case.fused, case.unfused, args, kwargs,
+                               dtype, dims)
+            extras.update(
+                intermediate=f"{dtype}{list(dims)}",
+                fused_buffers=chk.fused_buffers,
+                unfused_buffers=chk.unfused_buffers,
+                intermediate_eliminated=chk.intermediate_eliminated)
+        print(f"{case.name:16s} fused {tf:10.1f} μs  unfused {tu:10.1f} μs  "
+              f"speedup {speedup:4.2f}x"
+              + (f"  intermediate_eliminated={extras.get('intermediate_eliminated')}"
+                 if check_hlo else ""))
+        rows.append(_row(f"fused/{case.name}", "fused", "fused",
+                         tf, "us/call", **extras))
+        rows.append(_row(f"fused/{case.name}", "fused", "unfused",
+                         tu, "us/call", speedup=speedup, **extras))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Machine-readable output: BENCH_kernels.json
+# --------------------------------------------------------------------------
+
+
+def write_bench_json(rows: Sequence[Dict], path: str, quick: bool) -> None:
+    doc = {"schema": BENCH_SCHEMA, "generated_unix": time.time(),
+           "quick": bool(quick), "results": list(rows)}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"\nwrote {len(rows)} results to {path}")
+
+
+def validate_bench_json(path: str) -> None:
+    """Schema gate for CI: malformed output fails loudly."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"bad schema: {doc.get('schema')!r}")
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        raise ValueError("results must be a non-empty list")
+    for row in results:
+        for field in ("name", "group", "variant", "value", "units"):
+            if field not in row:
+                raise ValueError(f"row missing {field!r}: {row}")
+        if not isinstance(row["value"], (int, float)):
+            raise ValueError(f"non-numeric value: {row}")
+    groups = {r["group"] for r in results}
+    if "fused" not in groups:
+        raise ValueError(f"no fused results recorded (groups: {groups})")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes + few iters (CI smoke)")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="output JSON path (default: %(default)s)")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the compiled-HLO fusion audit")
+    args = ap.parse_args(argv)
+
+    rows: List[Dict] = []
+    rows += bench_reference_paths(iters=2 if args.quick else 5)
+    rows += smoke_ssr_paths()
+    rows += bench_stream_reports()
+    rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)
+    write_bench_json(rows, args.out, args.quick)
+    validate_bench_json(args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

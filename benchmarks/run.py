@@ -16,9 +16,14 @@ def main() -> None:
     rows = []
     for fn in paper_tables.ALL:
         rows.extend(fn())
-    rows.extend(kernel_bench.bench_reference_paths())
-    rows.extend(kernel_bench.smoke_ssr_paths())
-    rows.extend(kernel_bench.bench_stream_reports())
+    # kernel_bench rows are structured dicts (BENCH_kernels.json schema);
+    # flatten them into the CSV triple this report prints.
+    for row in (kernel_bench.bench_reference_paths()
+                + kernel_bench.smoke_ssr_paths()
+                + kernel_bench.bench_stream_reports()
+                + kernel_bench.bench_fused()):
+        rows.append((f"{row['name']}/{row['variant']}", row["value"],
+                     row["units"]))
 
     if os.path.exists("dryrun_results.json"):
         from benchmarks import roofline

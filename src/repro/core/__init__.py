@@ -44,9 +44,13 @@ from .ssr import (  # noqa: F401
 )
 from .compiler import (  # noqa: F401
     Allocation,
+    ChainError,
+    ChainLink,
+    ChainedPlan,
     LoopNest,
     MemRef,
     StreamPlan,
+    chain,
     dot_product_nest,
     gemm_nest,
     ssrify,
@@ -54,11 +58,14 @@ from .compiler import (  # noqa: F401
 from .lowering import (  # noqa: F401
     BlockPolicy,
     DEFAULT_POLICY,
+    LoweredChain,
     LoweredPlan,
     LoweredStream,
     LoweringError,
+    lower_chain,
     lower_plan,
     plan_stats,
     ssr_call,
+    ssr_chain_call,
 )
 from .region import ssr_enabled, ssr_region, set_ssr  # noqa: F401

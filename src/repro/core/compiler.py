@@ -20,6 +20,7 @@ iterations").
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 from . import isa
@@ -175,6 +176,189 @@ def ssrify(nest: LoopNest, *, num_lanes: int = DEFAULT_NUM_LANES,
     return StreamPlan(nest=nest, allocations=tuple(allocations),
                       residual=tuple(residual), ssrified=True,
                       n_ssr=n_with, n_base=n_without)
+
+
+# --------------------------------------------------------------------------
+# Stream chaining: fuse producer→consumer nests into one stream region.
+#
+# "A RISC-V ISA Extension for Chaining in Scalar Processors" (Colagrande et
+# al., 2025) chains a producer's output stream directly into a consumer's
+# input stream, so the intermediate never round-trips through memory.  Our
+# block-granular analogue fuses whole LoopNests: if nest k writes a ref that
+# nest k+1 reads with the *same* affine walk over the *same* iteration
+# space, the store and the load cancel and both bodies run inside one
+# stream region.  The Eq. (1)–(3) accounting extends naturally: one setup
+# instead of len(nests), fewer allocated lanes, and — the quantity that
+# actually decides memory-bound kernels — 2·ΠL eliminated loads+stores per
+# link.
+# --------------------------------------------------------------------------
+
+
+class ChainError(ValueError):
+    """The nests cannot be unified into one chained stream region."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainLink:
+    """One producer→consumer edge: the unified intermediate ref.
+
+    ``coeffs``/``offset`` are the (identical) affine walk of the producer's
+    write and the consumer's read; ``elems`` is ΠL — the number of elements
+    that never touch memory once the link is fused.
+    """
+
+    name: str
+    producer_stage: int
+    coeffs: Tuple[int, ...]
+    offset: int
+    elems: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainedPlan:
+    """A sequence of StreamPlans fused over one shared iteration space.
+
+    ``stages[k]`` is the per-stage plan with the link refs *stripped* (the
+    producer no longer stores its output, the consumer no longer loads it);
+    ``links[k]`` records the unified intermediate between stages k and k+1.
+    The cost fields extend Eq. (1)/(2):
+
+    * ``n_chain``   — one fused stream region: a single setup, the union of
+      the surviving lanes, the sum of all stage bodies;
+    * ``n_unfused`` — Σ over stages of the stand-alone Eq. (1) count, each
+      with its own setup and its intermediate store/load lane;
+    * ``eliminated_loads``/``eliminated_stores`` — the intermediate memory
+      accesses that simply never happen (ΠL each per link) — the chaining
+      paper's headline quantity, invisible to pure instruction counts on a
+      machine where streamed accesses are free but bandwidth is not.
+    """
+
+    stages: Tuple[StreamPlan, ...]
+    links: Tuple[ChainLink, ...]
+    bounds: Tuple[int, ...]
+    n_chain: int
+    n_unfused: int
+    eliminated_loads: int
+    eliminated_stores: int
+
+    @property
+    def eliminated_accesses(self) -> int:
+        return self.eliminated_loads + self.eliminated_stores
+
+    @property
+    def chain_speedup(self) -> float:
+        """Instruction-count speedup of the fused region vs the sequence."""
+        return self.n_unfused / self.n_chain
+
+    @property
+    def num_lanes(self) -> int:
+        return sum(len(s.allocations) for s in self.stages)
+
+
+def _dense_strides(bounds: Sequence[int]) -> Tuple[int, ...]:
+    strides = [1] * len(bounds)
+    for k in range(len(bounds) - 2, -1, -1):
+        strides[k] = strides[k + 1] * bounds[k + 1]
+    return tuple(strides)
+
+
+def _stage_instr_counts(plan: StreamPlan) -> List[int]:
+    """Per-level body instruction counts with residual accesses folded in."""
+    nest = plan.nest
+    I = list(nest.compute_per_level)
+    for ref in plan.residual:
+        I[max(0, _ref_depth(ref, nest))] += 1
+    return I
+
+
+def chain(nests: Sequence[LoopNest], *,
+          num_lanes: Optional[int] = None,
+          force: bool = False) -> ChainedPlan:
+    """Fuse a producer→consumer sequence of nests into one ChainedPlan.
+
+    Adjacent nests are unified through exactly one intermediate ref: the
+    producer's WRITE and the consumer's READ of the same name, with equal
+    affine coefficients and offset, over identical iteration spaces.  The
+    link refs are stripped and each stage is SSR-ified independently
+    (``num_lanes=None`` allocates every affine ref, the ``ssr_call``
+    convention); the cost model charges one fused setup and credits the
+    eliminated intermediate traffic.
+    """
+    nests = tuple(nests)
+    if len(nests) < 2:
+        raise ChainError("chaining needs at least two nests")
+    bounds = nests[0].bounds
+    for k, nest in enumerate(nests[1:], start=1):
+        if nest.bounds != bounds:
+            raise ChainError(
+                f"stage {k} iteration space {nest.bounds} != stage 0 "
+                f"{bounds}; chained nests must share one iteration space")
+
+    links: List[ChainLink] = []
+    for k in range(len(nests) - 1):
+        p, c = nests[k], nests[k + 1]
+        writes = {r.name: r for r in p.refs if r.kind == Direction.WRITE}
+        reads = {r.name: r for r in c.refs if r.kind == Direction.READ}
+        common = sorted(set(writes) & set(reads))
+        if len(common) != 1:
+            raise ChainError(
+                f"stages {k}→{k + 1}: need exactly one producer-write / "
+                f"consumer-read ref in common, found {common or 'none'}")
+        w, r = writes[common[0]], reads[common[0]]
+        if w.coeffs is None or r.coeffs is None:
+            raise ChainError(
+                f"intermediate '{common[0]}' is not affine on both sides")
+        if w.coeffs != r.coeffs or w.offset != r.offset:
+            raise ChainError(
+                f"intermediate '{common[0]}': producer walk "
+                f"{w.coeffs}+{w.offset} != consumer walk "
+                f"{r.coeffs}+{r.offset}; streams cannot be unified")
+        links.append(ChainLink(name=common[0], producer_stage=k,
+                               coeffs=w.coeffs, offset=w.offset,
+                               elems=math.prod(bounds)))
+
+    # Strip the unified refs: the producer's store and the consumer's load
+    # vanish — that is the fusion.
+    stage_nests: List[LoopNest] = []
+    for k, nest in enumerate(nests):
+        incoming = links[k - 1].name if k > 0 else None
+        outgoing = links[k].name if k < len(nests) - 1 else None
+        refs = tuple(
+            r for r in nest.refs
+            if not (r.name == incoming and r.kind == Direction.READ)
+            and not (r.name == outgoing and r.kind == Direction.WRITE))
+        stage_nests.append(dataclasses.replace(nest, refs=refs))
+
+    def lanes_for(nest: LoopNest) -> int:
+        if num_lanes is not None:
+            return num_lanes
+        return sum(1 for r in nest.refs if r.is_affine())
+
+    stages = tuple(ssrify(sn, num_lanes=max(lanes_for(sn), 1), force=force)
+                   for sn in stage_nests)
+
+    # Unfused cost: each original nest as its own stream region (its link
+    # ref occupies a lane and its setup is paid per stage).
+    unfused_plans = [ssrify(n, num_lanes=max(lanes_for(n), 1), force=force)
+                     for n in nests]
+    n_unfused = sum(
+        p.n_ssr if p.ssrified else p.n_base for p in unfused_plans)
+
+    # Fused cost: one setup over the union of surviving lanes; the body at
+    # each level is the sum of every stage's body (+ residual accesses).
+    L = list(bounds)
+    I_chain = [0] * len(bounds)
+    for plan in stages:
+        for lvl, c in enumerate(_stage_instr_counts(plan)):
+            I_chain[lvl] += c
+    s_chain = sum(len(p.allocations) for p in stages)
+    n_chain = (isa.n_ssr(L, I_chain, s_chain) if s_chain
+               else isa.n_base(L, I_chain, 0))
+
+    elems = sum(link.elems for link in links)
+    return ChainedPlan(stages=stages, links=tuple(links), bounds=bounds,
+                       n_chain=n_chain, n_unfused=n_unfused,
+                       eliminated_loads=elems, eliminated_stores=elems)
 
 
 def dot_product_nest(n: int) -> LoopNest:

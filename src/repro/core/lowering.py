@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from . import agu
-from .compiler import Allocation, LoopNest, StreamPlan, ssrify
+from .compiler import (Allocation, ChainedPlan, LoopNest, StreamPlan,
+                       _dense_strides, chain, ssrify)
 from .ssr import BlockStream, ssr_pallas
 from .stream import Direction, StreamSpec
 
@@ -129,7 +130,11 @@ class LoweredPlan:
 
 
 def _inner_steps(nest: LoopNest, policy: BlockPolicy) -> int:
-    return -(-nest.bounds[-1] // policy.block_elems)
+    return _inner_steps_of(nest.bounds, policy)
+
+
+def _inner_steps_of(bounds: Tuple[int, ...], policy: BlockPolicy) -> int:
+    return -(-bounds[-1] // policy.block_elems)
 
 
 def _lower_allocation(alloc: Allocation, nest: LoopNest,
@@ -215,6 +220,21 @@ def _lower_allocation(alloc: Allocation, nest: LoopNest,
         policy=policy)
 
 
+def _canonical_grid(bounds: Tuple[int, ...],
+                    policy: BlockPolicy) -> Tuple[int, ...]:
+    """Grid for a nest's iteration space, innermost level tiled by blocks.
+
+    Derived through :func:`agu.block_grid` on the canonical dense row-major
+    spec so the schedule provably *is* the AGU pattern at block granularity.
+    """
+    E = policy.block_elems
+    padded_inner = _inner_steps_of(bounds, policy) * E
+    padded_bounds = tuple(bounds[:-1]) + (padded_inner,)
+    canonical = StreamSpec(bounds=padded_bounds,
+                           strides=_dense_strides(padded_bounds))
+    return agu.block_grid(canonical, (E,))
+
+
 def lower_plan(plan: StreamPlan,
                policy: BlockPolicy = DEFAULT_POLICY) -> LoweredPlan:
     """Lower every allocated lane of ``plan`` to Pallas block schedules.
@@ -230,14 +250,7 @@ def lower_plan(plan: StreamPlan,
             "baseline'); lower the force=True plan for the runtime-decision "
             "path")
     nest = plan.nest
-    E = policy.block_elems
-    padded_inner = _inner_steps(nest, policy) * E
-    padded_bounds = tuple(nest.bounds[:-1]) + (padded_inner,)
-    strides = [1] * len(padded_bounds)
-    for k in range(len(padded_bounds) - 2, -1, -1):
-        strides[k] = strides[k + 1] * padded_bounds[k + 1]
-    canonical = StreamSpec(bounds=padded_bounds, strides=tuple(strides))
-    grid = agu.block_grid(canonical, (E,))
+    grid = _canonical_grid(nest.bounds, policy)
 
     lowered = [_lower_allocation(a, nest, policy) for a in plan.allocations]
     ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
@@ -247,7 +260,82 @@ def lower_plan(plan: StreamPlan,
 
 
 # --------------------------------------------------------------------------
-# End-to-end execution: ssr_call
+# Stream chaining: a ChainedPlan lowers to ONE Pallas kernel whose
+# intermediates live in VMEM scratch blocks and never touch HBM.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredChain:
+    """A ChainedPlan turned into a single launchable Pallas schedule.
+
+    All stages share one grid (the unified iteration space, innermost level
+    tiled by the policy block).  ``stage_in_streams[k]`` are stage k's
+    external read streams; the link intermediates have *no* streams at all —
+    they exist only as VMEM scratch inside the kernel.
+    """
+
+    chained: ChainedPlan
+    policy: BlockPolicy
+    grid: Tuple[int, ...]
+    stage_in_streams: Tuple[Tuple[LoweredStream, ...], ...]
+
+    @property
+    def in_streams(self) -> Tuple[LoweredStream, ...]:
+        return tuple(s for stage in self.stage_in_streams for s in stage)
+
+    @property
+    def steps(self) -> int:
+        return math.prod(self.grid)
+
+
+def lower_chain(chained: ChainedPlan,
+                policy: BlockPolicy = DEFAULT_POLICY) -> LoweredChain:
+    """Lower a producer→consumer chain to one fused Pallas schedule.
+
+    Block-granular chaining requires each link to walk the canonical dense
+    row-major pattern of the shared iteration space: then grid step ``g``'s
+    produced block is *exactly* the block the consumer eats at step ``g``,
+    so the intermediate can live in a VMEM scratch block instead of an HBM
+    buffer.  Anything else (strided/offset intermediate layouts) raises
+    :class:`LoweringError` — the word-granular chaining hardware could
+    stagger streams, whole-block fusion cannot.
+    """
+    bounds = chained.bounds
+    dense = _dense_strides(bounds)
+    for link in chained.links:
+        if link.coeffs != dense or link.offset != 0:
+            raise LoweringError(
+                f"link '{link.name}': intermediate walk {link.coeffs}+"
+                f"{link.offset} is not the dense row-major walk {dense}+0 of "
+                "the iteration space — the producer's block is not the "
+                "consumer's block, so the intermediate cannot stay in VMEM")
+    if not any(p.allocations for p in chained.stages):
+        raise LoweringError(
+            "chained plan has no stream allocations (every stage kept the "
+            "baseline verdict); chain with force=True for the "
+            "runtime-decision path")
+
+    stage_streams = []
+    for k, plan in enumerate(chained.stages):
+        lowered = [_lower_allocation(a, plan.nest, policy)
+                   for a in plan.allocations]
+        writes = [s.name for s in lowered
+                  if s.stream.direction == Direction.WRITE]
+        if writes:
+            raise LoweringError(
+                f"chain stage {k} carries write streams {writes}; only the "
+                "final output (synthesised from the call mode) may leave "
+                "the fused region")
+        stage_streams.append(tuple(lowered))
+
+    return LoweredChain(chained=chained, policy=policy,
+                        grid=_canonical_grid(bounds, policy),
+                        stage_in_streams=tuple(stage_streams))
+
+
+# --------------------------------------------------------------------------
+# End-to-end execution: ssr_call / ssr_chain_call
 # --------------------------------------------------------------------------
 
 
@@ -268,9 +356,40 @@ def plan_stats(nest: LoopNest, num_lanes: int = 2) -> StreamPlan:
     return ssrify(nest, num_lanes=num_lanes)
 
 
-# Built-kernel cache, LRU-bounded.  Keys include the body function's
-# identity: pass a module-level (or otherwise long-lived) body to hit the
-# cache — a fresh inline lambda per call builds a fresh kernel each time.
+@functools.lru_cache(maxsize=256)
+def _chain_for(nests: Tuple[LoopNest, ...],
+               num_lanes: Optional[int]) -> ChainedPlan:
+    """Chained-plan cache (force=True: the caller asked to execute fused)."""
+    return chain(nests, num_lanes=num_lanes, force=True)
+
+
+def _body_key(body: Callable) -> Any:
+    """Stable cache identity for a block body.
+
+    Keying on the function *object* is a footgun: an inline lambda is a
+    fresh object every call, so every call silently rebuilds (and re-jits)
+    the kernel.  Python compiles the lambda's code object once per source
+    location, so ``(code, closure values, defaults)`` identifies the body's
+    behaviour — two lambdas from the same line with equal closures share a
+    kernel.  Unhashable closure contents (e.g. captured arrays) fall back
+    to object identity: never stale, just uncached across re-creations.
+    """
+    code = getattr(body, "__code__", None)
+    if code is None:
+        return body
+    cells = getattr(body, "__closure__", None) or ()
+    try:
+        key = (code, tuple(c.cell_contents for c in cells),
+               getattr(body, "__defaults__", None) or ())
+        hash(key)
+    except TypeError:
+        return body
+    return key
+
+
+# Built-kernel cache, LRU-bounded.  Keys include the body's ``_body_key``:
+# inline lambdas hit the cache as long as their closure values are hashable
+# and equal (see the footgun note above).
 _KERNEL_CACHE_MAX = 256
 _kernel_cache: "collections.OrderedDict[Any, Callable]" = \
     collections.OrderedDict()
@@ -293,6 +412,7 @@ def _kernel_cache_put(key, fn) -> None:
 def clear_caches() -> None:
     _plan_for.cache_clear()
     plan_stats.cache_clear()
+    _chain_for.cache_clear()
     _kernel_cache.clear()
 
 
@@ -308,43 +428,63 @@ def _first_last(grid: Tuple[int, ...]):
     return first, last
 
 
-def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
-                  out_dtype, interpret: Optional[bool]) -> Callable:
-    """Wrap a block-level ``body`` into a full ssr_pallas kernel."""
+def _assemble_kernel(grid: Tuple[int, ...], policy: BlockPolicy,
+                     in_streams: Sequence[BlockStream],
+                     compute: Callable, n_links: int, mode: str,
+                     out_dtype, part_shape: Optional[Tuple[int, ...]],
+                     interpret: Optional[bool]) -> Callable:
+    """Shared kernel assembler for single-nest and chained plans.
+
+    ``compute(in_refs, link_refs)`` returns the per-step value; ``n_links``
+    VMEM scratch blocks hold chained intermediates (zero for plain plans).
+    Reduce mode accumulates into a *vector* accumulator when the partial is
+    a multi-element 2-D block — the whole (rows, lanes) vreg adds every
+    step, folded to the scalar exactly once on the last step — and keeps
+    the legacy scalar ``(1, 1)`` accumulator for scalar partials.  Map-mode
+    grid axes are independent and declared ``parallel``; only reduce mode
+    needs sequential (``arbitrary``) semantics for its carried accumulator.
+    """
     from jax.experimental import pallas as pl
     from jax.experimental.pallas import tpu as pltpu
 
-    grid = lowered.grid
-    policy = lowered.policy
-    n_in = len(lowered.in_streams)
-    in_streams = [s.stream for s in lowered.in_streams]
+    n_in = len(in_streams)
+    link_scratch = [pltpu.VMEM(policy.block_shape, out_dtype)
+                    for _ in range(n_links)]
 
     if mode == "reduce":
+        vector_acc = (part_shape is not None and len(part_shape) == 2
+                      and math.prod(part_shape) > 1)
+        acc_shape = tuple(part_shape) if vector_acc else (1, 1)
+
         def kernel(*refs):
-            in_refs, o_ref, acc_ref = refs[:n_in], refs[n_in], refs[n_in + 1]
+            in_refs, o_ref = refs[:n_in], refs[n_in]
+            links = refs[n_in + 1:n_in + 1 + n_links]
+            acc_ref = refs[n_in + 1 + n_links]
             first, last = _first_last(grid)
 
             @pl.when(first)
             def _init():
                 acc_ref[...] = jnp.zeros_like(acc_ref)
 
-            part = body(*[r[...] for r in in_refs])
-            acc_ref[...] += jnp.asarray(part, out_dtype).reshape(1, 1)
+            part = jnp.asarray(compute(in_refs, links), out_dtype)
+            acc_ref[...] += part.reshape(acc_shape)
 
             @pl.when(last)
             def _write():
-                o_ref[...] = acc_ref[...]
+                if vector_acc:
+                    o_ref[...] = jnp.sum(acc_ref[...]).reshape(1, 1)
+                else:
+                    o_ref[...] = acc_ref[...]
 
         out_streams = [BlockStream((1, 1), lambda *g: (0, 0),
                                    Direction.WRITE, name="acc")]
         out_shapes = [jax.ShapeDtypeStruct((1, 1), out_dtype)]
-        scratch = [pltpu.VMEM((1, 1), out_dtype)]
+        scratch = link_scratch + [pltpu.VMEM(acc_shape, out_dtype)]
+        semantics = ("arbitrary",) * len(grid)
     elif mode == "map":
-        steps = lowered.steps
+        steps = math.prod(grid)
         # Output walks the grid dense row-major: one block per step.
-        place = [1] * len(grid)
-        for k in range(len(grid) - 2, -1, -1):
-            place[k] = place[k + 1] * grid[k + 1]
+        place = _dense_strides(grid)
 
         def out_map(*g):
             row = g[0] * place[0]
@@ -354,25 +494,123 @@ def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
 
         def kernel(*refs):
             in_refs, o_ref = refs[:n_in], refs[n_in]
+            links = refs[n_in + 1:n_in + 1 + n_links]
             o_ref[...] = jnp.asarray(
-                body(*[r[...] for r in in_refs]), out_dtype
+                compute(in_refs, links), out_dtype
             ).reshape(policy.block_shape)
 
         out_streams = [BlockStream(policy.block_shape, out_map,
                                    Direction.WRITE, name="out")]
         out_shapes = [jax.ShapeDtypeStruct(
             (steps * policy.rows, policy.lanes), out_dtype)]
-        scratch = []
+        scratch = list(link_scratch)
+        semantics = ("parallel",) * len(grid)
     else:
         raise ValueError(f"unknown ssr_call mode {mode!r}")
 
     return ssr_pallas(
         kernel, grid=grid,
-        in_streams=in_streams, out_streams=out_streams,
+        in_streams=list(in_streams), out_streams=out_streams,
         out_shapes=out_shapes, scratch_shapes=scratch,
         interpret=interpret,
-        dimension_semantics=("arbitrary",) * len(grid),
+        dimension_semantics=semantics,
     )
+
+
+def _probe_part_shape(fn: Callable, in_shapes: Sequence[Tuple[int, ...]],
+                      dtype) -> Tuple[int, ...]:
+    """Trace ``fn`` on abstract blocks to learn the partial's shape."""
+    structs = [jax.ShapeDtypeStruct(s, dtype) for s in in_shapes]
+    return tuple(jax.eval_shape(lambda *xs: fn(*xs), *structs).shape)
+
+
+def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
+                  out_dtype, interpret: Optional[bool]) -> Callable:
+    """Wrap a block-level ``body`` into a full ssr_pallas kernel."""
+    part_shape = None
+    if mode == "reduce":
+        part_shape = _probe_part_shape(
+            body, [s.stream.block_shape for s in lowered.in_streams],
+            out_dtype)
+
+    def compute(in_refs, _links):
+        return body(*[r[...] for r in in_refs])
+
+    return _assemble_kernel(lowered.grid, lowered.policy,
+                            [s.stream for s in lowered.in_streams],
+                            compute, 0, mode, out_dtype, part_shape,
+                            interpret)
+
+
+def _chain_stage_shapes(lowered: LoweredChain, bodies: Sequence[Callable],
+                        out_dtype,
+                        require_final_block: bool = False) -> Tuple[int, ...]:
+    """Shape-check every stage and return the final partial's shape.
+
+    Each linked intermediate must fill exactly one policy block — that is
+    the VMEM scratch the next stage reads.  ``require_final_block`` extends
+    the check to the last stage (map mode, where the value feeds the dense
+    write stream).
+    """
+    policy = lowered.policy
+    cur: Any = None
+    for k, stage in enumerate(lowered.stage_in_streams):
+        ins = [jax.ShapeDtypeStruct(s.stream.block_shape, out_dtype)
+               for s in stage]
+        if k == 0:
+            cur = jax.eval_shape(lambda *xs: bodies[0](*xs), *ins)
+        else:
+            carried = jax.ShapeDtypeStruct(policy.block_shape, out_dtype)
+            cur = jax.eval_shape(
+                lambda c, *xs, _b=bodies[k]: _b(c, *xs), carried, *ins)
+        must_block = k < len(bodies) - 1 or require_final_block
+        if must_block and math.prod(cur.shape) != policy.block_elems:
+            what = ("a linked intermediate" if k < len(bodies) - 1
+                    else "the map-mode output")
+            raise LoweringError(
+                f"chain stage {k} body returns shape {cur.shape} "
+                f"({math.prod(cur.shape)} elements); {what} "
+                f"must fill one {policy.block_shape} VMEM block")
+    return tuple(cur.shape)
+
+
+def _build_chain_kernel(lowered: LoweredChain, bodies: Sequence[Callable],
+                        mode: str, out_dtype,
+                        interpret: Optional[bool]) -> Callable:
+    """Fuse all stage bodies into ONE Pallas kernel.
+
+    Per grid step: stage 0 computes its block from its read streams; each
+    intermediate is written to a VMEM scratch block (never HBM) and read
+    back by the next stage's body the same step; the final stage's value
+    feeds the usual map/reduce epilogue.
+    """
+    policy = lowered.policy
+    counts = [len(stage) for stage in lowered.stage_in_streams]
+    offsets = [0]
+    for c in counts[:-1]:
+        offsets.append(offsets[-1] + c)
+    n_links = len(lowered.chained.links)
+
+    final_shape = _chain_stage_shapes(lowered, bodies, out_dtype,
+                                      require_final_block=(mode == "map"))
+    part_shape = final_shape if mode == "reduce" else None
+
+    def compute(in_refs, link_refs):
+        vals = [r[...] for r in in_refs[:counts[0]]]
+        cur = bodies[0](*vals)
+        for k in range(1, len(bodies)):
+            s_ref = link_refs[k - 1]
+            s_ref[...] = jnp.asarray(cur, out_dtype).reshape(
+                policy.block_shape)
+            args = [r[...] for r in
+                    in_refs[offsets[k]:offsets[k] + counts[k]]]
+            cur = bodies[k](s_ref[...], *args)
+        return cur
+
+    return _assemble_kernel(lowered.grid, policy,
+                            [s.stream for s in lowered.in_streams],
+                            compute, n_links, mode, out_dtype, part_shape,
+                            interpret)
 
 
 def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
@@ -388,8 +626,12 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     per allocated read stream (in allocation order — deepest-first, i.e. the
     order ``plan.allocations`` lists them) and returns
 
-    * ``mode="reduce"`` — a scalar partial, accumulated across all grid
-      steps (the Fig. 4 ``%x`` accumulator register);
+    * ``mode="reduce"`` — a partial accumulated across all grid steps (the
+      Fig. 4 ``%x`` accumulator register).  A *block-shaped* partial (e.g.
+      ``lambda a, b: a * b``) uses a vectorised (rows, lanes) accumulator
+      folded to the scalar once on the last step — the whole VPU vreg adds
+      every step; a scalar partial (e.g. ``jnp.sum(a * b)``) keeps the
+      legacy (1, 1) accumulator;
     * ``mode="map"`` — one output block, written to a dense write stream
       walking the grid (the output AGU); the result is trimmed to the
       nest's iteration count.
@@ -397,7 +639,9 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     ``operands`` maps :class:`MemRef` names to arrays.  Zero padding is
     applied per stream, so bodies must be padding-neutral for ``reduce``
     (sum/dot-style bodies are).  Plans are cached on the nest signature,
-    built kernels on (nest, policy, mode, body, dtypes, interpret).
+    built kernels on (nest, policy, mode, body key, dtypes, interpret) —
+    see :func:`_body_key`: inline lambdas hit the cache as long as their
+    closure values are hashable and equal.
     """
     if num_lanes is None:
         num_lanes = sum(1 for r in nest.refs if r.is_affine())
@@ -408,7 +652,7 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
         raise ValueError(f"missing operands for streams {missing}")
     prepared = [s.prepare(operands[s.name]) for s in lowered.in_streams]
 
-    key = (nest, policy, mode, body, str(jnp.dtype(out_dtype)),
+    key = (nest, policy, mode, _body_key(body), str(jnp.dtype(out_dtype)),
            tuple((p.shape, str(p.dtype)) for p in prepared),
            num_lanes, interpret)
     fn = _kernel_cache_get(key)
@@ -418,10 +662,67 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
         _kernel_cache_put(key, fn)
 
     out = fn(*prepared)
+    return _trim_output(out, nest.bounds, mode, policy)
+
+
+def _trim_output(out: jax.Array, bounds: Tuple[int, ...], mode: str,
+                 policy: BlockPolicy) -> jax.Array:
     if mode == "reduce":
         return out[0, 0]
     # map: drop the inner-level padding (it interleaves for d > 1 nests),
     # then flatten back to one value per nest iteration.
-    padded_inner = _inner_steps(nest, policy) * policy.block_elems
-    out_nd = out.reshape(*nest.bounds[:-1], padded_inner)
-    return out_nd[..., :nest.bounds[-1]].reshape(-1)
+    padded_inner = _inner_steps_of(bounds, policy) * policy.block_elems
+    out_nd = out.reshape(*bounds[:-1], padded_inner)
+    return out_nd[..., :bounds[-1]].reshape(-1)
+
+
+def ssr_chain_call(nests: Sequence[LoopNest],
+                   bodies: Sequence[Callable[..., jax.Array]],
+                   operands: Dict[str, jax.Array], *,
+                   mode: str = "map",
+                   out_dtype=jnp.float32,
+                   policy: BlockPolicy = DEFAULT_POLICY,
+                   num_lanes: Optional[int] = None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Execute a producer→consumer chain of nests as ONE Pallas kernel.
+
+    ``nests[k]`` and ``nests[k+1]`` must be chainable (see
+    :func:`repro.core.compiler.chain`): the producer's WRITE ref unifies
+    with the consumer's READ ref over one shared iteration space.  The
+    intermediates live in VMEM scratch blocks — they are never stored to
+    (or re-loaded from) HBM, which is the whole point.
+
+    ``bodies[0](*stage0_blocks)`` computes the first intermediate;
+    ``bodies[k](carried_block, *stagek_blocks)`` receives the previous
+    stage's block first.  ``mode`` applies to the *final* stage, with the
+    same contract as :func:`ssr_call` — including the vectorised reduce
+    accumulator when the last body returns a block-shaped partial.  Reduce
+    bodies must be padding-neutral at every stage: the padded tail flows
+    through the whole chain.
+    """
+    nests = tuple(nests)
+    bodies = tuple(bodies)
+    if len(bodies) != len(nests):
+        raise ValueError(
+            f"need one body per nest, got {len(bodies)} bodies for "
+            f"{len(nests)} nests")
+    chained = _chain_for(nests, num_lanes)
+    lowered = lower_chain(chained, policy)
+    flat = lowered.in_streams
+    missing = sorted({s.name for s in flat} - set(operands))
+    if missing:
+        raise ValueError(f"missing operands for streams {missing}")
+    prepared = [s.prepare(operands[s.name]) for s in flat]
+
+    key = ("chain", nests, policy, mode,
+           tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
+           tuple((p.shape, str(p.dtype)) for p in prepared),
+           num_lanes, interpret)
+    fn = _kernel_cache_get(key)
+    if fn is None:
+        fn = _build_chain_kernel(lowered, bodies, mode,
+                                 jnp.dtype(out_dtype), interpret)
+        _kernel_cache_put(key, fn)
+
+    out = fn(*prepared)
+    return _trim_output(out, chained.bounds, mode, policy)

@@ -90,6 +90,7 @@ class StreamReport:
     vmem_bytes: int
     hbm_bytes_streamed: int
     hbm_bytes_unique: int
+    scratch_bytes: int = 0   # kernel-resident VMEM (accumulators, chain links)
 
     @property
     def reuse_factor(self) -> float:
@@ -206,14 +207,24 @@ def ssr_pallas(
             vmem += 2 * bb  # double-buffered (data mover FIFO depth 2)
             streamed += bb * steps
             unique += bb * _unique_blocks(s, grid)
-        if vmem > VMEM_BUDGET_BYTES:
+        # Kernel-resident scratch (reduce accumulators, chained-intermediate
+        # blocks) is single-buffered but counts against the same budget.
+        scratch = 0
+        for sc in scratch_shapes:
+            shape = getattr(sc, "shape", None)
+            dt = getattr(sc, "dtype", None)
+            if shape is not None and dt is not None:
+                scratch += math.prod(shape) * jnp.dtype(dt).itemsize
+        if vmem + scratch > VMEM_BUDGET_BYTES:
             raise ValueError(
-                f"VMEM working set {vmem/2**20:.1f} MiB exceeds budget "
-                f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB — shrink block_shape"
+                f"VMEM working set {(vmem + scratch)/2**20:.1f} MiB exceeds "
+                f"budget {VMEM_BUDGET_BYTES/2**20:.0f} MiB — shrink "
+                "block_shape"
             )
         return StreamReport(grid=grid, vmem_bytes=vmem,
                             hbm_bytes_streamed=streamed,
-                            hbm_bytes_unique=unique)
+                            hbm_bytes_unique=unique,
+                            scratch_bytes=scratch)
 
     fn.report = report  # type: ignore[attr-defined]
     fn.grid = grid  # type: ignore[attr-defined]

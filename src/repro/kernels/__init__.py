@@ -11,6 +11,13 @@ All kernels are validated against the pure-jnp oracles in ``ref.py``
 from . import frontend, ops, ref, registry  # noqa: F401
 from .attention import ssr_flash_attention  # noqa: F401
 from .bitonic import ssr_sort  # noqa: F401
+from .chained import (  # noqa: F401
+    fused_axpy_dot,
+    fused_gemv_relu,
+    fused_stencil1d_relu,
+    fused_sum_sq_diff,
+    fused_cases,
+)
 from .fft import ssr_fft  # noqa: F401
 from .gemm import baseline_matmul, ssr_matmul  # noqa: F401
 from .gemv import baseline_gemv, ssr_gemv  # noqa: F401

@@ -1,0 +1,282 @@
+"""Fused producer→consumer kernels — stream chaining over the registry.
+
+Every unfused composition in the suite pays the same tax: the producer
+kernel stores its full result to HBM and the consumer streams it straight
+back in.  Chaining (the natural next step after SSR — see the chaining ISA
+extension in PAPERS.md) fuses the pair into ONE Pallas kernel whose
+intermediate lives in a VMEM scratch block, eliminating one store and one
+load per element.  Two fusion mechanisms are exercised:
+
+* **geometry reuse** (:class:`~repro.kernels.frontend.ChainedKernel`) —
+  ``gemv+relu`` and ``stencil1d+relu`` keep the producer's stream geometry
+  and bolt the consumer body onto the block before it leaves VMEM;
+* **nest-level chaining** (:func:`repro.core.ssr_chain_call`) —
+  ``sum_sq_diff`` (reduction-of-map) and ``axpy_dot`` go through the full
+  compiler path: ``chain()`` unifies the producer's WRITE ref with the
+  consumer's READ ref, ``lower_chain()`` emits the single fused grid, and
+  the reduce epilogue uses the vectorised (rows, lanes) accumulator.
+
+Each registry entry exposes ``ssr`` = the fused kernel, ``baseline`` = the
+honest unfused two-kernel composition (same streamed engine, intermediate
+through HBM), and ``ref`` = the jnp oracle, so the equivalence suite and
+``kernel_bench`` compare fused-vs-unfused with zero extra wiring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Direction, LoopNest, MemRef, ssr_call, ssr_chain_call
+from repro.core.lowering import DEFAULT_POLICY
+
+from .frontend import BLOCK_ELEMS, ChainedKernel, trim_vector
+from .gemv import _launch as _gemv_launch
+from .gemv import _prepare as _gemv_prepare
+from .gemv import matvec_block, ssr_gemv
+from .registry import KernelEntry, register_kernel
+from .relu import relu_block, ssr_relu
+from .stencil import _launch_1d as _stencil_launch
+from .stencil import _prepare_1d as _stencil_prepare
+from .stencil import ssr_stencil1d, window_block
+
+
+def _padded_blocks(n: int) -> Tuple[int, int]:
+    """Padded 2-D (rows, lanes) layout of an n-element streamed vector."""
+    steps = -(-n // BLOCK_ELEMS)
+    return (steps * DEFAULT_POLICY.rows, DEFAULT_POLICY.lanes)
+
+
+# --------------------------------------------------------------------------
+# gemv + relu (geometry-reuse fusion)
+# --------------------------------------------------------------------------
+
+_gemv_relu = ChainedKernel(
+    "gemv_relu",
+    prepare=_gemv_prepare,
+    launch=_gemv_launch,
+    producer=lambda static: matvec_block,
+    consumer=lambda static: relu_block,
+    finish=lambda out, m: out.reshape(-1)[:m])
+
+
+def fused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
+    """relu(A·x) as one kernel: the row-panel product never leaves VMEM."""
+    return _gemv_relu(a, x, interpret=interpret)
+
+
+def unfused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
+    """The two-kernel composition: A·x round-trips through HBM."""
+    return ssr_relu(ssr_gemv(a, x, interpret=interpret), interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# stencil1d + relu (geometry-reuse fusion)
+# --------------------------------------------------------------------------
+
+_stencil_relu = ChainedKernel(
+    "stencil1d_relu",
+    prepare=_stencil_prepare,
+    launch=_stencil_launch,
+    producer=lambda static: window_block,
+    consumer=lambda static: relu_block,
+    finish=trim_vector)
+
+
+def fused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):
+    """relu(stencil(x)) as one kernel."""
+    return _stencil_relu(x, w, interpret=interpret)
+
+
+def unfused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):
+    return ssr_relu(ssr_stencil1d(x, w, interpret=interpret),
+                    interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# sum_sq_diff: reduction-of-map through the full chain() compiler path
+# --------------------------------------------------------------------------
+
+
+def _chain_nests(n: int, consumer_reads_w: bool) -> Tuple[LoopNest, LoopNest]:
+    """Producer writes the dense intermediate T; consumer reads it back."""
+    producer = LoopNest(
+        bounds=(n,),
+        refs=(MemRef("X", Direction.READ, (1,)),
+              MemRef("Y", Direction.READ, (1,)),
+              MemRef("T", Direction.WRITE, (1,))),
+        compute_per_level=(2,))
+    consumer_refs = [MemRef("T", Direction.READ, (1,))]
+    if consumer_reads_w:
+        consumer_refs.append(MemRef("W", Direction.READ, (1,)))
+    consumer = LoopNest(bounds=(n,), refs=tuple(consumer_refs),
+                        compute_per_level=(1,))
+    return producer, consumer
+
+
+def _map_nest(n: int, names: Tuple[str, ...],
+              compute: int) -> LoopNest:
+    return LoopNest(
+        bounds=(n,),
+        refs=tuple(MemRef(nm, Direction.READ, (1,)) for nm in names),
+        compute_per_level=(compute,))
+
+
+def _sq_diff_block(a, b):
+    d = a - b
+    return d * d
+
+
+def _identity_block(t):
+    return t
+
+
+def fused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None):
+    """Σ (x − y)² as one fused map→reduce kernel (vector accumulator)."""
+    n = x.shape[0]
+    return ssr_chain_call(_chain_nests(n, consumer_reads_w=False),
+                          (_sq_diff_block, _identity_block),
+                          {"X": x, "Y": y}, mode="reduce",
+                          interpret=interpret)
+
+
+def unfused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None):
+    """Two streamed kernels: (x−y)² materialised to HBM, then reduced."""
+    n = x.shape[0]
+    t = ssr_call(_map_nest(n, ("X", "Y"), 2), _sq_diff_block,
+                 {"X": x, "Y": y}, mode="map", interpret=interpret)
+    return ssr_call(_map_nest(n, ("T",), 1), _identity_block, {"T": t},
+                    mode="reduce", interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# axpy → dot: (α·x + y) · w through the chain() compiler path
+# --------------------------------------------------------------------------
+
+
+def _axpy_block(alpha: float) -> Callable:
+    # Fresh lambda per call, but same code object + hashable closure: the
+    # kernel cache keys on (code, closure), so this still hits.
+    return lambda a, b: alpha * a + b
+
+
+def _dot_block(t, w):
+    return t * w
+
+
+def fused_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
+                   alpha: float = 1.0, interpret=None):
+    """(α·x + y)·w fused: the axpy result never touches HBM."""
+    n = x.shape[0]
+    return ssr_chain_call(_chain_nests(n, consumer_reads_w=True),
+                          (_axpy_block(alpha), _dot_block),
+                          {"X": x, "Y": y, "W": w}, mode="reduce",
+                          interpret=interpret)
+
+
+def unfused_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
+                     alpha: float = 1.0, interpret=None):
+    n = x.shape[0]
+    t = ssr_call(_map_nest(n, ("X", "Y"), 2), _axpy_block(alpha),
+                 {"X": x, "Y": y}, mode="map", interpret=interpret)
+    return ssr_call(_map_nest(n, ("T", "W"), 1), _dot_block,
+                    {"T": t, "W": w}, mode="reduce", interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Fused-case table: bench + HLO-elimination checks iterate this.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedCase:
+    """One fused variant plus everything needed to audit the fusion.
+
+    ``inter_type(*args)`` returns the (dtype, dims) of the padded 2-D
+    buffer the *unfused* composition materialises for the intermediate —
+    the buffer whose disappearance ``hlo_analysis`` asserts.
+    """
+
+    name: str
+    fused: Callable
+    unfused: Callable
+    ref: Callable
+    example: Callable
+    inter_type: Callable[..., Tuple[str, Tuple[int, ...]]]
+    tol: Dict[str, float]
+
+
+def _vector_inter(x, *rest, **kw) -> Tuple[str, Tuple[int, ...]]:
+    return ("f32", _padded_blocks(x.shape[0]))
+
+
+def _gemv_inter(a, x, **kw) -> Tuple[str, Tuple[int, ...]]:
+    # the unfused relu stage pads the trimmed gemv result to whole blocks
+    return ("f32", _padded_blocks(a.shape[0]))
+
+
+def _stencil_inter(x, w, **kw) -> Tuple[str, Tuple[int, ...]]:
+    return ("f32", _padded_blocks(x.shape[0] - (w.shape[0] - 1)))
+
+
+def _mk_examples():
+    def ex_gemv(rng, odd: bool = False):
+        m, n = (60, 64) if odd else (64, 64)
+        return ((jnp.asarray(rng.standard_normal((m, n)), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
+
+    def ex_stencil(rng, odd: bool = False):
+        from .stencil import TAPS
+        n = 500 if odd else 1024
+        return ((jnp.asarray(rng.standard_normal(n + TAPS - 1), jnp.float32),
+                 jnp.asarray(rng.standard_normal(TAPS) * 0.3, jnp.float32)),
+                {})
+
+    def ex_ssd(rng, odd: bool = False):
+        n = 5000 if odd else 4096
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
+
+    def ex_axpy(rng, odd: bool = False):
+        n = 3000 if odd else 4096
+        return ((jnp.asarray(rng.standard_normal(n), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32),
+                 jnp.asarray(rng.standard_normal(n), jnp.float32)),
+                {"alpha": 0.5})
+
+    return ex_gemv, ex_stencil, ex_ssd, ex_axpy
+
+
+def fused_cases() -> Tuple[FusedCase, ...]:
+    from . import ref
+
+    ex_gemv, ex_stencil, ex_ssd, ex_axpy = _mk_examples()
+    loose = {"rtol": 1e-3, "atol": 1e-3}
+    reduce_tol = {"rtol": 1e-2, "atol": 1e-2}
+    return (
+        FusedCase("gemv_relu", fused_gemv_relu, unfused_gemv_relu,
+                  ref.gemv_relu_ref, ex_gemv, _gemv_inter, loose),
+        FusedCase("stencil1d_relu", fused_stencil1d_relu,
+                  unfused_stencil1d_relu, ref.stencil1d_relu_ref,
+                  ex_stencil, _stencil_inter, loose),
+        FusedCase("sum_sq_diff", fused_sum_sq_diff, unfused_sum_sq_diff,
+                  ref.sum_sq_diff_ref, ex_ssd, _vector_inter, reduce_tol),
+        FusedCase("axpy_dot", fused_axpy_dot, unfused_axpy_dot,
+                  ref.axpy_dot_ref, ex_axpy, _vector_inter, reduce_tol),
+    )
+
+
+def _register(case: FusedCase) -> None:
+    @register_kernel(case.name)
+    def _entry() -> KernelEntry:
+        return KernelEntry(name=case.name, ssr=case.fused,
+                           baseline=case.unfused, ref=case.ref,
+                           example=case.example, tol=dict(case.tol),
+                           problem=f"fused chain: {case.name}")
+
+
+for _case in fused_cases():
+    _register(_case)

@@ -167,3 +167,66 @@ class MonolithicKernel(_KernelBase):
             interpret=interpret,
         )
         return jax.jit(call)
+
+
+class ChainedKernel(_KernelBase):
+    """A fused producer→consumer kernel (stream chaining).
+
+    Reuses a producer's stream geometry (its ``launch``) unchanged; per grid
+    step the producer body's output block is written to a VMEM scratch —
+    never to HBM — and the ``consumer`` body (a unary block→block post-op)
+    reads it back the same step.  Fusing eliminates the intermediate HBM
+    buffer the unfused two-kernel composition materialises: one store and
+    one load per element, the dominant cost of short chained kernels.
+
+    ``producer(static) -> fn(*in_blocks) -> block`` and
+    ``consumer(static) -> fn(block) -> block`` follow the same builder
+    contract as :class:`StreamKernel` bodies.  The scratch block's shape and
+    dtype come from the launch's (single) output stream, so the consumer
+    must be shape-preserving — chains that change the iteration space need
+    the nest-level :func:`repro.core.ssr_chain_call` instead.
+    """
+
+    def __init__(self, name: str, *, prepare: Callable, launch: Callable,
+                 producer: Callable, consumer: Callable,
+                 finish: Optional[Callable] = None):
+        super().__init__(name, prepare=prepare, finish=finish)
+        self._launch = launch
+        self._producer = producer
+        self._consumer = consumer
+
+    def _build(self, static, arrays, interpret: bool) -> Callable:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+        lc: Launch = self._launch(static, *arrays)
+        if len(lc.out_streams) != 1:
+            raise ValueError(
+                f"{self.name}: ChainedKernel needs exactly one output "
+                "stream to size the intermediate scratch")
+        prod_body = self._producer(static)
+        cons_body = self._consumer(static)
+        n_in = len(lc.in_streams)
+        inter_shape = lc.out_streams[0].block_shape
+        inter_dtype = lc.out_shapes[0].dtype
+
+        def kernel(*refs):
+            in_refs, o_ref = refs[:n_in], refs[n_in]
+            s_ref = refs[n_in + 1]
+            # the intermediate lands in VMEM scratch, never HBM
+            s_ref[...] = jnp.asarray(
+                prod_body(*[r[...] for r in in_refs]),
+                inter_dtype).reshape(inter_shape)
+            o_ref[...] = jnp.asarray(cons_body(s_ref[...]),
+                                     inter_dtype).reshape(inter_shape)
+
+        return ssr_pallas(
+            kernel,
+            grid=lc.grid,
+            in_streams=list(lc.in_streams),
+            out_streams=list(lc.out_streams),
+            out_shapes=list(lc.out_shapes),
+            scratch_shapes=[pltpu.VMEM(inter_shape, inter_dtype),
+                            *lc.scratch_shapes],
+            interpret=interpret,
+            dimension_semantics=lc.dimension_semantics,
+        )

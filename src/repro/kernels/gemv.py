@@ -20,7 +20,8 @@ from .frontend import (ROWS, Launch, MonolithicKernel, StreamKernel,
 from .registry import KernelEntry, register_kernel
 
 
-def _matvec(a, x):
+def matvec_block(a, x):
+    """Pure (ROWS, n)·(1, n)ᵀ row-panel product — shared with fused variants."""
     return jax.lax.dot_general(
         promote(a), promote(x), (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -33,7 +34,7 @@ def _prepare(a, x):
 
 def _ssr_body(static):
     def body(a_ref, x_ref, o_ref):
-        o_ref[...] = _matvec(a_ref[...], x_ref[...])
+        o_ref[...] = matvec_block(a_ref[...], x_ref[...])
 
     return body
 
@@ -63,7 +64,7 @@ def _baseline_body(static):
 
         def step(i, _):
             a = a_ref[pl.dslice(i * ROWS, ROWS), :]
-            o_ref[pl.dslice(i * ROWS, ROWS), :] = _matvec(a, x_ref[...])
+            o_ref[pl.dslice(i * ROWS, ROWS), :] = matvec_block(a, x_ref[...])
             return 0
 
         jax.lax.fori_loop(0, nblk, step, 0)

@@ -55,6 +55,27 @@ def sort(x, *, ssr: Optional[bool] = None):
     return registry.dispatch("bitonic", x, ssr=ssr)
 
 
+# -- fused (stream-chained) ops ---------------------------------------------
+# One kernel each: the producer's result reaches the consumer through a VMEM
+# scratch block, never HBM.  ``ssr=False`` falls back to the jnp oracle.
+
+
+def gemv_relu(a, x, *, ssr: Optional[bool] = None):
+    return registry.dispatch("gemv_relu", a, x, ssr=ssr)
+
+
+def stencil1d_relu(x, w, *, ssr: Optional[bool] = None):
+    return registry.dispatch("stencil1d_relu", x, w, ssr=ssr)
+
+
+def sum_sq_diff(x, y, *, ssr: Optional[bool] = None):
+    return registry.dispatch("sum_sq_diff", x, y, ssr=ssr)
+
+
+def axpy_dot(x, y, w, *, alpha: float = 1.0, ssr: Optional[bool] = None):
+    return registry.dispatch("axpy_dot", x, y, w, alpha=alpha, ssr=ssr)
+
+
 def flash_attention(q, k, v, *, causal: bool = False,
                     window: Optional[int] = None,
                     scale: Optional[float] = None,

@@ -40,12 +40,14 @@ def _ssr_body(static):
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        acc_ref[...] += jnp.sum(
-            promote(x_ref[...]) * promote(y_ref[...])).reshape(1, 1)
+        # Vector accumulation: the whole (8, 128) vreg adds every step —
+        # collapsing each block to a scalar here would serialise the VPU
+        # behind one lane.  The scalar fold happens exactly once, below.
+        acc_ref[...] += promote(x_ref[...]) * promote(y_ref[...])
 
         @pl.when(i == pl.num_programs(0) - 1)
         def _write():
-            o_ref[...] = acc_ref[...]
+            o_ref[...] = jnp.sum(acc_ref[...]).reshape(1, 1)
 
     return body
 
@@ -58,7 +60,7 @@ def _launch(static, x2d, y2d):
         out_streams=(BlockStream((1, 1), lambda i: (0, 0), Direction.WRITE,
                                  name="acc"),),
         out_shapes=(jax.ShapeDtypeStruct((1, 1), jnp.float32),),
-        scratch_shapes=(pltpu.VMEM((1, 1), jnp.float32),),
+        scratch_shapes=(pltpu.VMEM((ROWS, LANES), jnp.float32),),
         dimension_semantics=("arbitrary",),
     )
 

@@ -75,6 +75,30 @@ def sort_ref(x: jax.Array) -> jax.Array:
     return jnp.sort(x)
 
 
+# -- fused (chained) oracles -------------------------------------------------
+
+
+def gemv_relu_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    return relu_ref(gemv_ref(a, x))
+
+
+def stencil1d_relu_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return relu_ref(stencil1d_ref(x, w))
+
+
+def sum_sq_diff_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reduction-of-map: Σ (x − y)² — the fused map→reduce chain."""
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def axpy_dot_ref(x: jax.Array, y: jax.Array, w: jax.Array, *,
+                 alpha: float = 1.0) -> jax.Array:
+    """axpy→dot chain: (α·x + y) · w."""
+    t = alpha * x.astype(jnp.float32) + y.astype(jnp.float32)
+    return jnp.sum(t * w.astype(jnp.float32))
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, window: int | None = None,
                   scale: float | None = None) -> jax.Array:

@@ -20,8 +20,12 @@ from .frontend import (LANES, ROWS, Launch, MonolithicKernel, StreamKernel,
 from .registry import KernelEntry, register_kernel
 
 
-def _relu(x):
+def relu_block(x):
+    """Pure block→block ReLU — shared with the fused (chained) variants."""
     return jnp.maximum(x, jnp.zeros((), x.dtype))
+
+
+_relu = relu_block  # internal alias used by the prepare default
 
 
 def _prepare(x, fn=_relu):

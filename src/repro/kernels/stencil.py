@@ -47,14 +47,22 @@ def _prepare_1d(x, w):
     return (xp2d, xp2d, w.reshape(1, TAPS)), None, n
 
 
+def window_block(lo, hi, w2d):
+    """Pure tap loop over one (1, LANES) block + its halo block.
+
+    Shared by the plain stream kernel and the fused (chained) variants —
+    the fully unrolled fmadd-only hot loop, as a block→block function.
+    """
+    window = jnp.concatenate([promote(lo), promote(hi)], axis=1)
+    acc = jnp.zeros((1, LANES), jnp.float32)
+    for j in range(TAPS):                      # static unroll: fmadds only
+        acc = acc + promote(w2d[0, j]) * window[:, j:j + LANES]
+    return acc
+
+
 def _body_1d(static):
     def body(lo_ref, hi_ref, w_ref, o_ref):
-        window = jnp.concatenate(
-            [promote(lo_ref[...]), promote(hi_ref[...])], axis=1)
-        acc = jnp.zeros((1, LANES), jnp.float32)
-        for j in range(TAPS):                  # static unroll: fmadds only
-            acc = acc + promote(w_ref[0, j]) * window[:, j:j + LANES]
-        o_ref[...] = acc
+        o_ref[...] = window_block(lo_ref[...], hi_ref[...], w_ref[...])
 
     return body
 

@@ -270,3 +270,82 @@ def analyze_computation(comps: Dict[str, Computation], name: str,
 def analyze_hlo(hlo: str, world: int) -> Analysis:
     comps, entry = parse_computations(hlo)
     return analyze_computation(comps, entry, world, {})
+
+
+# --------------------------------------------------------------------------
+# Fusion audit: is the chained intermediate's HBM buffer actually gone?
+# --------------------------------------------------------------------------
+
+
+def count_materialized(hlo: str, dtype: str, dims: Tuple[int, ...]) -> int:
+    """Ops (parameters excluded) whose result materialises ``dtype[dims]``.
+
+    Tuple-typed results (while-loop state etc.) count every matching
+    component: a buffer carried through a loop is still a live buffer.
+    """
+    comps, _ = parse_computations(hlo)
+    want = (dtype, ",".join(str(d) for d in dims))
+    n = 0
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "parameter":
+                continue
+            for dt, ds in _SHAPE_RE.findall(op.result_type):
+                if (dt, ds) == want:
+                    n += 1
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionCheck:
+    """Compiled-HLO evidence for (or against) intermediate elimination.
+
+    ``*_buffers`` counts materialisations of the intermediate's exact
+    padded type in each program; ``*_bytes_out`` is the total output-bytes
+    traffic proxy from :func:`analyze_hlo`.  The fused program must both
+    materialise strictly fewer intermediate-typed buffers and move fewer
+    bytes — otherwise the "fusion" just hid the copy somewhere else.
+    """
+
+    dtype: str
+    dims: Tuple[int, ...]
+    fused_buffers: int
+    unfused_buffers: int
+    fused_bytes_out: float
+    unfused_bytes_out: float
+
+    @property
+    def intermediate_eliminated(self) -> bool:
+        return (self.fused_buffers < self.unfused_buffers
+                and self.fused_bytes_out < self.unfused_bytes_out)
+
+    @property
+    def bytes_saved(self) -> float:
+        return self.unfused_bytes_out - self.fused_bytes_out
+
+
+def check_fusion(fused_fn, unfused_fn, args, kwargs,
+                 dtype: str, dims: Tuple[int, ...],
+                 world: int = 1) -> FusionCheck:
+    """Compile both variants and audit the intermediate buffer.
+
+    ``dtype``/``dims`` describe the padded 2-D buffer the unfused
+    composition materialises between its kernels (HLO spelling, e.g.
+    ``("f32", (32, 128))``).  Compilation happens on the host backend —
+    the *structure* (which buffers exist) is what is asserted, and that is
+    backend-independent for the interpret/Mosaic pair by construction.
+    """
+    import jax  # deferred: this module is otherwise jax-free text analysis
+
+    def lower(fn):
+        wrapped = jax.jit(lambda *a: fn(*a, **kwargs))
+        return wrapped.lower(*args).compile().as_text()
+
+    fused_hlo = lower(fused_fn)
+    unfused_hlo = lower(unfused_fn)
+    return FusionCheck(
+        dtype=dtype, dims=tuple(dims),
+        fused_buffers=count_materialized(fused_hlo, dtype, dims),
+        unfused_buffers=count_materialized(unfused_hlo, dtype, dims),
+        fused_bytes_out=analyze_hlo(fused_hlo, world).bytes_out,
+        unfused_bytes_out=analyze_hlo(unfused_hlo, world).bytes_out)

@@ -117,6 +117,64 @@ class TestLoweringRejections:
         with pytest.raises(LoweringError, match="no stream allocations"):
             lower_plan(plan)
 
+    def test_unaligned_offset_rejected(self):
+        # A varying stream whose base offset is not a whole number of
+        # blocks cannot be served by whole-block DMA.
+        nest = LoopNest(bounds=(2048,),
+                        refs=(MemRef("A", Direction.READ, (1,), offset=64),),
+                        compute_per_level=(1,))
+        with pytest.raises(LoweringError, match="block-aligned"):
+            lower_plan(ssrify(nest, force=True))
+
+
+class TestKernelCache:
+    def _dot_once(self, n, body):
+        nest = compiler.dot_product_nest(n)
+        fixed = np.random.default_rng(21)
+        x = jnp.asarray(fixed.standard_normal(n), jnp.float32)
+        y = jnp.asarray(fixed.standard_normal(n), jnp.float32)
+        return ssr_call(nest, body, {"A": x, "B": y})
+
+    def test_inline_lambda_hits_cache(self):
+        # the fixed footgun: a lambda re-created per call shares its code
+        # object, so the second call must reuse the built kernel
+        L._kernel_cache.clear()
+        for _ in range(3):
+            self._dot_once(2048, lambda a, b: jnp.sum(a * b))
+        assert len(L._kernel_cache) == 1
+
+    def test_closure_values_distinguish_kernels(self):
+        # same code object, different (hashable) closure values: the cache
+        # must NOT conflate them
+        L._kernel_cache.clear()
+        outs = []
+        for scale in (1.0, 2.0):
+            outs.append(self._dot_once(
+                2048, lambda a, b: jnp.sum(a * b) * scale))
+        assert len(L._kernel_cache) == 2
+        np.testing.assert_allclose(2 * float(outs[0]), float(outs[1]),
+                                   rtol=1e-5)
+
+    def test_unhashable_closure_falls_back_to_identity(self):
+        c = jnp.ones((1,), jnp.float32)  # arrays are unhashable
+        body = lambda a, b: jnp.sum(a * b) + c[0]  # noqa: E731
+        assert L._body_key(body) is body
+
+    def test_lru_eviction_at_cache_max(self, monkeypatch):
+        monkeypatch.setattr(L, "_KERNEL_CACHE_MAX", 2)
+        L._kernel_cache.clear()
+        bodies = [lambda a, b: jnp.sum(a * b),
+                  lambda a, b: jnp.sum(a + b),
+                  lambda a, b: jnp.sum(a - b)]
+        keys = []
+        for body in bodies:
+            self._dot_once(2048, body)
+            keys.append(next(reversed(L._kernel_cache)))
+        assert len(L._kernel_cache) == 2
+        # oldest entry evicted, newest two retained
+        assert keys[0] not in L._kernel_cache
+        assert keys[1] in L._kernel_cache and keys[2] in L._kernel_cache
+
 
 class TestSsrCall:
     @pytest.mark.parametrize("n", [1024, 5000, 8192])

@@ -12,7 +12,10 @@ from repro.core import ssr_region
 from repro.kernels import ops, registry
 
 EXPECTED = {"reduction", "scan", "relu", "stencil1d", "stencil2d", "gemv",
-            "gemm", "fft", "bitonic", "attention"}
+            "gemm", "fft", "bitonic", "attention",
+            # fused (stream-chained) variants: ssr = fused single kernel,
+            # baseline = unfused two-kernel composition
+            "gemv_relu", "stencil1d_relu", "sum_sq_diff", "axpy_dot"}
 
 
 def _assert_close(got, want, tol):
