@@ -246,9 +246,11 @@ def bench_fused(quick: bool = False, check_hlo: bool = True) -> List[Dict]:
 # --------------------------------------------------------------------------
 
 
-def write_bench_json(rows: Sequence[Dict], path: str, quick: bool) -> None:
+def write_bench_json(rows: Sequence[Dict], path: str, quick: bool,
+                     **extra) -> None:
+    """Persist one BENCH_*.json document (shared with cluster_bench)."""
     doc = {"schema": BENCH_SCHEMA, "generated_unix": time.time(),
-           "quick": bool(quick), "results": list(rows)}
+           "quick": bool(quick), "results": list(rows), **extra}
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"\nwrote {len(rows)} results to {path}")

@@ -3,12 +3,21 @@
 Each function returns a list of CSV rows ``(name, value, derived)`` and
 prints a human-readable table.  These are the *reproduction* artifacts: the
 asserted numbers live in tests/test_isa_model.py; here they are emitted for
-EXPERIMENTS.md.
+EXPERIMENTS.md::
+
+    PYTHONPATH=src python benchmarks/paper_tables.py --write-experiments
+
+regenerates the committed ``EXPERIMENTS.md`` (CI fails if it is stale —
+``tools/check_docs.py``).  The rendering is deterministic: every number is
+closed-form from :mod:`repro.core.isa`/:mod:`repro.core.compiler` except
+the one executed-kernel check, whose value is normalised to its asserted
+bound before writing.
 """
 
 from __future__ import annotations
 
-from typing import List, Tuple
+import argparse
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core import compiler, isa
 
@@ -156,15 +165,142 @@ def tab_registry() -> List[Tuple[str, float, str]]:
     modeled = {k.name for k in isa.kernel_suite()}
     rows = []
     for entry in registry.entries():
-        variants = ",".join(sorted(entry.variants()))
+        variants = ",".join(sorted({**entry.variants(),
+                                    **entry.cluster_variants()}))
         in_model = "yes" if entry.name in modeled else "no"
         print(f"{entry.name:12s} {entry.problem:26s} variants=[{variants}] "
               f"fig7-model={in_model}")
-        rows.append((f"registry/{entry.name}", float(len(entry.variants())),
+        n_var = len(entry.variants()) + len(entry.cluster_variants())
+        rows.append((f"registry/{entry.name}", float(n_var),
                      f"variants {variants}; modeled {in_model}"))
+    return rows
+
+
+def tab_cluster() -> List[Tuple[str, float, str]]:
+    """§5.3–5.5 on the explicit per-core model (`compiler.cluster_cost`).
+
+    Unlike :func:`fig11_cluster` (the paper's calibrated Amdahl fit), these
+    numbers come from the same Eq. (1)–(3) accounting the execution layer
+    shards: per-core instruction counts on ceil tiles plus a log2 combine
+    tree.  The speedup-vs-cores and iso-performance curves here are what
+    ``benchmarks/cluster_bench.py`` re-emits next to measured agreement.
+    """
+    print("\n== cluster model: speedup vs cores (dot, n=2048) ==")
+    rows = []
+    nest = compiler.dot_product_nest(2048)
+    for c in (1, 2, 4, 8):
+        rep = compiler.cluster_cost(nest, c)
+        print(f"C={c}: N_cluster={rep.n_cluster:5d}  S={rep.speedup:5.2f}  "
+              f"eta={rep.eta_cluster:6.1%}  fetches={rep.total_fetches}")
+        rows.append((f"cluster/dot2048/C{c}", rep.speedup,
+                     f"N {rep.n_cluster}; eta {rep.eta_cluster:.3f}"))
+    for base_c in (4, 6, 8):
+        iso = compiler.iso_performance_cores(nest, base_c)
+        print(f"iso-performance: {iso} SSR cores match {base_c} baseline "
+              f"cores ({base_c / iso:.1f}x fewer; paper: 3x)")
+        rows.append((f"cluster/iso/base{base_c}", float(iso),
+                     f"{base_c / iso:.2f}x fewer cores"))
     return rows
 
 
 ALL = [tab2_isa, fig4_counts, fig6_amortization, fig7_kernel_speedup,
        fig8_utilization, fig11_cluster, tab3_cores, tab5_compiler,
-       tab_registry]
+       tab_registry, tab_cluster]
+
+# Section headers for EXPERIMENTS.md, one per ALL entry (same order).
+SECTIONS = [
+    ("Table 2 — ISA-level hot-loop impact",
+     "Instruction count N, useful utilization η, and speedup S per hot "
+     "loop, across {standard RV32, +hardware loops, +post-increment} × "
+     "{int32, fp32} (paper Table 2, reproduced exactly)."),
+    ("Fig. 4 — dot product instruction counts",
+     "The running example at N=1000: 3001 baseline vs 1012 SSR executed "
+     "instructions."),
+    ("Fig. 6 — amortization of d-dimensional reductions",
+     "η over l^d hypercubes and the Eq. (3) break-even side lengths."),
+    ("Fig. 7 — per-kernel SSR speedup",
+     "Steady-state trace model of the §4.2 kernel suite; the paper's band "
+     "is 2.0x–3.7x."),
+    ("Fig. 8 — useful ALU/FPU utilization per kernel",
+     "Baseline vs SSR utilization from the same schedules."),
+    ("Fig. 11 — cluster equivalence (Amdahl model)",
+     "SSR-cluster sizes matching a 6-core baseline cluster; σ calibrated "
+     "to the paper's 2.2x six-core point."),
+    ("Table 3 — utilization-limit classes",
+     "Issue-width/streaming utilization ceilings on long reductions "
+     "(§5.6.1)."),
+    ("§5.5 — compiler pass vs manual mapping",
+     "Automated SSR-ification overhead, plus the compiled plan *executed* "
+     "end to end through lower_plan/ssr_call."),
+    ("Kernel registry coverage",
+     "Executable ssr/baseline/ref variants per kernel, cross-referenced "
+     "against the Fig. 7/8 analytic suite."),
+    ("§5.3–5.5 — per-core cluster model",
+     "Speedup vs cores and iso-performance core counts from the explicit "
+     "Eq. (1)–(3) per-core model that `parallel/cluster.py` executes; the "
+     "full sweep (with measured agreement) lands in BENCH_cluster.json "
+     "via benchmarks/cluster_bench.py."),
+]
+
+
+def _stable_value(name: str, value: float) -> str:
+    """Deterministic rendering: executed-kernel errors become their
+    asserted bound (the raw float varies across BLAS/jax builds)."""
+    if "relerr" in name:
+        if not value < 1e-5:
+            raise AssertionError(
+                f"{name}: executed plan diverged from oracle ({value})")
+        return "< 1e-05"
+    return f"{value:.6g}"
+
+
+def render_experiments() -> str:
+    """EXPERIMENTS.md content: one section per paper table/figure."""
+    assert len(SECTIONS) == len(ALL)
+    out = [
+        "# EXPERIMENTS — reproduced tables and figures",
+        "",
+        "Generated by `PYTHONPATH=src python benchmarks/paper_tables.py "
+        "--write-experiments`.",
+        "**Do not edit by hand** — CI regenerates this file and fails if "
+        "it is stale.",
+        "",
+        "Every number is derived from the exact ISA model "
+        "(`src/repro/core/isa.py`) or the compiler cost model "
+        "(`src/repro/core/compiler.py`); the same quantities are asserted "
+        "in `tests/test_isa_model.py`.  Wall-clock and agreement numbers "
+        "for the executable kernels live in [BENCH_kernels.json]"
+        "(BENCH_kernels.json) and [BENCH_cluster.json](BENCH_cluster.json).",
+        "",
+    ]
+    for (title, blurb), fn in zip(SECTIONS, ALL):
+        rows = fn()
+        out += [f"## {title}", "", blurb, "",
+                "| metric | value | notes |", "|---|---|---|"]
+        for name, value, derived in rows:
+            out.append(f"| `{name}` | {_stable_value(name, value)} "
+                       f"| {derived} |")
+        out.append("")
+    return "\n".join(out) + "\n"
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write-experiments", action="store_true",
+                    help="render EXPERIMENTS.md instead of just printing")
+    ap.add_argument("--out", default="EXPERIMENTS.md",
+                    help="output path (default: %(default)s)")
+    args = ap.parse_args(argv)
+    if args.write_experiments:
+        text = render_experiments()
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"\nwrote {args.out} ({len(text.splitlines())} lines)")
+        return 0
+    for fn in ALL:
+        fn()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,4 +1,12 @@
-"""Core SSR library: the paper's contribution as composable JAX modules."""
+"""Core SSR library: the paper's contribution as composable JAX modules.
+
+Paper-section map (details per module, full table in DESIGN.md §2):
+``stream`` (§2/§3.1 AGU config registers), ``agu`` (§3.1 address
+generation), ``ssr`` (§2 stream-semantic operand delivery), ``compiler``
+(§3.2 SSR-ification pass + chaining), ``lowering`` (§3.2 step 4–5: config
+emission and region execution), ``isa`` (§4/§5 exact cost models),
+``region`` (§2.2.2 ``ssrcfg`` CSR).
+"""
 
 from .stream import (  # noqa: F401
     Direction,
@@ -44,15 +52,20 @@ from .ssr import (  # noqa: F401
 )
 from .compiler import (  # noqa: F401
     Allocation,
+    COMBINE_COST,
     ChainError,
     ChainLink,
     ChainedPlan,
+    ClusterReport,
+    CoreCost,
     LoopNest,
     MemRef,
     StreamPlan,
     chain,
+    cluster_cost,
     dot_product_nest,
     gemm_nest,
+    iso_performance_cores,
     ssrify,
 )
 from .lowering import (  # noqa: F401

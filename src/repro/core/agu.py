@@ -1,8 +1,8 @@
-"""Vectorised address-generation unit (AGU) model.
+"""Vectorised address-generation unit (AGU) model (paper §3.1, Fig. 3).
 
 ``StreamSpec.addresses()`` is the plain-Python oracle; this module provides the
 JAX-native equivalents used by kernels, the compiler pass, and property tests.
-The AGU is the heart of the paper's data mover (Fig. 3): it turns the
+The AGU is the heart of the paper's data mover (§3.1): it turns the
 ``bound/stride/repeat`` configuration into the address sequence that feeds the
 FIFO.  On TPU we use it two ways:
 

@@ -361,6 +361,240 @@ def chain(nests: Sequence[LoopNest], *,
                        eliminated_loads=elems, eliminated_stores=elems)
 
 
+# --------------------------------------------------------------------------
+# Cluster cost model: Eq. (1)–(3) extended to a C-core cluster (§5.3–5.5).
+#
+# The paper runs the kernels on an 8-core cluster sharing one TCDM and
+# reports speedup-vs-cores (Fig. 10/11), near-100 % utilization, and the
+# iso-performance claim that 3× fewer SSR cores match a baseline cluster.
+# Here the model is made explicit: the outermost loop level is tiled across
+# C cores (ceil tiles — the max core bounds the cluster, exactly Amdahl's
+# straggler), each core pays its own Eq. (1) count including its own stream
+# setup, and the combine is a log2-depth barrier/psum tree (the event-unit
+# + shared-TCDM reduction).  η per cluster charges idle issue slots on
+# underloaded cores, which is how the paper's single-core 3× decays toward
+# 2.2× at six cores (§5.4).
+# --------------------------------------------------------------------------
+
+#: Instructions charged per stage of the combine tree: the §5.3 hardware
+#: barrier (event-unit wait/wake) plus one partial-sum load+add+store.
+COMBINE_COST = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreCost:
+    """One core's share of a clustered nest, in Eq. (1) accounting.
+
+    ``n`` is the executed-instruction count on this core (0 for cores left
+    idle by a ragged split); on a single-issue core every executed
+    instruction is also an instruction *fetch*, so ``fetches == n`` — the
+    quantity behind the paper's 3.5× i-fetch reduction (§5.6).
+    ``bytes_moved`` counts the unique elements this core's allocated
+    streams pull from shared memory (repeat streams once), at 4 B/elem.
+    """
+
+    core: int
+    bounds: Tuple[int, ...]
+    n: int
+    compute: int
+    bytes_moved: int
+
+    @property
+    def eta(self) -> float:
+        return self.compute / self.n if self.n else 0.0
+
+    @property
+    def fetches(self) -> int:
+        return self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterReport:
+    """Eq. (1)–(3) extended to C cores (§5.3–5.5 / Fig. 10–11).
+
+    ``n_single`` is the one-core streamed count; the cluster finishes when
+    its slowest core does, plus the combine tree: ``n_cluster =
+    max_c n_c + combine``.  ``speedup`` is therefore the architectural
+    speedup-vs-cores curve, and ``eta_cluster`` the cluster-wide useful
+    utilization (idle cores charged), the two §V quantities
+    ``benchmarks/cluster_bench.py`` sweeps.
+    """
+
+    cores: int
+    bounds: Tuple[int, ...]
+    per_core: Tuple[CoreCost, ...]
+    n_single: int
+    n_base_single: int
+    combine: int
+    chained: bool = False
+    eliminated_accesses: int = 0
+
+    @property
+    def n_cluster(self) -> int:
+        return max(c.n for c in self.per_core) + self.combine
+
+    @property
+    def speedup(self) -> float:
+        """Architectural speedup of the C-core cluster over one SSR core."""
+        return self.n_single / self.n_cluster
+
+    @property
+    def speedup_vs_base(self) -> float:
+        """Speedup over one *baseline* (no-SSR) core — the Fig. 11 axis."""
+        return self.n_base_single / self.n_cluster
+
+    @property
+    def eta_cluster(self) -> float:
+        total_compute = sum(c.compute for c in self.per_core)
+        return total_compute / (self.cores * self.n_cluster)
+
+    @property
+    def total_fetches(self) -> int:
+        return sum(c.fetches for c in self.per_core) \
+            + self.cores * self.combine
+
+    @property
+    def bytes_moved(self) -> int:
+        return sum(c.bytes_moved for c in self.per_core)
+
+
+def _nest_compute(nest: LoopNest) -> int:
+    """Useful ops of one nest execution: Σ_i I_i · Π_{n≤i} L_n."""
+    prod, total = 1, 0
+    for Li, Ii in zip(nest.bounds, nest.compute_per_level):
+        prod *= Li
+        total += Ii * prod
+    return total
+
+
+def _plan_bytes(plan: StreamPlan, itemsize: int = 4) -> int:
+    """Unique streamed elements across the plan's lanes, in bytes."""
+    total = 0
+    for a in plan.allocations:
+        elems = 1
+        for b, c in zip(plan.nest.bounds, a.ref.coeffs):
+            if c != 0:
+                elems *= b
+        total += elems * itemsize
+    return total
+
+
+def _tile_extents(b0: int, cores: int) -> List[int]:
+    """Ceil-tile split of the outer bound: the max tile bounds the cluster."""
+    tile = -(-b0 // cores)
+    return [max(0, min(tile, b0 - c * tile)) for c in range(cores)]
+
+
+def _combine_instrs(cores: int, combine_cost: int) -> int:
+    return combine_cost * (cores - 1).bit_length() if cores > 1 else 0
+
+
+def _auto_lanes(nest: LoopNest, num_lanes: Optional[int]) -> int:
+    if num_lanes is not None:
+        return num_lanes
+    return max(1, sum(1 for r in nest.refs if r.is_affine()))
+
+
+def cluster_cost(nests, cores: int, *,
+                 num_lanes: Optional[int] = None,
+                 combine_cost: int = COMBINE_COST) -> ClusterReport:
+    """Cost a nest (or producer→consumer chain) on a C-core cluster.
+
+    Accepts a single :class:`LoopNest` or a chainable sequence (routed
+    through :func:`chain` per core, so chained intermediates stay core-
+    local and their eliminated accesses scale with the split).  The split
+    is ceil-tiled on the outermost level — no divisibility requirement
+    here, unlike the execution layer, because the *model's* cluster time is
+    set by the largest tile either way.
+    """
+    if cores < 1:
+        raise ValueError(f"cores must be >= 1, got {cores}")
+    single = isinstance(nests, LoopNest)
+    seq: Tuple[LoopNest, ...] = (nests,) if single else tuple(nests)
+    bounds = seq[0].bounds
+    extents = _tile_extents(bounds[0], cores)
+
+    def sub_nests(e: int) -> Tuple[LoopNest, ...]:
+        return tuple(dataclasses.replace(n, bounds=(e,) + n.bounds[1:])
+                     for n in seq)
+
+    if single:
+        lanes = _auto_lanes(seq[0], num_lanes)
+        full = ssrify(seq[0], num_lanes=lanes, force=True)
+        n_single, n_base_single = full.n_ssr, full.n_base
+    else:
+        full_chain = chain(seq, num_lanes=num_lanes, force=True)
+        n_single = full_chain.n_chain
+        n_base_single = sum(
+            ssrify(n, num_lanes=_auto_lanes(n, num_lanes)).n_base
+            for n in seq)
+
+    per_core: List[CoreCost] = []
+    eliminated = 0
+    for c, e in enumerate(extents):
+        if e == 0:
+            per_core.append(CoreCost(core=c, bounds=(0,) + bounds[1:],
+                                     n=0, compute=0, bytes_moved=0))
+            continue
+        subs = sub_nests(e)
+        if single:
+            plan = ssrify(subs[0], num_lanes=_auto_lanes(subs[0], num_lanes),
+                          force=True)
+            n = plan.n_ssr
+            comp = _nest_compute(subs[0])
+            nbytes = _plan_bytes(plan)
+        else:
+            cp = chain(subs, num_lanes=num_lanes, force=True)
+            n = cp.n_chain
+            comp = sum(_nest_compute(s) for s in subs)
+            nbytes = sum(_plan_bytes(p) for p in cp.stages)
+            eliminated += cp.eliminated_accesses
+        per_core.append(CoreCost(core=c, bounds=subs[0].bounds, n=n,
+                                 compute=comp, bytes_moved=nbytes))
+
+    return ClusterReport(cores=cores, bounds=bounds,
+                         per_core=tuple(per_core),
+                         n_single=n_single, n_base_single=n_base_single,
+                         combine=_combine_instrs(cores, combine_cost),
+                         chained=not single,
+                         eliminated_accesses=eliminated)
+
+
+def iso_performance_cores(nests, baseline_cores: int, *,
+                          num_lanes: Optional[int] = None,
+                          combine_cost: int = COMBINE_COST,
+                          max_cores: int = 64) -> int:
+    """Smallest SSR-core count matching a C-core *baseline* cluster.
+
+    The §5.5/Fig. 11 claim — "3x fewer cores are needed in a cluster to
+    achieve the same performance" — replayed on the explicit per-core
+    model: the baseline cluster runs Eq. (2) counts (explicit loads in the
+    hot loop) on each tile; we grow the SSR cluster until its ``n_cluster``
+    is no worse.
+    """
+    single = isinstance(nests, LoopNest)
+    seq: Tuple[LoopNest, ...] = (nests,) if single else tuple(nests)
+    extents = _tile_extents(seq[0].bounds[0], baseline_cores)
+    worst = 0
+    for e in extents:
+        if e == 0:
+            continue
+        n_b = 0
+        for nest in seq:
+            sub = dataclasses.replace(nest, bounds=(e,) + nest.bounds[1:])
+            n_b += ssrify(sub, num_lanes=_auto_lanes(sub, num_lanes)).n_base
+        worst = max(worst, n_b)
+    target = worst + _combine_instrs(baseline_cores, combine_cost)
+    for c in range(1, max_cores + 1):
+        rep = cluster_cost(nests if single else seq, c,
+                           num_lanes=num_lanes, combine_cost=combine_cost)
+        if rep.n_cluster <= target:
+            return c
+    raise ValueError(
+        f"no SSR cluster of <= {max_cores} cores matches {baseline_cores} "
+        "baseline cores — combine overhead dominates this nest")
+
+
 def dot_product_nest(n: int) -> LoopNest:
     """The running example (Fig. 4): sum += A[i]*B[i]."""
     return LoopNest(

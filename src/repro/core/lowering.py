@@ -369,20 +369,26 @@ def _body_key(body: Callable) -> Any:
     Keying on the function *object* is a footgun: an inline lambda is a
     fresh object every call, so every call silently rebuilds (and re-jits)
     the kernel.  Python compiles the lambda's code object once per source
-    location, so ``(code, closure values, defaults)`` identifies the body's
-    behaviour — two lambdas from the same line with equal closures share a
-    kernel.  Unhashable closure contents (e.g. captured arrays) fall back
+    location, so ``(code, bound self, closure values, defaults,
+    kw-defaults)`` identifies the body's behaviour — two lambdas from the
+    same line with equal closures share a kernel, while bound methods of
+    *different* instances (per-instance state lives on ``__self__``, not
+    in the code or closure) and factories varying a keyword-only default
+    do not collide.  Unhashable contents (e.g. captured arrays) fall back
     to object identity: never stale, just uncached across re-creations.
     """
     code = getattr(body, "__code__", None)
     if code is None:
         return body
     cells = getattr(body, "__closure__", None) or ()
+    kwdefs = getattr(body, "__kwdefaults__", None) or {}
     try:
-        key = (code, tuple(c.cell_contents for c in cells),
-               getattr(body, "__defaults__", None) or ())
+        key = (code, getattr(body, "__self__", None),
+               tuple(c.cell_contents for c in cells),
+               getattr(body, "__defaults__", None) or (),
+               tuple(sorted(kwdefs.items())))
         hash(key)
-    except TypeError:
+    except (TypeError, ValueError):  # unhashable content / empty cell
         return body
     return key
 

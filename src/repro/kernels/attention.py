@@ -1,8 +1,9 @@
 """Streaming flash attention — the SSR technique applied to the LM hot spot.
 
-Attention *is* the paper's reduction writ large: for each query tile the
-K/V operands stream past the compute unit once, with an online-softmax
-accumulator playing the role of the ``%x`` register.  The mapping:
+Attention *is* the paper's reduction (§4.1/Fig. 4) writ large: for each
+query tile the K/V operands stream past the compute unit once, with an
+online-softmax accumulator playing the role of the ``%x`` register.  The
+mapping (paper §2–3 concepts → this kernel):
 
 * K and V are **read streams** over the kv axis (AGU loop 2), revisited per
   query tile (AGU loop 1) — block reuse = repeat register.

@@ -25,7 +25,7 @@ through HBM), and ``ref`` = the jnp oracle, so the equivalence suite and
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +152,24 @@ def unfused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None):
                     mode="reduce", interpret=interpret)
 
 
+def cluster_sum_sq_diff(x: jax.Array, y: jax.Array, *, cores: int,
+                        interpret=None):
+    """Σ (x − y)² on a C-core cluster: chaining × clustering composed.
+
+    Each core runs the whole fused map→reduce chain on its tile — the
+    (x−y)² intermediate stays in that core's VMEM scratch — and only the
+    final partial crosses cores, via one ``psum`` (§5.3's shared-TCDM
+    combine).  Zero padding is neutral: (0−0)² = 0.
+    """
+    from repro.parallel.cluster import cluster_chain_call, pad_to_cores
+
+    (x, y), n_pad = pad_to_cores((x, y), cores)
+    return cluster_chain_call(_chain_nests(n_pad, consumer_reads_w=False),
+                              (_sq_diff_block, _identity_block),
+                              {"X": x, "Y": y}, mode="reduce", cores=cores,
+                              interpret=interpret)
+
+
 # --------------------------------------------------------------------------
 # axpy → dot: (α·x + y) · w through the chain() compiler path
 # --------------------------------------------------------------------------
@@ -186,6 +204,23 @@ def unfused_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
                     {"T": t, "W": w}, mode="reduce", interpret=interpret)
 
 
+def cluster_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
+                     alpha: float = 1.0, cores: int = 1, interpret=None):
+    """(α·x + y)·w on a C-core cluster, fused chain per core.
+
+    Same composition as :func:`cluster_sum_sq_diff`: the axpy intermediate
+    never leaves its core's VMEM, one ``psum`` finishes the dot.  Zero
+    padding is neutral: (α·0 + 0)·0 = 0.
+    """
+    from repro.parallel.cluster import cluster_chain_call, pad_to_cores
+
+    (x, y, w), n_pad = pad_to_cores((x, y, w), cores)
+    return cluster_chain_call(_chain_nests(n_pad, consumer_reads_w=True),
+                              (_axpy_block(alpha), _dot_block),
+                              {"X": x, "Y": y, "W": w}, mode="reduce",
+                              cores=cores, interpret=interpret)
+
+
 # --------------------------------------------------------------------------
 # Fused-case table: bench + HLO-elimination checks iterate this.
 # --------------------------------------------------------------------------
@@ -197,7 +232,8 @@ class FusedCase:
 
     ``inter_type(*args)`` returns the (dtype, dims) of the padded 2-D
     buffer the *unfused* composition materialises for the intermediate —
-    the buffer whose disappearance ``hlo_analysis`` asserts.
+    the buffer whose disappearance ``hlo_analysis`` asserts.  ``cluster``
+    (optional) is the multi-core variant, forwarded to the registry entry.
     """
 
     name: str
@@ -207,6 +243,7 @@ class FusedCase:
     example: Callable
     inter_type: Callable[..., Tuple[str, Tuple[int, ...]]]
     tol: Dict[str, float]
+    cluster: Optional[Callable] = None
 
 
 def _vector_inter(x, *rest, **kw) -> Tuple[str, Tuple[int, ...]]:
@@ -263,9 +300,11 @@ def fused_cases() -> Tuple[FusedCase, ...]:
                   unfused_stencil1d_relu, ref.stencil1d_relu_ref,
                   ex_stencil, _stencil_inter, loose),
         FusedCase("sum_sq_diff", fused_sum_sq_diff, unfused_sum_sq_diff,
-                  ref.sum_sq_diff_ref, ex_ssd, _vector_inter, reduce_tol),
+                  ref.sum_sq_diff_ref, ex_ssd, _vector_inter, reduce_tol,
+                  cluster=cluster_sum_sq_diff),
         FusedCase("axpy_dot", fused_axpy_dot, unfused_axpy_dot,
-                  ref.axpy_dot_ref, ex_axpy, _vector_inter, reduce_tol),
+                  ref.axpy_dot_ref, ex_axpy, _vector_inter, reduce_tol,
+                  cluster=cluster_axpy_dot),
     )
 
 
@@ -274,6 +313,7 @@ def _register(case: FusedCase) -> None:
     def _entry() -> KernelEntry:
         return KernelEntry(name=case.name, ssr=case.fused,
                            baseline=case.unfused, ref=case.ref,
+                           cluster=case.cluster,
                            example=case.example, tol=dict(case.tol),
                            problem=f"fused chain: {case.name}")
 

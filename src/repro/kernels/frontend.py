@@ -1,7 +1,9 @@
 """Shared kernel frontend: pad → reshape → stream dispatch → trim, once.
 
-Every kernel in the suite used to re-implement the same four steps around
-its compute body: zero-pad operands to whole VMEM blocks, reshape to the
+This is the loop prologue/epilogue of the paper's Fig. 4 (steps ① and ④ —
+stream setup before the region, result write-back after), factored out of
+the §4.2 kernel suite.  Every kernel used to re-implement the same four
+steps around its compute body: zero-pad operands to whole VMEM blocks, reshape to the
 2-D (rows, lanes) layout the streams address, build + jit the ``ssr_pallas``
 call, and trim the padding off the result.  :class:`StreamKernel` owns that
 pipeline; a kernel module now declares only

@@ -87,6 +87,27 @@ def baseline_gemv(a: jax.Array, x: jax.Array, *, interpret=None) -> jax.Array:
     return _base(a, x, interpret=interpret)
 
 
+def cluster_gemv(a: jax.Array, x: jax.Array, *, cores: int,
+                 interpret=None) -> jax.Array:
+    """GEMV on a C-core cluster (paper §5.3): row-block split.
+
+    GEMV is a reduction *per row*, so the nest-level map/reduce modes do
+    not apply; instead the output rows split across cores
+    (``cluster_kernel``): each core runs the unchanged streamed GEMV on
+    its row panel with the x repeat-stream replicated (every core holds
+    its own copy — the TCDM broadcast), and the row tiles concatenate
+    with no collective at all.
+    """
+    from repro.parallel.cluster import cluster_kernel
+
+    m = a.shape[0]
+    a = pad_leading(a, cores * ROWS)
+    out = cluster_kernel(
+        lambda ac, xc: ssr_gemv(ac, xc, interpret=interpret),
+        (a, x), cores=cores, in_dims=(0, None), out_dim=0)
+    return out.reshape(-1)[:m]
+
+
 @register_kernel("gemv")
 def _entry() -> KernelEntry:
     from . import ref
@@ -97,6 +118,7 @@ def _entry() -> KernelEntry:
                  jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
 
     return KernelEntry(name="gemv", ssr=ssr_gemv, baseline=baseline_gemv,
-                       ref=ref.gemv_ref, example=example,
+                       ref=ref.gemv_ref, cluster=cluster_gemv,
+                       example=example,
                        tol={"rtol": 1e-3, "atol": 1e-3},
                        problem="64×64 · 64")

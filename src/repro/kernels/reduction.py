@@ -96,6 +96,24 @@ def ssr_dot(x: jax.Array, y: jax.Array, *, interpret=None) -> jax.Array:
     return _ssr(x, y, interpret=interpret)
 
 
+def cluster_dot(x: jax.Array, y: jax.Array, *, cores: int,
+                interpret=None) -> jax.Array:
+    """Dot product on a C-core cluster (paper §5.3/Fig. 10).
+
+    The Fig. 4 nest split C ways on its (only) loop level via the §3.2
+    compiler path; per-core partials meet in one ``psum`` — the shared-TCDM
+    combine.  Zero padding makes any n divisible and is reduce-neutral.
+    """
+    from repro.core import compiler
+    from repro.parallel.cluster import cluster_call, pad_to_cores
+
+    (x, y), n_pad = pad_to_cores((x, y), cores)
+    return cluster_call(compiler.dot_product_nest(n_pad),
+                        lambda a, b: promote(a) * promote(b),
+                        {"A": x, "B": y}, mode="reduce", cores=cores,
+                        interpret=interpret)
+
+
 def baseline_dot(x: jax.Array, y: jax.Array, *, interpret=None) -> jax.Array:
     return _base(x, y, interpret=interpret)
 
@@ -110,6 +128,6 @@ def _entry() -> KernelEntry:
                  jnp.asarray(rng.standard_normal(n), jnp.float32)), {})
 
     return KernelEntry(name="reduction", ssr=ssr_dot, baseline=baseline_dot,
-                       ref=ref.dot_ref, example=example,
+                       ref=ref.dot_ref, cluster=cluster_dot, example=example,
                        tol={"rtol": 1e-2, "atol": 1e-2},
                        problem="dot product, n=2048")

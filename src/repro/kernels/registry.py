@@ -47,6 +47,14 @@ class KernelEntry:
     ``baseline`` — monolithic Pallas kernel with explicit in-body loads
                    (``None`` where the paper has no meaningful baseline)
     ``ref``      — pure-jnp oracle, also the ``ssrcfg``-off execution path
+    ``cluster``  — multi-core variant (paper §5.3–5.5): same positional
+                   args as ``ssr`` plus a ``cores=C`` kwarg, sharded over a
+                   ``cores`` device mesh (``None`` where the iteration
+                   space has no clean outer split).  Deliberately *not* in
+                   :meth:`variants`: it needs a multi-device mesh, which
+                   the single-device equivalence suite does not have —
+                   ``benchmarks/cluster_bench.py`` and
+                   ``tests/test_cluster.py`` enumerate it instead.
     ``example``  — ``example(rng, odd=False) -> (args, kwargs)`` sample-input
                    factory; ``odd=True`` yields non-multiple-of-block sizes
     ``tol``      — allclose tolerances for ssr/baseline-vs-ref comparisons
@@ -57,6 +65,7 @@ class KernelEntry:
     ssr: Callable
     ref: Callable
     baseline: Optional[Callable] = None
+    cluster: Optional[Callable] = None
     example: Optional[Callable] = None
     tol: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {"rtol": 1e-3, "atol": 1e-3})
@@ -67,6 +76,10 @@ class KernelEntry:
         if self.baseline is not None:
             out["baseline"] = self.baseline
         return out
+
+    def cluster_variants(self) -> Dict[str, Callable]:
+        """The multi-core variants, keyed like :meth:`variants`."""
+        return {"cluster": self.cluster} if self.cluster is not None else {}
 
 
 _FACTORIES: Dict[str, Callable[[], KernelEntry]] = {}

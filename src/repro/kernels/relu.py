@@ -87,6 +87,27 @@ def baseline_relu(x: jax.Array, *, interpret=None) -> jax.Array:
     return _base(x, interpret=interpret)
 
 
+def cluster_relu(x: jax.Array, *, cores: int, interpret=None) -> jax.Array:
+    """ReLU on a C-core cluster (paper §5.3): a pure map split C ways.
+
+    Each core streams its tile through the §3.2 compiler path; output
+    tiles concatenate along the split — *no* collective is emitted (the
+    HLO locality audit asserts this), because an elementwise map shares
+    nothing between cores.
+    """
+    from repro.core import Direction, LoopNest, MemRef
+    from repro.parallel.cluster import cluster_call, pad_to_cores
+
+    n = x.shape[0]
+    (x,), n_pad = pad_to_cores((x,), cores)
+    nest = LoopNest(bounds=(n_pad,),
+                    refs=(MemRef("X", Direction.READ, (1,)),),
+                    compute_per_level=(1,))
+    out = cluster_call(nest, relu_block, {"X": x}, mode="map", cores=cores,
+                       interpret=interpret)
+    return out[:n]
+
+
 @register_kernel("relu")
 def _entry() -> KernelEntry:
     from . import ref
@@ -96,6 +117,7 @@ def _entry() -> KernelEntry:
         return ((jnp.asarray(rng.standard_normal(n), jnp.float32),), {})
 
     return KernelEntry(name="relu", ssr=ssr_relu, baseline=baseline_relu,
-                       ref=ref.relu_ref, example=example,
+                       ref=ref.relu_ref, cluster=cluster_relu,
+                       example=example,
                        tol={"rtol": 0.0, "atol": 0.0},
                        problem="max(0,x), n=1024")

@@ -273,6 +273,55 @@ def analyze_hlo(hlo: str, world: int) -> Analysis:
 
 
 # --------------------------------------------------------------------------
+# Cluster locality audit: do per-core intermediates stay core-local?
+# --------------------------------------------------------------------------
+
+
+def collective_counts(hlo: str, world: int = 1) -> Dict[str, int]:
+    """Per-op collective counts of a compiled module (trip-count-aware)."""
+    return dict(analyze_hlo(hlo, world).collective_counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalityCheck:
+    """Compiled-HLO evidence that a clustered kernel communicates only
+    through its final combine (paper §5.3: cores share results via the
+    TCDM *once*, everything else is core-local).
+
+    A ``reduce``-mode cluster call may emit exactly one ``all-reduce``
+    (the psum combine); a ``map``-mode call must emit no collective at
+    all — any extra collective means a per-core intermediate leaked off
+    core.
+    """
+
+    mode: str
+    counts: Dict[str, int]
+
+    @property
+    def ok(self) -> bool:
+        extras = {k: v for k, v in self.counts.items() if k != "all-reduce"}
+        n_ar = self.counts.get("all-reduce", 0)
+        if extras:
+            return False
+        return n_ar == (1 if self.mode == "reduce" else 0)
+
+
+def check_cluster_locality(fn, args, kwargs=None, *, mode: str,
+                           world: int = 1) -> LocalityCheck:
+    """Compile a clustered call and audit its collectives.
+
+    ``fn(*args, **kwargs)`` must be the full cluster call (including the
+    shard_map).  Returns the verdict; callers assert ``.ok``.
+    """
+    import jax  # deferred: this module is otherwise jax-free text analysis
+
+    kwargs = kwargs or {}
+    hlo = jax.jit(lambda *a: fn(*a, **kwargs)).lower(*args) \
+        .compile().as_text()
+    return LocalityCheck(mode=mode, counts=collective_counts(hlo, world))
+
+
+# --------------------------------------------------------------------------
 # Fusion audit: is the chained intermediate's HBM buffer actually gone?
 # --------------------------------------------------------------------------
 

@@ -42,6 +42,28 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
     return _mesh((data, model), ("data", "model"))
 
 
+def make_cluster_mesh(cores: int) -> Mesh:
+    """1-D ``cores`` mesh for the SSR cluster layer (paper §5.3–5.5).
+
+    One device per core, axis name ``cores`` — the mesh axis
+    ``parallel/cluster.py`` shards streamed iteration spaces over.  Built
+    from an explicit device list (never ``make_mesh``) so a host exposing
+    more devices than cores still yields exactly the requested cluster.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    if cores < 1:
+        raise ValueError(f"cores must be >= 1, got {cores}")
+    if len(devs) < cores:
+        raise ValueError(
+            f"need {cores} devices for a {cores}-core cluster, have "
+            f"{len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={cores} before "
+            "importing jax")
+    return Mesh(np.asarray(devs[:cores]), ("cores",))
+
+
 def describe(mesh: Mesh) -> str:
     return "×".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names) + \
         f" ({mesh.size} chips)"

@@ -1,1 +1,15 @@
-"""Subsystem package."""
+"""Parallel execution subsystem.
+
+* ``cluster``     — the paper's §5.3–5.5 multi-core cluster on a JAX device
+  mesh: streamed iteration spaces sharded over a ``cores`` axis
+  (``cluster_call`` / ``cluster_chain_call`` / ``cluster_kernel``), with a
+  single ``psum`` standing in for the shared-TCDM combine.
+* ``sharding``    — DP/FSDP/TP/EP/SP PartitionSpec policies for the model
+  stack.
+* ``collectives`` — ring matmul / reduce-scatter matmul building blocks.
+* ``activations`` — activation-sharding context for training steps.
+
+Submodules import jax-heavy machinery; import them explicitly
+(``from repro.parallel import cluster``) rather than through this package
+root, which stays import-free so dry-runs control device initialisation.
+"""

@@ -1,0 +1,253 @@
+"""Cluster layer (paper §5.3–5.5): partitioning, cost model, execution.
+
+In-process tests cover the degenerate single-core path (``cores=1`` must
+bypass the mesh — the main pytest process keeps exactly one device) and the
+pure-Python cost model.  Multi-core execution spawns a fresh interpreter
+with 8 forced host devices, like tests/test_distributed.py: every registry
+kernel with a ``cluster`` variant must match its single-core streamed
+output, and the compiled HLO must show per-core intermediates staying
+core-local (one all-reduce for reduces, none for maps).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import compiler
+from repro.core.compiler import (ClusterReport, cluster_cost,
+                                 iso_performance_cores)
+from repro.core.lowering import ssr_call
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# --------------------------------------------------------------------------
+# Cost model (pure python — no devices needed)
+# --------------------------------------------------------------------------
+
+
+class TestClusterCost:
+    def test_one_core_is_the_single_core_plan(self):
+        nest = compiler.dot_product_nest(2048)
+        rep = cluster_cost(nest, 1)
+        assert isinstance(rep, ClusterReport)
+        assert rep.combine == 0
+        assert rep.n_cluster == rep.n_single
+        assert rep.speedup == 1.0
+        plan = compiler.ssrify(nest, num_lanes=2, force=True)
+        assert rep.n_single == plan.n_ssr
+
+    def test_speedup_increases_with_cores(self):
+        nest = compiler.dot_product_nest(2048)
+        reps = [cluster_cost(nest, c) for c in (1, 2, 4, 8)]
+        speeds = [r.speedup for r in reps]
+        assert all(b > a for a, b in zip(speeds, speeds[1:])), speeds
+        # utilization decays as per-core setup + combine amortise less
+        etas = [r.eta_cluster for r in reps]
+        assert all(b < a for a, b in zip(etas, etas[1:])), etas
+        assert all(0.0 < e <= 1.0 for e in etas)
+
+    def test_ragged_split_keeps_all_work(self):
+        nest = compiler.dot_product_nest(10)
+        rep = cluster_cost(nest, 4)  # ceil tiles: 3,3,3,1
+        extents = [c.bounds[0] for c in rep.per_core]
+        assert extents == [3, 3, 3, 1]
+        assert sum(c.compute for c in rep.per_core) == 10
+
+    def test_idle_cores_counted_against_eta(self):
+        nest = compiler.dot_product_nest(8)
+        rep = cluster_cost(nest, 8)
+        assert all(c.bounds[0] == 1 for c in rep.per_core)
+        rep_over = cluster_cost(compiler.dot_product_nest(4), 8)
+        idle = [c for c in rep_over.per_core if c.n == 0]
+        assert len(idle) == 4
+        assert rep_over.eta_cluster < cluster_cost(
+            compiler.dot_product_nest(4), 4).eta_cluster
+
+    def test_chain_cost_scales_eliminated_accesses(self):
+        from repro.kernels.chained import _chain_nests
+
+        nests = _chain_nests(4096, consumer_reads_w=False)
+        r1 = cluster_cost(nests, 1)
+        r4 = cluster_cost(nests, 4)
+        assert r1.chained and r4.chained
+        # every element's store+load is eliminated regardless of the split
+        assert r1.eliminated_accesses == r4.eliminated_accesses == 2 * 4096
+        assert r4.speedup > r1.speedup
+
+    def test_fetches_and_bytes(self):
+        nest = compiler.dot_product_nest(2048)
+        rep = cluster_cost(nest, 4)
+        # two f32 streams of 2048 elements, split across cores
+        assert rep.bytes_moved == 2 * 2048 * 4
+        assert rep.total_fetches == sum(c.n for c in rep.per_core) \
+            + 4 * rep.combine
+
+    def test_iso_performance_beats_baseline_cores(self):
+        nest = compiler.dot_product_nest(2048)
+        for base_c in (2, 4, 6, 8):
+            iso = iso_performance_cores(nest, base_c)
+            assert iso < base_c, (base_c, iso)
+        # the paper's headline point: ~3x fewer cores at 6 baseline cores
+        assert iso_performance_cores(nest, 6) == 2
+
+
+# --------------------------------------------------------------------------
+# Degenerate C=1 path (single device, in-process)
+# --------------------------------------------------------------------------
+
+
+class TestSingleCoreDegenerate:
+    def test_cores1_identical_to_ssr_call(self):
+        from repro.parallel.cluster import cluster_call
+
+        rng = np.random.default_rng(0)
+        n = 2048
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        nest = compiler.dot_product_nest(n)
+        body = lambda a, b: a * b  # noqa: E731
+        got = cluster_call(nest, body, {"A": x, "B": y}, cores=1,
+                           mode="reduce")
+        want = ssr_call(nest, body, {"A": x, "B": y}, mode="reduce")
+        assert float(got) == float(want)  # same code path, bit-identical
+
+    def test_cores1_registry_variants_match_ssr(self):
+        from repro.kernels import registry
+
+        rng = np.random.default_rng(1)
+        for name in registry.names():
+            entry = registry.get(name)
+            if entry.cluster is None or entry.example is None:
+                continue
+            args, kwargs = entry.example(rng)
+            got = entry.cluster(*args, cores=1, **kwargs)
+            want = entry.ssr(*args, **kwargs)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=name)
+
+    def test_multi_core_without_devices_raises(self):
+        from repro.parallel.cluster import ClusterError, cluster_call
+
+        nest = compiler.dot_product_nest(64)
+        x = jnp.ones(64, jnp.float32)
+        with pytest.raises(ClusterError, match="device"):
+            cluster_call(nest, lambda a, b: a * b, {"A": x, "B": x},
+                         cores=2, mode="reduce")
+
+    def test_indivisible_outer_bound_raises(self):
+        from repro.parallel.cluster import ClusterError, _split_level0
+
+        with pytest.raises(ClusterError, match="not divisible"):
+            _split_level0(compiler.dot_product_nest(10), 4)
+
+    def test_bad_mode_and_cores_raise(self):
+        from repro.parallel.cluster import ClusterError, cluster_call
+
+        nest = compiler.dot_product_nest(64)
+        x = jnp.ones(64, jnp.float32)
+        with pytest.raises(ClusterError, match="mode"):
+            cluster_call(nest, lambda a: a, {"A": x}, cores=1, mode="scanz")
+        with pytest.raises(ClusterError, match=">= 1"):
+            cluster_call(nest, lambda a: a, {"A": x}, cores=0, mode="map")
+
+
+# --------------------------------------------------------------------------
+# Multi-core execution (subprocess: 8 forced host devices)
+# --------------------------------------------------------------------------
+
+
+class TestShardedExecution:
+    def test_registry_cluster_variants_match_single_core(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp
+            from repro.kernels import registry
+
+            rng = np.random.default_rng(0)
+            checked = 0
+            for name in registry.names():
+                entry = registry.get(name)
+                if entry.cluster is None or entry.example is None:
+                    continue
+                args, kwargs = entry.example(rng)
+                single = np.asarray(entry.ssr(*args, **kwargs))
+                for cores in (2, 4, 8):
+                    out = np.asarray(entry.cluster(*args, cores=cores,
+                                                   **kwargs))
+                    np.testing.assert_allclose(
+                        out, single, rtol=1e-5, atol=1e-5,
+                        err_msg=f"{name} cores={cores}")
+                checked += 1
+            assert checked >= 3, checked
+            print("CLUSTER AGREE OK", checked)
+        """)
+
+    def test_locality_and_odd_sizes(self):
+        run_sub("""
+            import jax, numpy as np, jax.numpy as jnp
+            from repro.core import compiler
+            from repro.kernels import registry
+            from repro.launch.hlo_analysis import check_cluster_locality
+            from repro.parallel.cluster import cluster_call
+
+            rng = np.random.default_rng(0)
+
+            # reduce-mode cluster call: exactly one all-reduce (the psum)
+            red = registry.get("reduction")
+            args, kwargs = red.example(rng)
+            chk = check_cluster_locality(
+                lambda *a: red.cluster(*a, cores=4, **kwargs), args,
+                mode="reduce", world=4)
+            assert chk.ok, chk.counts
+
+            # map-mode: per-core tiles stay local, zero collectives
+            rel = registry.get("relu")
+            args, kwargs = rel.example(rng)
+            chk = check_cluster_locality(
+                lambda *a: rel.cluster(*a, cores=4, **kwargs), args,
+                mode="map", world=4)
+            assert chk.ok, chk.counts
+
+            # odd (non-multiple-of-cores) sizes route through the padding
+            # in the kernel wrappers
+            for name in ("reduction", "relu", "gemv", "sum_sq_diff",
+                         "axpy_dot"):
+                entry = registry.get(name)
+                args, kwargs = entry.example(rng, odd=True)
+                single = np.asarray(entry.ssr(*args, **kwargs))
+                out = np.asarray(entry.cluster(*args, cores=8, **kwargs))
+                np.testing.assert_allclose(out, single, rtol=1e-5,
+                                           atol=1e-5, err_msg=name)
+
+            # ClusterError on an indivisible operand fed straight to
+            # cluster_call (no wrapper padding)
+            from repro.parallel.cluster import ClusterError
+            nest = compiler.dot_product_nest(100)
+            x = jnp.ones(100, jnp.float32)
+            try:
+                cluster_call(nest, lambda a, b: a * b, {"A": x, "B": x},
+                             cores=8, mode="reduce")
+            except ClusterError as e:
+                assert "divisible" in str(e)
+            else:
+                raise AssertionError("expected ClusterError")
+            print("CLUSTER LOCALITY OK")
+        """)

@@ -160,6 +160,41 @@ class TestKernelCache:
         body = lambda a, b: jnp.sum(a * b) + c[0]  # noqa: E731
         assert L._body_key(body) is body
 
+    def test_bound_methods_distinguish_instances(self):
+        # per-instance state lives on __self__, not in code/closure: two
+        # instances' bound methods must not share a kernel
+        class Body:
+            def __init__(self, s):
+                self.s = s
+
+            def __call__(self, a, b):
+                return jnp.sum(a * b) * self.s
+
+            def method(self, a, b):
+                return jnp.sum(a * b) * self.s
+
+        assert L._body_key(Body(1.0).method) != L._body_key(Body(2.0).method)
+        L._kernel_cache.clear()
+        one = self._dot_once(2048, Body(1.0).method)
+        two = self._dot_once(2048, Body(2.0).method)
+        np.testing.assert_allclose(2 * float(one), float(two), rtol=1e-5)
+
+    def test_kwonly_defaults_distinguish_kernels(self):
+        def make(s):
+            return lambda a, b, *, scale=s: jnp.sum(a * b) * scale
+
+        assert L._body_key(make(1.0)) != L._body_key(make(2.0))
+
+    def test_empty_closure_cell_falls_back(self):
+        def outer():
+            body = lambda a, b: late(a, b)  # noqa: E731, F821
+            key = L._body_key(body)  # `late` cell still empty here
+            late = lambda a, b: jnp.sum(a * b)  # noqa: E731, F841
+            return body, key
+
+        body, key = outer()
+        assert key is body  # ValueError('Cell is empty') handled
+
     def test_lru_eviction_at_cache_max(self, monkeypatch):
         monkeypatch.setattr(L, "_KERNEL_CACHE_MAX", 2)
         L._kernel_cache.clear()

@@ -1,0 +1,112 @@
+"""Docs gate for CI: markdown link integrity + generated-docs staleness.
+
+Two checks, both hard failures:
+
+1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
+   files resolves to an existing file (http/mailto/anchor links skipped);
+2. the committed ``EXPERIMENTS.md`` matches a fresh render from
+   ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
+   models without regenerating it, fails the build.
+
+Run from anywhere::
+
+    python tools/check_docs.py [--skip-experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import difflib
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images' alt text is unnecessary; same syntax.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _md_files() -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github")]
+        for f in filenames:
+            if f.endswith(".md"):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def check_links() -> List[Tuple[str, str]]:
+    """All broken (file, target) local links across the repo's markdown."""
+    broken = []
+    for path in _md_files():
+        with open(path) as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            clean = target.split("#", 1)[0]
+            if not clean:
+                continue
+            if not os.path.exists(os.path.join(base, clean)):
+                broken.append((os.path.relpath(path, ROOT), target))
+    return broken
+
+
+def check_experiments() -> List[str]:
+    """Unified diff (empty = fresh) of committed vs regenerated docs."""
+    sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
+    from benchmarks.paper_tables import render_experiments
+
+    fresh = render_experiments()
+    committed_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    if not os.path.exists(committed_path):
+        return ["EXPERIMENTS.md missing — run: PYTHONPATH=src python "
+                "benchmarks/paper_tables.py --write-experiments"]
+    with open(committed_path) as f:
+        committed = f.read()
+    if committed == fresh:
+        return []
+    return list(difflib.unified_diff(
+        committed.splitlines(), fresh.splitlines(),
+        fromfile="EXPERIMENTS.md (committed)",
+        tofile="EXPERIMENTS.md (regenerated)", lineterm=""))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--skip-experiments", action="store_true",
+                    help="only check markdown links (no jax import)")
+    args = ap.parse_args(argv)
+
+    ok = True
+    broken = check_links()
+    if broken:
+        ok = False
+        print("broken markdown links:")
+        for path, target in broken:
+            print(f"  {path}: ({target})")
+    else:
+        print(f"markdown links ok across {len(_md_files())} files")
+
+    if not args.skip_experiments:
+        diff = check_experiments()
+        if diff:
+            ok = False
+            print("\nEXPERIMENTS.md is stale; regenerate with:\n"
+                  "  PYTHONPATH=src python benchmarks/paper_tables.py "
+                  "--write-experiments\n")
+            print("\n".join(diff[:80]))
+        else:
+            print("EXPERIMENTS.md is fresh")
+
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
