@@ -86,15 +86,16 @@ def _gemv_nest(m: int, n: int) -> LoopNest:
 def _model_nests(quick: bool):
     """(name, nest-or-chain) for the cost model — no device arrays."""
     from repro.kernels.chained import _chain_nests
+    from repro.kernels.stencil import TAPS
 
     n = 8192 if not quick else 2048
     m = 512 if not quick else 128
     return [
         ("reduction", compiler.dot_product_nest(n)),
-        ("relu", LoopNest(bounds=(n,),
-                          refs=(MemRef("X", Direction.READ, (1,)),),
-                          compute_per_level=(1,))),
+        ("relu", compiler.elementwise_nest(n)),
         ("gemv", _gemv_nest(m, 64)),
+        ("gemm", compiler.gemm_nest(m, 64, 64)),
+        ("stencil1d", compiler.stencil_nest(n, TAPS)),
         ("sum_sq_diff", _chain_nests(n, consumer_reads_w=False)),
         ("axpy_dot", _chain_nests(n, consumer_reads_w=True)),
     ]
@@ -102,6 +103,8 @@ def _model_nests(quick: bool):
 
 def _bench_cases(quick: bool):
     """(name, args, kwargs, nest-or-chain): executable inputs per kernel."""
+    from repro.kernels.stencil import TAPS
+
     n = 8192 if not quick else 2048
     m = 512 if not quick else 128
     inputs = {
@@ -109,6 +112,14 @@ def _bench_cases(quick: bool):
         "relu": ((_normal(n),), {}),
         "gemv": ((jnp.asarray(RNG.standard_normal((m, 64)) / 8.0,
                               jnp.float32), _normal(64) * 8.0), {}),
+        "gemm": ((jnp.asarray(RNG.standard_normal((m, 64)) / 8.0,
+                              jnp.float32),
+                  jnp.asarray(RNG.standard_normal((64, 64)) / 8.0,
+                              jnp.float32)), {}),
+        "stencil1d": ((jnp.asarray(RNG.standard_normal(n + TAPS - 1) / 4.0,
+                                   jnp.float32),
+                       jnp.asarray(RNG.standard_normal(TAPS) * 0.3,
+                                   jnp.float32)), {}),
         "sum_sq_diff": ((_normal(n), _normal(n)), {}),
         "axpy_dot": ((_normal(n), _normal(n), _normal(n)), {"alpha": 0.5}),
     }
@@ -253,6 +264,12 @@ def validate_cluster_json(path: str) -> None:
             kern = row["name"].split("/")[1]
             by_kernel.setdefault(kern, []).append(
                 (row["cores"], row["value"]))
+    # the compiled-nest kernels must ride the sweep (gemm: the 2-D split)
+    for required in ("gemm", "stencil1d"):
+        if required not in by_kernel:
+            raise ValueError(
+                f"{required!r} missing from the cluster sweep "
+                f"(kernels: {sorted(by_kernel)})")
     increasing = 0
     for kern, pts in by_kernel.items():
         pts.sort()

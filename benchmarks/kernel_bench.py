@@ -141,6 +141,70 @@ def bench_stream_reports() -> List[Dict]:
 
 
 # --------------------------------------------------------------------------
+# Compiled-nest kernels: ssr-vs-baseline agreement + cost-model gate
+# --------------------------------------------------------------------------
+
+#: Numeric agreement required between a compiled-nest kernel's streamed
+#: and baseline engines (same problem, same dtype — only delivery differs).
+NEST_AGREEMENT_TOL = 1e-5
+
+
+def _nest_models():
+    """(kernel name, cost-model LoopNest) for the compiled-nest gate."""
+    from repro.core import compiler
+    from repro.kernels.stencil import TAPS
+
+    return [("gemm", compiler.gemm_nest(32, 32, 32)),
+            ("stencil1d", compiler.stencil_nest(1024, TAPS))]
+
+
+def bench_nest_gate() -> List[Dict]:
+    """Gate the registry's compiled-nest kernels (gemm, stencil1d).
+
+    Two hard requirements per kernel, mirrored in ``validate_bench_json``:
+    the streamed engine must agree with the baseline engine within
+    ``NEST_AGREEMENT_TOL`` (a fast wrong kernel is not a win), and the
+    Eq. (1)–(3) model must predict a speedup > 1 for the paper-size nest
+    (otherwise streaming it is pointless and the registry entry is wrong).
+    """
+    from repro.core.lowering import plan_stats
+
+    rows = []
+    print("\n== compiled-nest gate: ssr vs baseline + cost model ==")
+    for name, nest in _nest_models():
+        entry = registry.get(name)
+        args, kwargs = entry.example(RNG)
+        ssr_out = entry.ssr(*args, **kwargs)
+        base_out = entry.baseline(*args, **kwargs)
+        diff = max(float(jnp.max(jnp.abs(jnp.asarray(g) - jnp.asarray(w))))
+                   for g, w in zip(jax.tree.leaves(ssr_out),
+                                   jax.tree.leaves(base_out)))
+        if diff > NEST_AGREEMENT_TOL:
+            print(f"FAIL {name}: ssr disagrees with baseline by {diff:.2e} "
+                  f"> {NEST_AGREEMENT_TOL}", file=sys.stderr)
+            raise SystemExit(1)
+        # score the configuration the registry actually executes: every
+        # affine ref streamed (auto lanes), not the 2-mover default the
+        # nest-output path cannot even lower
+        from repro.core.nest_analysis import auto_lanes
+
+        stats = plan_stats(nest, num_lanes=auto_lanes(nest))
+        speedup = stats.n_base / stats.n_ssr
+        if not (stats.ssrified and speedup > 1.0):
+            print(f"FAIL {name}: Eq. (3) model speedup {speedup:.2f} <= 1",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"{name:12s} agreement {diff:.1e}  model speedup "
+              f"{speedup:4.2f}x (N {stats.n_base} -> {stats.n_ssr})")
+        rows.append(_row(f"nest/{name}", "nest", "agreement", diff,
+                         "max_abs_diff"))
+        rows.append(_row(f"nest/{name}", "nest", "model", speedup,
+                         "model_speedup", n_base=stats.n_base,
+                         n_ssr=stats.n_ssr))
+    return rows
+
+
+# --------------------------------------------------------------------------
 # Fused (stream-chained) variants vs their unfused compositions
 # --------------------------------------------------------------------------
 
@@ -274,6 +338,20 @@ def validate_bench_json(path: str) -> None:
     groups = {r["group"] for r in results}
     if "fused" not in groups:
         raise ValueError(f"no fused results recorded (groups: {groups})")
+    # compiled-nest gate: gemm/stencil1d must be present, numerically in
+    # agreement, and model-profitable
+    nest_rows = {(r["name"].split("/")[1], r["variant"]): r
+                 for r in results if r["group"] == "nest"}
+    for kern in ("gemm", "stencil1d"):
+        agree = nest_rows.get((kern, "agreement"))
+        model = nest_rows.get((kern, "model"))
+        if agree is None or model is None:
+            raise ValueError(f"no nest gate rows for {kern!r}")
+        if agree["value"] > NEST_AGREEMENT_TOL:
+            raise ValueError(f"{kern}: ssr-vs-baseline disagreement "
+                             f"{agree['value']} > {NEST_AGREEMENT_TOL}")
+        if model["value"] <= 1.0:
+            raise ValueError(f"{kern}: model speedup {model['value']} <= 1")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -290,6 +368,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rows += bench_reference_paths(iters=2 if args.quick else 5)
     rows += smoke_ssr_paths()
     rows += bench_stream_reports()
+    rows += bench_nest_gate()
     rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)
     write_bench_json(rows, args.out, args.quick)
     validate_bench_json(args.out)

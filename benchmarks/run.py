@@ -1,13 +1,21 @@
-"""Benchmark entry point: one function per paper table/figure + kernel
-timings + (if present) the dry-run roofline summary.
+"""One-shot human-readable benchmark report over the whole suite.
 
-Prints ``name,us_per_call,derived`` CSV after the human-readable tables.
+Everything here is registry-driven: one function per paper table/figure
+(``paper_tables.ALL``), every ``@register_kernel`` entry's reference
+timing + streamed-path smoke, the stream-analysis reports, the
+compiled-nest gate (gemm/stencil ssr-vs-baseline agreement + Eq. (1)–(3)
+model speedup), the fused-vs-unfused race, and — if dry-run records exist —
+the roofline summary.  Adding a kernel to the registry adds it to this
+report with zero edits.
+
+``benchmarks/kernel_bench.py`` is the machine-readable twin (writes +
+validates ``BENCH_kernels.json``); this entry point just prints the
+``name,us_per_call,derived`` CSV for eyeballing and logs.
 """
 
 from __future__ import annotations
 
 import os
-import sys
 
 
 def main() -> None:
@@ -21,6 +29,7 @@ def main() -> None:
     for row in (kernel_bench.bench_reference_paths()
                 + kernel_bench.smoke_ssr_paths()
                 + kernel_bench.bench_stream_reports()
+                + kernel_bench.bench_nest_gate()
                 + kernel_bench.bench_fused()):
         rows.append((f"{row['name']}/{row['variant']}", row["value"],
                      row["units"]))

@@ -50,6 +50,7 @@ from .ssr import (  # noqa: F401
     check_mxu_alignment,
     ssr_pallas,
 )
+from . import nest_analysis  # noqa: F401
 from .compiler import (  # noqa: F401
     Allocation,
     COMBINE_COST,
@@ -64,18 +65,23 @@ from .compiler import (  # noqa: F401
     chain,
     cluster_cost,
     dot_product_nest,
+    elementwise_nest,
     gemm_nest,
     iso_performance_cores,
     ssrify,
+    stencil_nest,
 )
 from .lowering import (  # noqa: F401
     BlockPolicy,
     DEFAULT_POLICY,
     LoweredChain,
+    LoweredNest,
     LoweredPlan,
     LoweredStream,
     LoweringError,
+    NestStream,
     lower_chain,
+    lower_nest,
     lower_plan,
     plan_stats,
     ssr_call,

@@ -24,46 +24,11 @@ import math
 from typing import List, Optional, Sequence, Tuple
 
 from . import isa
-from .stream import Direction, StreamSpec, MAX_DIMS
+from . import nest_analysis
+from .nest_analysis import LoopNest, MemRef  # noqa: F401  (re-exported API)
+from .stream import Direction, StreamSpec, MAX_DIMS  # noqa: F401
 
 DEFAULT_NUM_LANES = 2  # the implementation in the paper has two data movers
-
-
-@dataclasses.dataclass(frozen=True)
-class MemRef:
-    """One load/store whose address is affine in the loop indices.
-
-    ``coeffs[k]`` multiplies loop index ``k`` (outermost first); accesses with
-    a non-affine address are represented by ``coeffs=None`` and are never
-    SSR-ified (the MIR pattern-match fails — §3.2 step 2).
-    """
-
-    name: str
-    kind: Direction
-    coeffs: Optional[Tuple[int, ...]]  # None => not affine
-    offset: int = 0
-    depth: Optional[int] = None  # innermost loop level the access lives in
-
-    def is_affine(self) -> bool:
-        return self.coeffs is not None
-
-
-@dataclasses.dataclass(frozen=True)
-class LoopNest:
-    """A perfect loop nest with known bounds (outermost first)."""
-
-    bounds: Tuple[int, ...]
-    refs: Tuple[MemRef, ...]
-    compute_per_level: Tuple[int, ...]  # useful ops per body, per level
-
-    def __post_init__(self) -> None:
-        if len(self.bounds) > MAX_DIMS:
-            raise ValueError(
-                f"nest depth {len(self.bounds)} exceeds AGU dims ({MAX_DIMS}); "
-                "outer levels must stay in software (paper §3.1)"
-            )
-        if len(self.compute_per_level) != len(self.bounds):
-            raise ValueError("compute_per_level must match nest depth")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,17 +52,9 @@ class StreamPlan:
         return self.n_base / self.n_ssr if self.ssrified else 1.0
 
 
-def _ref_depth(ref: MemRef, nest: LoopNest) -> int:
-    """Deepest loop level whose index the address actually varies with."""
-    if ref.depth is not None:
-        return ref.depth
-    if not ref.is_affine():
-        return -1
-    depth = 0
-    for k, c in enumerate(ref.coeffs):
-        if c != 0:
-            depth = k
-    return depth
+# Depth/lane/instruction analyses live in core/nest_analysis.py — one
+# derivation shared by ssrify, chain, cluster_cost and the lowering.
+_ref_depth = nest_analysis.ref_depth
 
 
 def _to_spec(ref: MemRef, nest: LoopNest) -> StreamSpec:
@@ -156,16 +113,13 @@ def ssrify(nest: LoopNest, *, num_lanes: int = DEFAULT_NUM_LANES,
     d = len(nest.bounds)
     s = len(allocations)
     L = list(nest.bounds)
-    # Residual explicit memory ops stay in the body at their depth: fold them
-    # into per-level instruction counts for the cost model.
-    I_ssr = list(nest.compute_per_level)
-    I_base = list(nest.compute_per_level)
-    for ref in residual:
-        lvl = max(0, _ref_depth(ref, nest))
-        I_ssr[lvl] += 1
-        I_base[lvl] += 1
-    n_with = isa.n_ssr(L, I_ssr, max(s, 1)) if s else isa.n_base(L, I_base, 0)
-    n_without = isa.n_base(L, I_base, s)
+    # Residual explicit memory ops stay in the body at their depth: fold
+    # them into per-level instruction counts for the cost model.  Streamed
+    # and baseline bodies carry the same residual ops — only the allocated
+    # lanes differ — so one count serves both Eq. (1) and Eq. (2).
+    I = nest_analysis.instr_counts(nest, residual)
+    n_with = isa.n_ssr(L, I, max(s, 1)) if s else isa.n_base(L, I, 0)
+    n_without = isa.n_base(L, I, s)
     # force=True is the paper's "runtime decision" path: both variants are
     # compiled and the caller elects SSR regardless of the static verdict.
     profitable = bool(s) and (
@@ -264,11 +218,7 @@ def _dense_strides(bounds: Sequence[int]) -> Tuple[int, ...]:
 
 def _stage_instr_counts(plan: StreamPlan) -> List[int]:
     """Per-level body instruction counts with residual accesses folded in."""
-    nest = plan.nest
-    I = list(nest.compute_per_level)
-    for ref in plan.residual:
-        I[max(0, _ref_depth(ref, nest))] += 1
-    return I
+    return nest_analysis.instr_counts(plan.nest, plan.residual)
 
 
 def chain(nests: Sequence[LoopNest], *,
@@ -329,18 +279,17 @@ def chain(nests: Sequence[LoopNest], *,
             and not (r.name == outgoing and r.kind == Direction.WRITE))
         stage_nests.append(dataclasses.replace(nest, refs=refs))
 
-    def lanes_for(nest: LoopNest) -> int:
-        if num_lanes is not None:
-            return num_lanes
-        return sum(1 for r in nest.refs if r.is_affine())
-
-    stages = tuple(ssrify(sn, num_lanes=max(lanes_for(sn), 1), force=force)
-                   for sn in stage_nests)
+    stages = tuple(
+        ssrify(sn, num_lanes=nest_analysis.auto_lanes(sn, num_lanes),
+               force=force)
+        for sn in stage_nests)
 
     # Unfused cost: each original nest as its own stream region (its link
     # ref occupies a lane and its setup is paid per stage).
-    unfused_plans = [ssrify(n, num_lanes=max(lanes_for(n), 1), force=force)
-                     for n in nests]
+    unfused_plans = [
+        ssrify(n, num_lanes=nest_analysis.auto_lanes(n, num_lanes),
+               force=force)
+        for n in nests]
     n_unfused = sum(
         p.n_ssr if p.ssrified else p.n_base for p in unfused_plans)
 
@@ -458,13 +407,7 @@ class ClusterReport:
         return sum(c.bytes_moved for c in self.per_core)
 
 
-def _nest_compute(nest: LoopNest) -> int:
-    """Useful ops of one nest execution: Σ_i I_i · Π_{n≤i} L_n."""
-    prod, total = 1, 0
-    for Li, Ii in zip(nest.bounds, nest.compute_per_level):
-        prod *= Li
-        total += Ii * prod
-    return total
+_nest_compute = nest_analysis.nest_compute
 
 
 def _plan_bytes(plan: StreamPlan, itemsize: int = 4) -> int:
@@ -489,10 +432,7 @@ def _combine_instrs(cores: int, combine_cost: int) -> int:
     return combine_cost * (cores - 1).bit_length() if cores > 1 else 0
 
 
-def _auto_lanes(nest: LoopNest, num_lanes: Optional[int]) -> int:
-    if num_lanes is not None:
-        return num_lanes
-    return max(1, sum(1 for r in nest.refs if r.is_affine()))
+_auto_lanes = nest_analysis.auto_lanes
 
 
 def cluster_cost(nests, cores: int, *,
@@ -605,13 +545,55 @@ def dot_product_nest(n: int) -> LoopNest:
     )
 
 
+def elementwise_nest(n: int, names: Sequence[str] = ("X",),
+                     compute: int = 1) -> LoopNest:
+    """1-D map nest: one unit-stride read stream per operand name."""
+    return LoopNest(
+        bounds=(n,),
+        refs=tuple(MemRef(nm, Direction.READ, (1,)) for nm in names),
+        compute_per_level=(compute,),
+    )
+
+
+def stencil_nest(n: int, taps: int, *, lanes: int = 128) -> LoopNest:
+    """Cost-model nest for the 1-D star stencil (kernels/stencil.py).
+
+    Two halo lanes — the same window offset by one block (``lanes``
+    elements, the §2.3 second-AGU trick) — plus a constant coefficient
+    stream, with ``taps`` fmadds per output element.  The *execution*
+    schedule stays hand-written under a ``lowering_waiver`` (overlapping
+    windows have no dense storage order); this nest is its Eq. (1)–(3)
+    accounting, shared by ``kernel_bench`` and ``cluster_bench``.
+    """
+    return LoopNest(
+        bounds=(n,),
+        refs=(MemRef("x_lo", Direction.READ, (1,)),
+              MemRef("x_hi", Direction.READ, (1,), offset=lanes),
+              MemRef("w", Direction.READ, (0,))),
+        compute_per_level=(taps,),
+    )
+
+
 def gemm_nest(m: int, n: int, k: int) -> LoopNest:
-    """C[m,n] += A[m,k]·B[k,n] — 3-deep, with A reused across n (repeat)."""
+    """C[m,n] += A[m,k]·B[k,n] — 3-deep, with A reused across n (repeat).
+
+    The full §3.2 pattern, write side included: C's coefficient is 0 on the
+    contraction level (k), so the output address is *revisited* across the
+    whole inner loop — the lowering turns that into a VMEM accumulator that
+    initialises on the first k step and drains on the last (see
+    ``lowering.lower_nest``).  B walks the innermost loop with stride n
+    (its storage order is (k, n), a permutation of the loop order) — fine
+    for the word-granular AGU and for the level-mapped block lowering,
+    not for the flattened 1-D schedule of ``lower_plan``.
+    """
     return LoopNest(
         bounds=(m, n, k),
         refs=(
             MemRef("A", Direction.READ, (k, 0, 1)),   # varies with m,k; reused over n
             MemRef("B", Direction.READ, (0, 1, n)),   # varies with n,k
+            MemRef("C", Direction.WRITE, (n, 1, 0)),  # revisited across k
         ),
-        compute_per_level=(0, 1, 1),  # C init/writeback at n-level, fmadd inner
+        # fmadd inner only: C's writeback is the explicit WRITE ref above —
+        # charged as a residual store when it has no lane, free when streamed
+        compute_per_level=(0, 0, 1),
     )

@@ -14,17 +14,28 @@ allocated :class:`StreamSpec` becomes a Pallas ``grid`` + affine ``index_map``
 body, and the operand arrays, and the loop executes as a streamed Pallas
 kernel whose operand delivery *is* the plan's AGU schedule.
 
-Lowerable patterns (the TPU block-granularity subset of the AGU model):
+Two lowering paths cover the AGU model at block granularity:
 
-* unit-stride innermost walk (``coeffs[-1] == 1``) with *dense row-major*
-  outer levels — each grid step consumes one whole VMEM block;
-* levels with coefficient 0 — the index_map ignores that grid axis, so the
-  pipeline revisits the block: the paper's **repeat register**;
-* fully loop-invariant operands — a single block served to every step.
+**Flat (``lower_plan``)** — read-only map/reduce nests whose operands walk
+the iteration space in loop order: unit-stride innermost walk
+(``coeffs[-1] == 1``) with *dense row-major* outer levels, levels with
+coefficient 0 (the index_map ignores that grid axis, so the pipeline
+revisits the block: the paper's **repeat register**), and fully
+loop-invariant operands.
 
-Anything else (e.g. a strided column walk, expressible by the word-granular
-hardware AGU but not by whole-block DMA) raises :class:`LoweringError`; those
-kernels keep their hand-scheduled 2-D block layouts under ``repro.kernels``.
+**Level-mapped (``lower_nest``)** — the general §3.2 pattern for nests
+with an explicit output WRITE ref: one grid axis per loop level, operand
+storage orders that may *permute* the loop order (GEMM's B, stored (k, n)
+against (m, n, k) loops), and an output revisited across trailing
+contraction axes, lowered to a VMEM scratch accumulator with
+init-on-first / drain-on-last steps — Fig. 4's accumulator register as a
+whole block.  ``ssr_call`` picks the path from the nest itself.
+
+Anything outside both (overlapping halo windows, per-stage power-of-two
+strides — expressible by the word-granular hardware AGU but not by
+whole-block DMA) raises :class:`LoweringError`; those kernels keep
+hand-scheduled layouts under ``repro.kernels``, each behind a declared
+``lowering_waiver``.
 """
 
 from __future__ import annotations
@@ -39,9 +50,10 @@ import jax
 import jax.numpy as jnp
 
 from . import agu
+from . import nest_analysis
 from .compiler import (Allocation, ChainedPlan, LoopNest, StreamPlan,
                        _dense_strides, chain, ssrify)
-from .ssr import BlockStream, ssr_pallas
+from .ssr import BlockStream, auto_block, ssr_pallas
 from .stream import Direction, StreamSpec
 
 
@@ -260,6 +272,266 @@ def lower_plan(plan: StreamPlan,
 
 
 # --------------------------------------------------------------------------
+# Level-mapped lowering: multi-level nests with contraction axes.
+#
+# The flattened schedule above serves read-only map/reduce nests whose
+# operands walk the iteration space in loop order.  The general §3.2
+# pattern — GEMM is the flagship — needs more: operands whose storage
+# order *permutes* the loop order (B is stored (k, n) while the loops run
+# (m, n, k)), read streams revisited across inner levels (the repeat
+# register at block granularity), and an output WRITE ref revisited across
+# a contraction level, which the paper's accumulator register absorbs.
+#
+# ``lower_nest`` maps each loop level to its own grid axis (tiled by a
+# per-level block factor), derives every allocated lane's block walk from
+# its dense storage order (``nest_analysis.storage_order``), and lowers the
+# single output WRITE ref to a VMEM scratch accumulator that initialises on
+# the first visit of the contraction axes and drains on the last.  A READ
+# ref whose coefficient is zero on an inner grid axis simply drops that
+# axis from its index_map: Pallas sees an unchanged block index and skips
+# the re-fetch, exactly as the FIFO re-emits a repeated datum.
+# --------------------------------------------------------------------------
+
+
+#: Per-level tile targets, in units of the policy's lane/sublane widths.
+#: Lanes-role levels (the last storage dim of some stream) tile up to
+#: 4×128 = 512 elements; sublane-role levels up to 32×8 = 256 rows.
+_LANES_TILE_FACTOR = 4
+_ROWS_TILE_FACTOR = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class NestStream:
+    """One allocation lowered to a level-mapped block schedule.
+
+    ``levels`` is the ref's dense storage order (outermost first, possibly
+    a permutation of the loop order); ``logical_shape``/``padded_shape``
+    the operand array before/after per-level padding; ``layout_shape`` the
+    (at least 2-D) array the BlockStream actually addresses — rank-1 refs
+    gain a leading singleton, loop-invariant refs collapse to a flat
+    ``(rows, lanes)`` view served as one revisited block.
+    """
+
+    name: str
+    stream: BlockStream
+    levels: Tuple[int, ...]
+    logical_shape: Tuple[int, ...]
+    padded_shape: Tuple[int, ...]
+    layout_shape: Tuple[int, ...]
+    policy: BlockPolicy
+    offset: int = 0
+
+    def prepare(self, arr: jax.Array) -> jax.Array:
+        """Pad + reshape ``arr`` into the layout the index_map addresses."""
+        if not self.levels:                 # loop-invariant: one block
+            flat = arr.reshape(-1)[self.offset:]
+            if flat.shape[0] == 0:
+                raise ValueError(
+                    f"stream '{self.name}': loop-invariant operand has no "
+                    f"elements past offset {self.offset} — the block would "
+                    "be all padding")
+            if flat.shape[0] > self.policy.lanes:
+                # The stream serves exactly ONE block; silently windowing a
+                # larger constant would drop data the body never sees.
+                # (The flat lower_plan path keeps its documented
+                # base-pointer-window semantics; this path is stricter.)
+                raise ValueError(
+                    f"stream '{self.name}': loop-invariant operand has "
+                    f"{flat.shape[0]} elements past offset {self.offset}, "
+                    f"but an invariant stream serves one "
+                    f"(1, {self.policy.lanes}) block; give the operand a "
+                    "varying loop level instead")
+            pad = (-flat.shape[0]) % self.policy.lanes
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            return flat.reshape(-1, self.policy.lanes)
+        want = math.prod(self.logical_shape)
+        flat = arr.reshape(-1)
+        if flat.shape[0] != want:
+            raise ValueError(
+                f"stream '{self.name}': operand has {flat.shape[0]} "
+                f"elements, plan expects logical shape {self.logical_shape}")
+        view = flat.reshape(self.logical_shape)
+        pads = [(0, p - l) for l, p in zip(self.logical_shape,
+                                           self.padded_shape)]
+        if any(p for _, p in pads):
+            view = jnp.pad(view, pads)
+        return view.reshape(self.layout_shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredNest:
+    """A StreamPlan with an output ref, lowered level-by-level.
+
+    ``grid[l]`` covers loop level ``l`` (padded bound / tile);
+    ``contraction_axes`` are the output's revisited levels — declared
+    ``arbitrary`` (sequential) so the accumulator carries, every other
+    axis ``parallel``.
+    """
+
+    plan: StreamPlan
+    policy: BlockPolicy
+    grid: Tuple[int, ...]
+    tiles: Tuple[int, ...]
+    in_streams: Tuple[NestStream, ...]
+    out_stream: NestStream
+    contraction_axes: Tuple[int, ...]
+
+    @property
+    def semantics(self) -> Tuple[str, ...]:
+        return tuple("arbitrary" if l in self.contraction_axes else "parallel"
+                     for l in range(len(self.grid)))
+
+    @property
+    def steps(self) -> int:
+        return math.prod(self.grid)
+
+
+def _storage_order_or_raise(ref, nest: LoopNest) -> Tuple[int, ...]:
+    order = nest_analysis.storage_order(ref, nest)
+    if order is None:
+        raise LoweringError(
+            f"stream '{ref.name}': coefficients {ref.coeffs} admit no dense "
+            "row-major storage order — overlapping or strided layouts are "
+            "word-granular AGU territory, not whole-block DMA")
+    return order
+
+
+def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
+                policy: BlockPolicy) -> Tuple[Tuple[int, ...],
+                                              Tuple[int, ...]]:
+    """Per-level (tile, padded bound) from the streams' storage roles.
+
+    A level that is the *last* storage dim of any stream is a lanes level
+    (tile aligned to ``policy.lanes``); a level appearing only in outer
+    positions is a sublane level (aligned to ``policy.rows``); a level no
+    stream varies with is a pure iteration axis (tile 1).
+    """
+    roles: Dict[int, str] = {}
+    for order in orders.values():
+        if order:
+            roles[order[-1]] = "lanes"
+    for order in orders.values():
+        for lvl in order[:-1]:
+            roles.setdefault(lvl, "sublane")
+    tiles, padded = [], []
+    for lvl, b in enumerate(nest.bounds):
+        role = roles.get(lvl)
+        if role == "lanes":
+            align, target = policy.lanes, policy.lanes * _LANES_TILE_FACTOR
+        elif role == "sublane":
+            align, target = policy.rows, policy.rows * _ROWS_TILE_FACTOR
+        else:
+            tiles.append(1)
+            padded.append(b)
+            continue
+        pb = -(-b // align) * align
+        tiles.append(auto_block(pb, target, align))
+        padded.append(pb)
+    return tuple(tiles), tuple(padded)
+
+
+def _lower_nest_stream(alloc: Allocation, nest: LoopNest,
+                       tiles: Tuple[int, ...], padded: Tuple[int, ...],
+                       policy: BlockPolicy) -> NestStream:
+    """One lane's level-mapped block walk."""
+    ref = alloc.ref
+    order = _storage_order_or_raise(ref, nest)
+    if not order:
+        # Loop-invariant: a read is one block revisited by every grid step;
+        # a write is the scalar accumulator drained once at the end.
+        shape = (1, 1) if ref.kind == Direction.WRITE else (1, policy.lanes)
+        return NestStream(
+            name=ref.name,
+            stream=BlockStream(shape, lambda *_g: (0, 0),
+                               direction=ref.kind, name=ref.name),
+            levels=(), logical_shape=(), padded_shape=(),
+            layout_shape=shape, policy=policy, offset=ref.offset)
+    if ref.offset:
+        raise LoweringError(
+            f"stream '{ref.name}': base offset {ref.offset} cannot shift a "
+            "level-mapped block walk; fold it into the operand view")
+    logical = tuple(nest.bounds[l] for l in order)
+    pad_shape = tuple(padded[l] for l in order)
+    if len(order) == 1:
+        lvl = order[0]
+        block = (1, tiles[lvl])
+        layout = (1, pad_shape[0])
+
+        def index_map(*g, _l=lvl):
+            return (0, g[_l])
+    else:
+        block = tuple(tiles[l] for l in order)
+        layout = pad_shape
+
+        def index_map(*g, _o=order):
+            return tuple(g[l] for l in _o)
+
+    return NestStream(
+        name=ref.name,
+        stream=BlockStream(block, index_map, direction=ref.kind,
+                           name=ref.name),
+        levels=order, logical_shape=logical, padded_shape=pad_shape,
+        layout_shape=layout, policy=policy)
+
+
+def lower_nest(plan: StreamPlan,
+               policy: BlockPolicy = DEFAULT_POLICY) -> LoweredNest:
+    """Lower a plan with an output WRITE ref to a level-mapped schedule.
+
+    Requirements (each a :class:`LoweringError` otherwise):
+
+    * exactly one WRITE ref, affine and *allocated* (it needs a lane);
+    * every allocated ref has a dense storage order (possibly permuting
+      the loop order — GEMM's B);
+    * the output's contraction axes are the innermost loop levels, so all
+      revisits of one output block are consecutive grid steps and a single
+      VMEM accumulator carries them (init on first, drain on last).
+    """
+    nest = plan.nest
+    try:
+        out_ref = nest_analysis.output_ref(nest)
+    except ValueError as e:
+        raise LoweringError(str(e)) from e
+    if out_ref is None:
+        raise LoweringError(
+            "nest has no WRITE ref; use lower_plan with an ssr_call "
+            "map/reduce mode to synthesise the output")
+    if not out_ref.is_affine():
+        raise LoweringError(
+            f"output ref '{out_ref.name}' is not affine; it cannot be "
+            "served by a write stream")
+    out_allocs = [a for a in plan.allocations
+                  if a.ref.kind == Direction.WRITE]
+    if not out_allocs:
+        raise LoweringError(
+            f"output ref '{out_ref.name}' was not allocated a lane "
+            f"({len(plan.allocations)} lanes used); raise num_lanes so the "
+            "write stream gets a data mover")
+
+    zaxes = nest_analysis.contraction_axes(out_ref, nest)
+    out_varying = nest_analysis.varying_levels(out_ref)
+    if zaxes and out_varying and max(out_varying) > min(zaxes):
+        raise LoweringError(
+            f"output ref '{out_ref.name}': contraction axes {zaxes} are not "
+            f"the innermost levels (output varies with {out_varying}); the "
+            "accumulator would be drained and re-initialised mid-reduction")
+
+    orders = {a.ref.name: _storage_order_or_raise(a.ref, nest)
+              for a in plan.allocations}
+    tiles, padded = _nest_tiles(nest, orders, policy)
+    grid = tuple(p // t for p, t in zip(padded, tiles))
+
+    lowered = [_lower_nest_stream(a, nest, tiles, padded, policy)
+               for a in plan.allocations]
+    ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
+    outs = [s for s in lowered if s.stream.direction == Direction.WRITE]
+    return LoweredNest(plan=plan, policy=policy, grid=grid, tiles=tiles,
+                       in_streams=ins, out_stream=outs[0],
+                       contraction_axes=zaxes)
+
+
+# --------------------------------------------------------------------------
 # Stream chaining: a ChainedPlan lowers to ONE Pallas kernel whose
 # intermediates live in VMEM scratch blocks and never touch HBM.
 # --------------------------------------------------------------------------
@@ -339,7 +611,13 @@ def lower_chain(chained: ChainedPlan,
 # --------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=256)
+#: One bound for every lowering-layer cache: the three plan caches below
+#: and the built-kernel cache share it, so sizing is tuned in one place and
+#: ``clear_caches()`` provably empties the whole layer.
+CACHE_MAX = 256
+
+
+@functools.lru_cache(maxsize=CACHE_MAX)
 def _plan_for(nest: LoopNest, num_lanes: int) -> StreamPlan:
     """Plan cache keyed on the nest signature (frozen dataclass hash).
 
@@ -350,17 +628,21 @@ def _plan_for(nest: LoopNest, num_lanes: int) -> StreamPlan:
     return ssrify(nest, num_lanes=num_lanes, force=True)
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=CACHE_MAX)
 def plan_stats(nest: LoopNest, num_lanes: int = 2) -> StreamPlan:
     """The static-verdict plan (no force) — Eq. (1)–(3) cost accounting."""
     return ssrify(nest, num_lanes=num_lanes)
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=CACHE_MAX)
 def _chain_for(nests: Tuple[LoopNest, ...],
                num_lanes: Optional[int]) -> ChainedPlan:
     """Chained-plan cache (force=True: the caller asked to execute fused)."""
     return chain(nests, num_lanes=num_lanes, force=True)
+
+
+#: Every LRU in this layer, for clear/inspection: the three plan caches…
+_PLAN_CACHES = (_plan_for, plan_stats, _chain_for)
 
 
 def _body_key(body: Callable) -> Any:
@@ -393,10 +675,10 @@ def _body_key(body: Callable) -> Any:
     return key
 
 
-# Built-kernel cache, LRU-bounded.  Keys include the body's ``_body_key``:
-# inline lambdas hit the cache as long as their closure values are hashable
-# and equal (see the footgun note above).
-_KERNEL_CACHE_MAX = 256
+# …and the built-kernel cache, LRU-bounded by the same CACHE_MAX.  Keys
+# include the body's ``_body_key``: inline lambdas hit the cache as long as
+# their closure values are hashable and equal (see the footgun note above).
+_KERNEL_CACHE_MAX = CACHE_MAX
 _kernel_cache: "collections.OrderedDict[Any, Callable]" = \
     collections.OrderedDict()
 
@@ -416,9 +698,9 @@ def _kernel_cache_put(key, fn) -> None:
 
 
 def clear_caches() -> None:
-    _plan_for.cache_clear()
-    plan_stats.cache_clear()
-    _chain_for.cache_clear()
+    """Empty every lowering-layer cache: plans, chains, built kernels."""
+    for c in _PLAN_CACHES:
+        c.cache_clear()
     _kernel_cache.clear()
 
 
@@ -548,6 +830,85 @@ def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
                             interpret)
 
 
+def _build_nest_kernel(lowered: LoweredNest, body: Callable,
+                       out_dtype, interpret: Optional[bool]) -> Callable:
+    """Wrap a block-level ``body`` into a level-mapped ssr_pallas kernel.
+
+    ``body(*read_blocks)`` returns the output block's partial for one grid
+    step.  With contraction axes the partial accumulates into a VMEM
+    scratch block: zeroed on the first visit of the contraction axes,
+    drained to the write stream on the last — the paper's accumulator
+    register at block granularity (GEMM's ``C += A·B`` k-walk).  Without
+    contraction axes every step owns its output block and writes directly.
+    """
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    n_in = len(lowered.in_streams)
+    zaxes = lowered.contraction_axes
+    acc_shape = lowered.out_stream.stream.block_shape
+
+    # The accumulator always runs at the f32 compute width (the MXU/VPU
+    # accumulation dtype — the repo-wide policy), regardless of the storage
+    # out_dtype: accumulating k-tile partials in bf16 would compound
+    # rounding across grid steps.  The cast to out_dtype happens once, at
+    # the drain.
+    acc_dtype = jnp.float32
+
+    if zaxes:
+        def kernel(*refs):
+            in_refs, o_ref = refs[:n_in], refs[n_in]
+            acc_ref = refs[n_in + 1]
+            first = pl.program_id(zaxes[0]) == 0
+            last = pl.program_id(zaxes[0]) == pl.num_programs(zaxes[0]) - 1
+            for z in zaxes[1:]:
+                first = jnp.logical_and(first, pl.program_id(z) == 0)
+                last = jnp.logical_and(
+                    last, pl.program_id(z) == pl.num_programs(z) - 1)
+
+            @pl.when(first)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            part = jnp.asarray(body(*[r[...] for r in in_refs]), acc_dtype)
+            acc_ref[...] += part.reshape(acc_shape)
+
+            @pl.when(last)
+            def _drain():
+                o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+        scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
+    else:
+        def kernel(*refs):
+            in_refs, o_ref = refs[:n_in], refs[n_in]
+            o_ref[...] = jnp.asarray(
+                body(*[r[...] for r in in_refs]), out_dtype
+            ).reshape(acc_shape)
+
+        scratch = []
+
+    return ssr_pallas(
+        kernel, grid=lowered.grid,
+        in_streams=[s.stream for s in lowered.in_streams],
+        out_streams=[lowered.out_stream.stream],
+        out_shapes=[jax.ShapeDtypeStruct(lowered.out_stream.layout_shape,
+                                         out_dtype)],
+        scratch_shapes=scratch,
+        interpret=interpret,
+        dimension_semantics=lowered.semantics,
+    )
+
+
+def _trim_nest_output(out: jax.Array, lowered: LoweredNest) -> jax.Array:
+    """Drop per-level padding; return the output's logical nd array."""
+    ns = lowered.out_stream
+    if not ns.levels:
+        return out[0, 0]
+    if len(ns.levels) == 1:
+        return out[0, :ns.logical_shape[0]]
+    return out[tuple(slice(0, e) for e in ns.logical_shape)]
+
+
 def _chain_stage_shapes(lowered: LoweredChain, bodies: Sequence[Callable],
                         out_dtype,
                         require_final_block: bool = False) -> Tuple[int, ...]:
@@ -642,17 +1003,27 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
       walking the grid (the output AGU); the result is trimmed to the
       nest's iteration count.
 
+    A nest with an explicit output WRITE ref (e.g. :func:`compiler.gemm_nest`)
+    takes the **level-mapped** path instead: ``mode`` is ignored, the body
+    returns one output-block partial per grid step, contraction axes
+    accumulate in VMEM (see :func:`lower_nest`), and the result comes back
+    in the output ref's logical nd shape (``(m, n)`` for GEMM).
+
     ``operands`` maps :class:`MemRef` names to arrays.  Zero padding is
     applied per stream, so bodies must be padding-neutral for ``reduce``
-    (sum/dot-style bodies are).  Plans are cached on the nest signature,
-    built kernels on (nest, policy, mode, body key, dtypes, interpret) —
-    see :func:`_body_key`: inline lambdas hit the cache as long as their
-    closure values are hashable and equal.
+    and for contraction axes (sum/dot-style bodies are).  Plans are cached
+    on the nest signature, built kernels on (nest, policy, mode, body key,
+    dtypes, interpret) — see :func:`_body_key`: inline lambdas hit the
+    cache as long as their closure values are hashable and equal.
     """
-    if num_lanes is None:
-        num_lanes = sum(1 for r in nest.refs if r.is_affine())
+    num_lanes = nest_analysis.auto_lanes(nest, num_lanes)
     plan = _plan_for(nest, num_lanes)
-    lowered = lower_plan(plan, policy)
+    has_output = any(r.kind == Direction.WRITE for r in nest.refs)
+    if has_output:
+        lowered = lower_nest(plan, policy)
+        mode = "nest"          # the output ref, not the mode, shapes the call
+    else:
+        lowered = lower_plan(plan, policy)
     missing = [s.name for s in lowered.in_streams if s.name not in operands]
     if missing:
         raise ValueError(f"missing operands for streams {missing}")
@@ -663,11 +1034,17 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
            num_lanes, interpret)
     fn = _kernel_cache_get(key)
     if fn is None:
-        fn = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
-                           interpret)
+        if has_output:
+            fn = _build_nest_kernel(lowered, body, jnp.dtype(out_dtype),
+                                    interpret)
+        else:
+            fn = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
+                               interpret)
         _kernel_cache_put(key, fn)
 
     out = fn(*prepared)
+    if has_output:
+        return _trim_nest_output(out, lowered)
     return _trim_output(out, nest.bounds, mode, policy)
 
 

@@ -1,0 +1,223 @@
+"""Loop-nest IR + shared analysis for the §3.2 pipeline.
+
+This module owns the compiler's input "MIR" — :class:`LoopNest` of affine
+:class:`MemRef` accesses — and the analyses every stage of the pipeline
+needs.  Before it existed, ``compiler.ssrify``, ``compiler.chain``,
+``compiler.cluster_cost`` and ``lowering.ssr_call`` each re-derived the same
+facts privately (ref depth, lane counts, residual instruction folding);
+now there is exactly one answer per question:
+
+* **depth / classification** — :func:`ref_depth`, :func:`reads`,
+  :func:`writes`, :func:`affine_refs`, :func:`output_ref`;
+* **lane inference** — :func:`auto_lanes`: the ``num_lanes=None``
+  convention (allocate every affine ref) used by ``ssr_call``, ``chain``
+  and ``cluster_cost``;
+* **contraction detection** — :func:`contraction_axes`: the loop levels a
+  ref is *revisited* across (coefficient 0 while the level iterates).  For
+  a READ ref these are the repeat-register levels (§3.1); for the output
+  WRITE ref they are the reduction loops whose partial sums the lowering
+  must keep in an accumulator (init on first step, drain on last);
+* **layout** — :func:`storage_order`: the permutation of varying levels
+  that makes the ref a dense row-major array, or ``None`` when no such
+  layout exists (the access is not expressible as whole-block DMA).
+
+Everything here is pure Python over frozen dataclasses — importable by the
+compiler, the lowering, the cluster layer and the benchmarks without any
+jax dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from .stream import Direction, MAX_DIMS
+
+
+@dataclasses.dataclass(frozen=True)
+class MemRef:
+    """One load/store whose address is affine in the loop indices.
+
+    ``coeffs[k]`` multiplies loop index ``k`` (outermost first); accesses with
+    a non-affine address are represented by ``coeffs=None`` and are never
+    SSR-ified (the MIR pattern-match fails — §3.2 step 2).
+    """
+
+    name: str
+    kind: Direction
+    coeffs: Optional[Tuple[int, ...]]  # None => not affine
+    offset: int = 0
+    depth: Optional[int] = None  # innermost loop level the access lives in
+
+    def is_affine(self) -> bool:
+        return self.coeffs is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopNest:
+    """A perfect loop nest with known bounds (outermost first)."""
+
+    bounds: Tuple[int, ...]
+    refs: Tuple[MemRef, ...]
+    compute_per_level: Tuple[int, ...]  # useful ops per body, per level
+
+    def __post_init__(self) -> None:
+        if len(self.bounds) > MAX_DIMS:
+            raise ValueError(
+                f"nest depth {len(self.bounds)} exceeds AGU dims ({MAX_DIMS}); "
+                "outer levels must stay in software (paper §3.1)"
+            )
+        if len(self.compute_per_level) != len(self.bounds):
+            raise ValueError("compute_per_level must match nest depth")
+
+    @property
+    def depth(self) -> int:
+        return len(self.bounds)
+
+
+# -- classification ----------------------------------------------------------
+
+
+def reads(nest: LoopNest) -> Tuple[MemRef, ...]:
+    return tuple(r for r in nest.refs if r.kind == Direction.READ)
+
+
+def writes(nest: LoopNest) -> Tuple[MemRef, ...]:
+    return tuple(r for r in nest.refs if r.kind == Direction.WRITE)
+
+
+def affine_refs(nest: LoopNest) -> Tuple[MemRef, ...]:
+    return tuple(r for r in nest.refs if r.is_affine())
+
+
+def output_ref(nest: LoopNest) -> Optional[MemRef]:
+    """The nest's single output WRITE ref, or ``None`` for read-only nests.
+
+    A nest with more than one write has no single-accumulator lowering;
+    callers that need one (``ssr_call``'s nest-output path) treat that as a
+    lowering failure.
+    """
+    ws = writes(nest)
+    if not ws:
+        return None
+    if len(ws) > 1:
+        raise ValueError(
+            f"nest has {len(ws)} write refs "
+            f"({[w.name for w in ws]}); expected at most one output")
+    return ws[0]
+
+
+def ref_depth(ref: MemRef, nest: LoopNest) -> int:
+    """Deepest loop level whose index the address actually varies with."""
+    if ref.depth is not None:
+        return ref.depth
+    if not ref.is_affine():
+        return -1
+    depth = 0
+    for k, c in enumerate(ref.coeffs):
+        if c != 0:
+            depth = k
+    return depth
+
+
+def varying_levels(ref: MemRef) -> Tuple[int, ...]:
+    """Loop levels (outermost first) the ref's address varies with."""
+    assert ref.coeffs is not None, "non-affine refs have no varying levels"
+    return tuple(k for k, c in enumerate(ref.coeffs) if c != 0)
+
+
+def contraction_axes(ref: MemRef, nest: LoopNest) -> Tuple[int, ...]:
+    """Levels the ref is *revisited* across (coefficient 0, bound iterates).
+
+    For a READ ref these are the repeat-register levels (§3.1: "a value
+    loaded from memory is used as an operand multiple times"); for a WRITE
+    ref they are the contraction (reduction) loops — the same address is
+    written once per surrounding iteration, so the lowering must accumulate
+    partials and drain only on the last revisit.
+    """
+    assert ref.coeffs is not None
+    return tuple(k for k, c in enumerate(ref.coeffs)
+                 if c == 0 and nest.bounds[k] > 1)
+
+
+# -- lane inference ----------------------------------------------------------
+
+
+def auto_lanes(nest: LoopNest, num_lanes: Optional[int] = None) -> int:
+    """Data-mover lanes to allocate: every affine ref, unless overridden.
+
+    This is the ``num_lanes=None`` convention shared by ``ssr_call``,
+    ``chain`` and ``cluster_cost`` — the execution layer streams every
+    pattern-matched access, leaving Eq. (3) to the *static* verdict only.
+    """
+    if num_lanes is not None:
+        return num_lanes
+    return max(1, len(affine_refs(nest)))
+
+
+# -- cost-model helpers ------------------------------------------------------
+
+
+def instr_counts(nest: LoopNest,
+                 residual: Sequence[MemRef] = ()) -> List[int]:
+    """Per-level body instruction counts with residual accesses folded in.
+
+    Residual (non-streamed) loads/stores stay in the body at their depth —
+    the Eq. (1)/(2) accounting both ``ssrify`` and ``chain`` apply.
+    """
+    counts = list(nest.compute_per_level)
+    for ref in residual:
+        counts[max(0, ref_depth(ref, nest))] += 1
+    return counts
+
+
+def nest_compute(nest: LoopNest) -> int:
+    """Useful ops of one nest execution: Σ_i I_i · Π_{n≤i} L_n."""
+    prod, total = 1, 0
+    for Li, Ii in zip(nest.bounds, nest.compute_per_level):
+        prod *= Li
+        total += Ii * prod
+    return total
+
+
+# -- layout ------------------------------------------------------------------
+
+
+def storage_order(ref: MemRef, nest: LoopNest) -> Optional[Tuple[int, ...]]:
+    """Varying levels ordered outermost-first *in storage*, if dense.
+
+    A ref is whole-block streamable when, sorted by descending coefficient,
+    its varying levels form a dense row-major array: the fastest level has
+    coefficient 1 and every slower level's coefficient equals the extent
+    product of the faster ones.  The order may be any *permutation* of the
+    loop order — GEMM's B operand walks the innermost loop (k) with stride
+    n because its storage order is (k, n) while the loop order is
+    (m, n, k).  Returns ``None`` when no dense layout exists (e.g. the
+    overlapping windows of a stencil walk).
+
+    A bound-1 level multiplies the running extent by 1, so its coefficient
+    *ties* the next-faster real level's; a naive coefficient sort can then
+    pick the non-dense permutation and reject a valid layout (GEMM's B
+    with n == 1 has coefficients (0, 1, 1): (k, n) is dense, (n, k) is
+    not).  Ties break toward the fast side for bound-1 levels, where the
+    running extent still equals their coefficient.
+    """
+    assert ref.coeffs is not None
+    lv = varying_levels(ref)
+    if not lv:
+        return ()
+    order = sorted(lv, key=lambda l: (-ref.coeffs[l],
+                                      nest.bounds[l] == 1, l))
+    expect = 1
+    for l in reversed(order):
+        if ref.coeffs[l] != expect:
+            return None
+        expect *= nest.bounds[l]
+    return tuple(order)
+
+
+def logical_shape(ref: MemRef, nest: LoopNest) -> Tuple[int, ...]:
+    """The dense array shape implied by :func:`storage_order`."""
+    order = storage_order(ref, nest)
+    assert order is not None, f"ref {ref.name!r} has no dense storage order"
+    return tuple(nest.bounds[l] for l in order)

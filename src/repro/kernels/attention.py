@@ -122,8 +122,12 @@ def _launch(static, q, k, v):
     )
 
 
-_ssr = StreamKernel("attention", prepare=_prepare, launch=_launch,
-                    body=_body)
+_ssr = StreamKernel(
+    "attention", prepare=_prepare, launch=_launch, body=_body,
+    lowering_waiver=(
+        "online-softmax carried state: the m/l/acc scratch is *rescaled* "
+        "(multiplied by alpha) every kv step, not just accumulated — "
+        "beyond the init/add/drain contraction pattern lower_nest emits"))
 
 
 def ssr_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -63,8 +63,13 @@ def _launch(static, x2d):
     )
 
 
-_ssr = StreamKernel("bitonic", prepare=_prepare, launch=_launch, body=_body,
-                    finish=lambda out, _: out.reshape(-1))
+_ssr = StreamKernel(
+    "bitonic", prepare=_prepare, launch=_launch, body=_body,
+    finish=lambda out, _: out.reshape(-1),
+    lowering_waiver=(
+        "compare-exchange network: each stage pairs elements at a "
+        "different power-of-two distance — data-oblivious and affine per "
+        "stage, but not one dense block walk over a single LoopNest"))
 
 
 def ssr_sort(x: jax.Array, *, interpret=None) -> jax.Array:

@@ -30,7 +30,8 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import Direction, LoopNest, MemRef, ssr_call, ssr_chain_call
+from repro.core import (Direction, LoopNest, MemRef, compiler, ssr_call,
+                        ssr_chain_call)
 from repro.core.lowering import DEFAULT_POLICY
 
 from .frontend import BLOCK_ELEMS, ChainedKernel, trim_vector
@@ -60,7 +61,10 @@ _gemv_relu = ChainedKernel(
     launch=_gemv_launch,
     producer=lambda static: matvec_block,
     consumer=lambda static: relu_block,
-    finish=lambda out, m: out.reshape(-1)[:m])
+    finish=lambda out, m: out.reshape(-1)[:m],
+    lowering_waiver=(
+        "geometry-reuse fusion: borrows the gemv Launch (see its waiver) "
+        "and bolts the consumer onto the block before it leaves VMEM"))
 
 
 def fused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
@@ -83,7 +87,10 @@ _stencil_relu = ChainedKernel(
     launch=_stencil_launch,
     producer=lambda static: window_block,
     consumer=lambda static: relu_block,
-    finish=trim_vector)
+    finish=trim_vector,
+    lowering_waiver=(
+        "geometry-reuse fusion: borrows the stencil1d halo Launch (see "
+        "its waiver) and applies the consumer in-VMEM"))
 
 
 def fused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):
@@ -119,10 +126,7 @@ def _chain_nests(n: int, consumer_reads_w: bool) -> Tuple[LoopNest, LoopNest]:
 
 def _map_nest(n: int, names: Tuple[str, ...],
               compute: int) -> LoopNest:
-    return LoopNest(
-        bounds=(n,),
-        refs=tuple(MemRef(nm, Direction.READ, (1,)) for nm in names),
-        compute_per_level=(compute,))
+    return compiler.elementwise_nest(n, names, compute)
 
 
 def _sq_diff_block(a, b):

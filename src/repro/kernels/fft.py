@@ -100,7 +100,11 @@ def _launch(static, xr, xi, wr, wi):
 
 _ssr = StreamKernel(
     "fft", prepare=_prepare, launch=_launch, body=_body,
-    finish=lambda out, _: (out[0].reshape(-1), out[1].reshape(-1)))
+    finish=lambda out, _: (out[0].reshape(-1), out[1].reshape(-1)),
+    lowering_waiver=(
+        "per-stage power-of-two strided butterflies: every stage re-walks "
+        "the working vector at a different stride — word-granular AGU "
+        "territory, no whole-block dense layout across stages"))
 
 
 def ssr_fft(re: jax.Array, im: jax.Array, *,

@@ -30,6 +30,17 @@ a single-step ``pallas_call`` whose body walks blocks with explicit loads —
 the paper's serialised load→compute issue — with the identical caching and
 pad/trim treatment, so "baseline" and "ssr" differ only in how operands are
 delivered.
+
+**One path to silicon.**  :class:`NestKernel` is the preferred declarative
+shell: the kernel states a :class:`~repro.core.LoopNest` (the §3.2
+compiler's input) plus a block body, and the whole schedule — grid, index
+maps, repeat streams, contraction accumulators — comes out of
+``ssrify``/``lower_plan``/``lower_nest`` via :func:`repro.core.ssr_call`.
+A module may still hand a raw :class:`Launch` to :class:`StreamKernel` /
+:class:`ChainedKernel`, but only with a ``lowering_waiver``: one sentence
+stating why the pattern is outside the block-granular AGU model (halo
+overlap, carried state, power-of-two shuffle networks, …).  The waiver is
+mandatory — an undeclared escape hatch is a compiler-coverage bug.
 """
 
 from __future__ import annotations
@@ -42,6 +53,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import BlockStream  # noqa: F401  (re-export for kernels)
+from repro.core.lowering import ssr_call
 from repro.core.ssr import _on_tpu, ssr_pallas
 
 ROWS = 8
@@ -130,12 +142,78 @@ class _KernelBase:
         return self._finish(out, final) if self._finish else out
 
 
+def _require_waiver(name: str, waiver: Optional[str]) -> str:
+    """Hand-scheduled geometry must state why the compiler cannot emit it."""
+    if not waiver or not waiver.strip():
+        raise ValueError(
+            f"kernel {name!r} constructs a Launch without a lowering_waiver; "
+            "declare why the pattern is outside the block-granular AGU "
+            "model, or migrate to NestKernel")
+    return waiver
+
+
+class NestKernel:
+    """A kernel whose schedule IS its :class:`~repro.core.LoopNest`.
+
+    The declarative replacement for ``StreamKernel``'s ``launch=`` escape
+    hatch: the module supplies
+
+    * ``prepare(*args, **params) -> (operands, static, final)`` — operand
+      canonicalisation; ``operands`` maps the nest's :class:`MemRef` names
+      to arrays (no padding/reshaping — the lowering owns the layout);
+    * ``nest(static) -> LoopNest`` — the §3.2 compiler input; a nest with
+      an output WRITE ref takes the level-mapped contraction path, a
+      read-only nest uses ``mode`` (``"reduce"``/``"map"``);
+    * ``body(static) -> fn(*blocks)`` — the pure compute region;
+    * ``finish(out, final)`` — result post-processing (dtype cast, …).
+
+    Everything between prepare and finish — grid, index maps, repeat
+    streams, accumulators, padding, kernel caching — is
+    :func:`repro.core.ssr_call`, i.e. the same pipeline the compiler tests
+    verify, so the kernel is covered by the Eq. (1)–(3) cost model
+    (``plan_stats``) and the cluster layer for free.
+    """
+
+    def __init__(self, name: str, *, prepare: Callable, nest: Callable,
+                 body: Callable, mode: str = "reduce",
+                 finish: Optional[Callable] = None,
+                 out_dtype: Optional[Callable] = None):
+        self.name = name
+        self._prepare = prepare
+        self._nest = nest
+        self._body = body
+        self._mode = mode
+        self._finish = finish
+        # out_dtype(static) -> dtype; None keeps ssr_call's f32 accumulation
+        # default.  Dtype-preserving kernels (integer relu) need this so the
+        # streamed engine stays bit-exact with the baseline.
+        self._out_dtype = out_dtype
+
+    def loop_nest(self, static):
+        """The nest this kernel executes — exposed for cost-model oracles."""
+        return self._nest(static)
+
+    def __call__(self, *args, interpret: Optional[bool] = None, **params):
+        operands, static, final = self._prepare(*args, **params)
+        kw = {} if self._out_dtype is None else \
+            {"out_dtype": self._out_dtype(static)}
+        out = ssr_call(self._nest(static), self._body(static), dict(operands),
+                       mode=self._mode, interpret=interpret, **kw)
+        return self._finish(out, final) if self._finish else out
+
+
 class StreamKernel(_KernelBase):
-    """A streamed (SSR) kernel: geometry from ``launch``, body per block."""
+    """A streamed (SSR) kernel: geometry from ``launch``, body per block.
+
+    Requires a ``lowering_waiver`` naming why the §3.2 pipeline cannot
+    emit this schedule (see module docstring) — prefer :class:`NestKernel`.
+    """
 
     def __init__(self, name: str, *, prepare: Callable, launch: Callable,
-                 body: Callable, finish: Optional[Callable] = None):
+                 body: Callable, finish: Optional[Callable] = None,
+                 lowering_waiver: Optional[str] = None):
         super().__init__(name, prepare=prepare, finish=finish)
+        self.lowering_waiver = _require_waiver(name, lowering_waiver)
         self._launch = launch
         self._body = body
 
@@ -191,8 +269,10 @@ class ChainedKernel(_KernelBase):
 
     def __init__(self, name: str, *, prepare: Callable, launch: Callable,
                  producer: Callable, consumer: Callable,
-                 finish: Optional[Callable] = None):
+                 finish: Optional[Callable] = None,
+                 lowering_waiver: Optional[str] = None):
         super().__init__(name, prepare=prepare, finish=finish)
+        self.lowering_waiver = _require_waiver(name, lowering_waiver)
         self._launch = launch
         self._producer = producer
         self._consumer = consumer

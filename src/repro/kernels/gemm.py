@@ -1,16 +1,26 @@
 """Tiled GEMM — paper §4.2 (32×32·32×32) and the production matmul.
 
-The canonical SSR composition: three AGU loops (m, n, k) drive two read
-streams and one revisited output.  The A panel's ``index_map`` ignores the n
-grid axis — the same block is served to every n-tile, which is precisely the
-repeat register at block granularity (fetched once, emitted N/bn times).
-Accumulation runs in an f32 VMEM scratch; the write stream drains on the
-last k step.  With ``dimension_semantics = (parallel, parallel, arbitrary)``
-the Pallas pipeline double-buffers the k-stream — the data mover running
-ahead of the MXU.
+The canonical SSR composition, and since the multi-level lowering landed,
+*fully compiler-scheduled*: the kernel module declares only the
+:func:`repro.core.compiler.gemm_nest` loop nest (three AGU loops m, n, k;
+two read streams; one write ref revisited across k) plus the block-level
+fmadd body, and ``ssrify``/``lower_nest``/``ssr_call`` derive the grid, the
+index maps, and the accumulator.  What used to be hand-written geometry now
+falls out of the nest:
 
-This file is also the production matmul for the LM stack (``ssr_matmul``),
-with MXU-aligned default tiles.
+* the A panel's ``index_map`` ignores the n grid axis — the same block is
+  served to every n-tile, the repeat register at block granularity (A's
+  level-1 coefficient is 0);
+* B's storage order (k, n) permutes the loop order — its blocks walk
+  column-tiles while the innermost loop contracts k;
+* C's level-2 coefficient is 0, so the output block is revisited across
+  the whole k walk: the lowering gives it an f32 VMEM scratch accumulator,
+  zeroed on the first k step and drained on the last;
+* ``dimension_semantics = (parallel, parallel, arbitrary)`` lets the
+  Pallas pipeline double-buffer the k-stream — the data mover running
+  ahead of the MXU.
+
+This file is also the production matmul for the LM stack (``ssr_matmul``).
 """
 
 from __future__ import annotations
@@ -18,77 +28,71 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction, auto_block
+from repro.core import compiler
 
-from .frontend import Launch, MonolithicKernel, StreamKernel
+from .frontend import MonolithicKernel, NestKernel, promote
 from .registry import KernelEntry, register_kernel
 
 
-def _prepare(a, b, bm=256, bn=256, bk=512, out_dtype=None):
+def _prepare(a, b, bm=None, bn=None, bk=None, out_dtype=None):
     m, kdim = a.shape
     k2, n = b.shape
     if kdim != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
     out_dtype = jnp.dtype(out_dtype or a.dtype)
-    bm = auto_block(m, bm, 8) if m % bm else bm
-    bn = auto_block(n, bn, 128) if n % bn else bn
-    bk = auto_block(kdim, bk, 128) if kdim % bk else bk
-    pm, pn, pk = (-m) % bm, (-n) % bn, (-kdim) % bk
-    if pm or pk:
-        a = jnp.pad(a, ((0, pm), (0, pk)))
-    if pk or pn:
-        b = jnp.pad(b, ((0, pk), (0, pn)))
-    return (a, b), (bm, bn, bk, out_dtype.name), (m, n)
+    # Degenerate n/k (a column vector, an outer product) zero-pad to 2 so
+    # every ref keeps its canonical rank-2 storage order — the body's
+    # (tm, tk)·(tk, tn) orientation — instead of collapsing to a vector
+    # walk.  Zero columns contribute nothing to the contraction; the
+    # finish step trims the output back.
+    if n < 2:
+        b = jnp.pad(b, ((0, 0), (0, 2 - n)))
+    if kdim < 2:
+        a = jnp.pad(a, ((0, 0), (0, 2 - kdim)))
+        b = jnp.pad(b, ((0, 2 - kdim), (0, 0)))
+    # bm/bn/bk are accepted for call-site compatibility but tiles are now
+    # chosen by the lowering policy (min-clamped to the padded dims, so a
+    # tiny matrix is never padded up to a full production tile).
+    return ({"A": a, "B": b}, (m, max(n, 2), max(kdim, 2)),
+            (m, n, out_dtype.name))
 
 
-def _ssr_body(static):
-    def body(a_ref, b_ref, o_ref, acc_ref):
-        k = pl.program_id(2)
+def _nest(static):
+    m, n, k = static
+    return compiler.gemm_nest(m, n, k)
 
-        @pl.when(k == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        acc_ref[...] += jax.lax.dot_general(
-            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+def _body(static):
+    def body(a_blk, b_blk):
+        # one output-block partial per grid step: C[i,j] += A[i,k]·B[k,j]
+        return jax.lax.dot_general(
+            promote(a_blk), promote(b_blk), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-
-        @pl.when(k == pl.num_programs(2) - 1)
-        def _write():
-            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
     return body
 
 
-def _launch(static, a, b):
-    bm, bn, bk, out_dtype = static
-    m, kdim = a.shape
-    n = b.shape[1]
-    return Launch(
-        grid=(m // bm, n // bn, kdim // bk),
-        in_streams=(
-            # A ignores j: block reuse across the n axis (repeat semantics)
-            BlockStream((bm, bk), lambda i, j, k: (i, k), name="A"),
-            BlockStream((bk, bn), lambda i, j, k: (k, j), name="B"),
-        ),
-        out_streams=(BlockStream((bm, bn), lambda i, j, k: (i, j),
-                                 Direction.WRITE, name="C"),),
-        out_shapes=(jax.ShapeDtypeStruct((m, n), out_dtype),),
-        scratch_shapes=(pltpu.VMEM((bm, bn), jnp.float32),),
-        dimension_semantics=("parallel", "parallel", "arbitrary"),
-    )
+def _finish(out, final):
+    # trim the degenerate-dim padding (prepare grows n to 2) and cast
+    m, n, dtype = final
+    return out[:m, :n].astype(dtype)
 
 
-_ssr = StreamKernel("gemm", prepare=_prepare, launch=_launch, body=_ssr_body,
-                    finish=lambda out, mn: out[:mn[0], :mn[1]])
+_ssr = NestKernel("gemm", prepare=_prepare, nest=_nest, body=_body,
+                  finish=_finish)
 
 
 def ssr_matmul(a: jax.Array, b: jax.Array, *,
-               bm: int = 256, bn: int = 256, bk: int = 512,
+               bm: int | None = None, bn: int | None = None,
+               bk: int | None = None,
                out_dtype=None, interpret=None) -> jax.Array:
-    """C = A·B with streamed operand delivery.  Pads to tile multiples."""
+    """C = A·B through the full compiler path (nest → plan → Pallas).
+
+    ``bm``/``bn``/``bk`` are retained for call-site compatibility with the
+    old hand-tiled engine; tiling now comes from the lowering policy and
+    is clamped to the (padded) problem, never the other way around.
+    """
     return _ssr(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
                 interpret=interpret)
 
@@ -136,6 +140,35 @@ def baseline_matmul(a: jax.Array, b: jax.Array, *, out_dtype=None,
     return _base(a, b, out_dtype=out_dtype, interpret=interpret)
 
 
+def cluster_matmul(a: jax.Array, b: jax.Array, *, cores: int,
+                   out_dtype=None, interpret=None) -> jax.Array:
+    """GEMM on a C-core cluster (paper §5.3): the 2-D row×col split.
+
+    The iteration space splits on *both* parallel levels: cores factor into
+    a (rows × cols) grid (closest to square), A shards row-wise, B
+    col-wise, and each core runs the unchanged compiled GEMM on its
+    (m/Cr, n/Cc) output tile — the contraction (k) stays core-local, so no
+    collective is emitted at all.  ``cores=1`` bypasses the mesh entirely.
+    """
+    from repro.parallel.cluster import cluster_kernel2d, factor_cores
+
+    if cores == 1:
+        return ssr_matmul(a, b, out_dtype=out_dtype, interpret=interpret)
+    cr, cc = factor_cores(cores)
+    m, n = a.shape[0], b.shape[1]
+    pm, pn = (-m) % cr, (-n) % cc
+    if pm:
+        a = jnp.pad(a, ((0, pm), (0, 0)))
+    if pn:
+        b = jnp.pad(b, ((0, 0), (0, pn)))
+    out = cluster_kernel2d(
+        lambda ac, bc: ssr_matmul(ac, bc, out_dtype=out_dtype,
+                                  interpret=interpret),
+        (a, b), cores=cores,
+        in_dims=((0, None), (None, 1)), out_dims=(0, 1))
+    return out[:m, :n]
+
+
 @register_kernel("gemm")
 def _entry() -> KernelEntry:
     from . import ref
@@ -153,6 +186,6 @@ def _entry() -> KernelEntry:
                 {"out_dtype": jnp.float32})
 
     return KernelEntry(name="gemm", ssr=ssr_matmul, baseline=baseline_matmul,
-                       ref=_ref, example=example,
+                       ref=_ref, cluster=cluster_matmul, example=example,
                        tol={"rtol": 2e-4, "atol": 2e-4},
                        problem="32×32 · 32×32")

@@ -54,8 +54,13 @@ def _launch(static, a, x2d):
     )
 
 
-_ssr = StreamKernel("gemv", prepare=_prepare, launch=_launch, body=_ssr_body,
-                    finish=lambda out, m: out.reshape(-1)[:m])
+_ssr = StreamKernel(
+    "gemv", prepare=_prepare, launch=_launch, body=_ssr_body,
+    finish=lambda out, m: out.reshape(-1)[:m],
+    lowering_waiver=(
+        "whole-row (ROWS, n) panels with an un-tiled contraction dim — the "
+        "MXU wants the full row resident per step, and this launch is the "
+        "geometry substrate ChainedKernel fusions (gemv_relu) reuse"))
 
 
 def _baseline_body(static):

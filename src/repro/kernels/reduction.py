@@ -1,11 +1,13 @@
 """Reduction (dot product) — the paper's running example (Fig. 4, §4.1).
 
-SSR variant: both operands are read streams walked in lockstep by the AGU
-(1-D unit stride); the "register" the body sees is an (8, 128) VMEM block.
-The output is a revisited (1, 1) block accumulated across grid steps — the
-accumulator register ``%x`` of Fig. 4.  The grid pipeline double-buffers the
-next operand blocks while the current ones are consumed: the data mover's
-run-ahead FIFO.
+SSR variant: declared as the Fig. 4 :func:`~repro.core.compiler.
+dot_product_nest` and compiled through ``ssrify``/``lower_plan``/
+``ssr_call`` — both operands become read streams walked in lockstep by the
+AGU (1-D unit stride); the "register" the body sees is an (8, 128) VMEM
+block, and the reduce epilogue is the accumulator register ``%x`` of Fig. 4
+(vectorised: the whole vreg adds every step, folded to the scalar once on
+the last).  The grid pipeline double-buffers the next operand blocks while
+the current ones are consumed: the data mover's run-ahead FIFO.
 
 Baseline variant: one monolithic grid step with both vectors resident; the
 body itself walks the blocks with an explicit ``fori_loop`` + dynamic loads —
@@ -19,54 +21,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction
+from repro.core import compiler
 
-from .frontend import (BLOCK_ELEMS, LANES, ROWS, Launch, MonolithicKernel,
-                       StreamKernel, pad_vector, promote)
+from .frontend import (ROWS, MonolithicKernel, NestKernel, pad_vector,
+                       promote)
 from .registry import KernelEntry, register_kernel
 
 
-def _prepare(x, y):
-    return (pad_vector(x), pad_vector(y)), None, None
-
-
-def _ssr_body(static):
-    def body(x_ref, y_ref, o_ref, acc_ref):
-        i = pl.program_id(0)
-
-        @pl.when(i == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        # Vector accumulation: the whole (8, 128) vreg adds every step —
-        # collapsing each block to a scalar here would serialise the VPU
-        # behind one lane.  The scalar fold happens exactly once, below.
-        acc_ref[...] += promote(x_ref[...]) * promote(y_ref[...])
-
-        @pl.when(i == pl.num_programs(0) - 1)
-        def _write():
-            o_ref[...] = jnp.sum(acc_ref[...]).reshape(1, 1)
+def _mul_body(static):
+    # Block-shaped partial: ssr_call's reduce epilogue accumulates the
+    # whole (rows, lanes) vreg every step and folds to the scalar once.
+    def body(x_blk, y_blk):
+        return promote(x_blk) * promote(y_blk)
 
     return body
 
 
-def _launch(static, x2d, y2d):
-    return Launch(
-        grid=(x2d.shape[0] // ROWS,),
-        in_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0), name="x"),
-                    BlockStream((ROWS, LANES), lambda i: (i, 0), name="y")),
-        out_streams=(BlockStream((1, 1), lambda i: (0, 0), Direction.WRITE,
-                                 name="acc"),),
-        out_shapes=(jax.ShapeDtypeStruct((1, 1), jnp.float32),),
-        scratch_shapes=(pltpu.VMEM((ROWS, LANES), jnp.float32),),
-        dimension_semantics=("arbitrary",),
-    )
+_ssr = NestKernel(
+    "reduction",
+    prepare=lambda x, y: ({"A": x, "B": y}, x.shape[0], None),
+    nest=compiler.dot_product_nest,
+    body=_mul_body,
+    mode="reduce")
 
 
-_ssr = StreamKernel("reduction", prepare=_prepare, launch=_launch,
-                    body=_ssr_body, finish=lambda out, _: out[0, 0])
+def _prepare_base(x, y):
+    return (pad_vector(x), pad_vector(y)), None, None
 
 
 def _baseline_body(static):
@@ -86,7 +67,7 @@ def _baseline_body(static):
 
 
 _base = MonolithicKernel(
-    "reduction", prepare=_prepare, body=_baseline_body,
+    "reduction", prepare=_prepare_base, body=_baseline_body,
     out_shape=lambda static, *arrs: jax.ShapeDtypeStruct((1, 1), jnp.float32),
     finish=lambda out, _: out[0, 0])
 

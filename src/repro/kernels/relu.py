@@ -1,7 +1,9 @@
 """ReLU over a vector — paper §4.2 (max(0, x) over 1024 values).
 
-The simplest possible stream kernel: one read stream in, one write stream
-out, pure elementwise body.  Generalised to any elementwise unary, since the
+The simplest possible stream kernel: declared as a 1-D
+:func:`~repro.core.compiler.elementwise_nest` and compiled through the
+§3.2 pipeline — one read stream in, the map-mode dense write stream out,
+pure elementwise body.  Generalised to any elementwise unary, since the
 SSR structure is identical (§4.2 uses ReLU as the representative).
 """
 
@@ -13,10 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction
+from repro.core import compiler
 
-from .frontend import (LANES, ROWS, Launch, MonolithicKernel, StreamKernel,
-                       pad_vector, trim_vector)
+from .frontend import (ROWS, MonolithicKernel, NestKernel, pad_vector,
+                       trim_vector)
 from .registry import KernelEntry, register_kernel
 
 
@@ -28,30 +30,19 @@ def relu_block(x):
 _relu = relu_block  # internal alias used by the prepare default
 
 
-def _prepare(x, fn=_relu):
+_ssr = NestKernel(
+    "relu",
+    prepare=lambda x, fn=_relu: ({"X": x}, (x.shape[0], fn, x.dtype), None),
+    nest=lambda static: compiler.elementwise_nest(static[0]),
+    body=lambda static: static[1],
+    mode="map",
+    # dtype-preserving: stream engine and baseline must agree bit-exactly,
+    # including for integers above 2**24 that f32 cannot represent
+    out_dtype=lambda static: static[2])
+
+
+def _prepare_base(x, fn=_relu):
     return (pad_vector(x),), fn, x.shape[0]
-
-
-def _ssr_body(fn):
-    def body(x_ref, o_ref):
-        o_ref[...] = fn(x_ref[...])
-
-    return body
-
-
-def _launch(fn, x2d):
-    return Launch(
-        grid=(x2d.shape[0] // ROWS,),
-        in_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0), name="x"),),
-        out_streams=(BlockStream((ROWS, LANES), lambda i: (i, 0),
-                                 Direction.WRITE, name="y"),),
-        out_shapes=(jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),),
-        dimension_semantics=("parallel",),
-    )
-
-
-_ssr = StreamKernel("relu", prepare=_prepare, launch=_launch, body=_ssr_body,
-                    finish=trim_vector)
 
 
 def _baseline_body(fn):
@@ -69,7 +60,7 @@ def _baseline_body(fn):
 
 
 _base = MonolithicKernel(
-    "relu", prepare=_prepare, body=_baseline_body,
+    "relu", prepare=_prepare_base, body=_baseline_body,
     out_shape=lambda fn, x2d: jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
     finish=trim_vector)
 
@@ -95,15 +86,12 @@ def cluster_relu(x: jax.Array, *, cores: int, interpret=None) -> jax.Array:
     HLO locality audit asserts this), because an elementwise map shares
     nothing between cores.
     """
-    from repro.core import Direction, LoopNest, MemRef
     from repro.parallel.cluster import cluster_call, pad_to_cores
 
     n = x.shape[0]
     (x,), n_pad = pad_to_cores((x,), cores)
-    nest = LoopNest(bounds=(n_pad,),
-                    refs=(MemRef("X", Direction.READ, (1,)),),
-                    compute_per_level=(1,))
-    out = cluster_call(nest, relu_block, {"X": x}, mode="map", cores=cores,
+    out = cluster_call(compiler.elementwise_nest(n_pad), relu_block,
+                       {"X": x}, mode="map", cores=cores,
                        interpret=interpret)
     return out[:n]
 

@@ -52,8 +52,13 @@ def _launch(static, x2d):
     )
 
 
-_ssr = StreamKernel("scan", prepare=_prepare, launch=_launch, body=_ssr_body,
-                    finish=trim_vector)
+_ssr = StreamKernel(
+    "scan", prepare=_prepare, launch=_launch, body=_ssr_body,
+    finish=trim_vector,
+    lowering_waiver=(
+        "loop-carried dependence: block i+1's prefix needs block i's total "
+        "— a sequenced VMEM carry register, not an affine stream walk a "
+        "LoopNest can express"))
 
 
 def _baseline_body(static):

@@ -255,6 +255,77 @@ def cluster_chain_call(nests: Sequence[LoopNest],
         operands, cores=cores, mode=mode, mesh=mesh)
 
 
+def factor_cores(cores: int) -> Tuple[int, int]:
+    """Closest-to-square (rows, cols) factorisation of a core count.
+
+    The 2-D work split of :func:`cluster_kernel2d`: 8 → (4, 2), 4 → (2, 2),
+    6 → (3, 2); a prime count degenerates to a 1-D row split (p, 1).
+    """
+    if cores < 1:
+        raise ClusterError(f"cores must be >= 1, got {cores}")
+    c = int(cores ** 0.5)
+    while cores % c:
+        c -= 1
+    return cores // c, c
+
+
+def cluster_kernel2d(fn: Callable, args: Sequence[jax.Array], *,
+                     cores: int,
+                     in_dims: Sequence[Tuple[Optional[int], Optional[int]]],
+                     out_dims: Tuple[int, int] = (0, 1),
+                     mesh: Optional[Mesh] = None):
+    """Shard a registry kernel across a 2-D (rows × cols) core grid.
+
+    The §5.3 cluster with *two* partitioned levels — GEMM's row×col split:
+    ``cores`` factors into a (Cr, Cc) device grid (:func:`factor_cores`),
+    ``in_dims[i] = (row_dim, col_dim)`` names which dim of ``args[i]``
+    shards along each axis (``None`` = replicated on that axis), and every
+    core runs the unchanged kernel on its tile.  The output tiles
+    concatenate along ``out_dims`` — no collective is emitted, because
+    each core owns a disjoint output tile (the contraction, if any, stays
+    core-local).
+    """
+    args = tuple(args)
+    if cores < 1:
+        raise ClusterError(f"cores must be >= 1, got {cores}")
+    if len(in_dims) != len(args):
+        raise ClusterError(
+            f"in_dims has {len(in_dims)} entries for {len(args)} args")
+    if cores == 1:
+        return fn(*args)
+    cr, cc = factor_cores(cores)
+    if mesh is None:
+        import numpy as np
+
+        devs = jax.devices()
+        if len(devs) < cores:
+            raise ClusterError(
+                f"need {cores} devices for a {cr}x{cc} cluster, have "
+                f"{len(devs)}; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={cores} before "
+                "importing jax")
+        mesh = Mesh(np.asarray(devs[:cores]).reshape(cr, cc),
+                    ("rows", "cols"))
+    specs = []
+    for a, (rd, cd) in zip(args, in_dims):
+        spec = [None] * a.ndim
+        for dim, axis, extent in ((rd, "rows", cr), (cd, "cols", cc)):
+            if dim is None:
+                continue
+            if a.shape[dim] % extent:
+                raise ClusterError(
+                    f"arg dim {dim} extent {a.shape[dim]} not divisible by "
+                    f"{extent} ({axis}) cores")
+            spec[dim] = axis
+        specs.append(P(*spec))
+    out_spec = [None] * (max(out_dims) + 1)
+    out_spec[out_dims[0]] = "rows"
+    out_spec[out_dims[1]] = "cols"
+    wrapped = shard_map(fn, mesh=mesh, in_specs=tuple(specs),
+                        out_specs=P(*out_spec), check_rep=False)
+    return wrapped(*args)
+
+
 def cluster_kernel(fn: Callable, args: Sequence[jax.Array], *,
                    cores: int,
                    in_dims: Sequence[Optional[int]],

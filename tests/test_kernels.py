@@ -67,6 +67,20 @@ class TestRelu:
         np.testing.assert_array_equal(np.asarray(baseline_relu(x)),
                                       np.asarray(ref.relu_ref(x)))
 
+    def test_integer_dtype_preserved_exactly(self):
+        # regression: the compiled-nest engine must carry the storage
+        # dtype end to end — 2**24 + 1 is not representable in f32, so a
+        # float round-trip would silently lose the low bit
+        from repro.kernels.relu import ssr_relu
+
+        x = jnp.asarray([2**24 + 1, -(2**24 + 1), 7], jnp.int32)
+        got = ssr_relu(x)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray([2**24 + 1, 0, 7]))
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(baseline_relu(x)))
+
 
 class TestStencil:
     @pytest.mark.parametrize("n", [1024, 512])
@@ -121,6 +135,23 @@ class TestGemm:
         a, b = arr((256, 256)), arr((256, 512))
         fn_out = ssr_matmul(a, b, bm=128, bn=128, bk=128)  # warm path
         assert fn_out.shape == (256, 512)
+
+    @pytest.mark.parametrize("mnk", [(4, 3, 5), (1, 7, 2), (9, 200, 33),
+                                     (130, 2, 257),
+                                     # degenerate dims: column vector
+                                     # (n=1), outer product (k=1), scalar
+                                     (8, 1, 4), (4, 3, 1), (1, 1, 1)])
+    def test_small_and_ragged_shapes(self, mnk):
+        """Regression: tiny/ragged matrices must pad to min-clamped tiles,
+        never up to a full production tile (the old `m % bm` re-block guard
+        padded e.g. a 4-row matrix to a 256-row tile)."""
+        m, n, k = mnk
+        a, b = arr((m, k)), arr((k, n))
+        got = ssr_matmul(a, b, out_dtype=jnp.float32)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.matmul_ref(a, b)),
+                                   rtol=1e-5, atol=1e-5)
 
     def test_baseline(self):
         a, b = arr((64, 128)), arr((128, 64))

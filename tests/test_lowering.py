@@ -12,11 +12,12 @@ import itertools
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import (BlockPolicy, Direction, LoopNest, LoweringError,
-                        MemRef, agu, compiler, lower_plan, plan_stats,
-                        ssr_call, ssrify)
+                        MemRef, agu, compiler, lower_nest, lower_plan,
+                        plan_stats, ssr_call, ssrify)
 from repro.core import lowering as L
 from repro.kernels import ref
 
@@ -98,9 +99,10 @@ class TestRoundTrip:
 
 
 class TestLoweringRejections:
-    def test_strided_inner_walk_rejected(self):
+    def test_strided_inner_walk_rejected_by_flat_path(self):
         # GEMM's B stream walks the innermost loop with stride n — fine for
-        # the word-granular AGU, not expressible as whole-block DMA.
+        # the word-granular AGU and for the level-mapped lower_nest path
+        # (see TestNestLowering), but not for the flattened 1-D schedule.
         with pytest.raises(LoweringError, match="unit-stride"):
             lower_plan(ssrify(compiler.gemm_nest(32, 32, 32), force=True))
 
@@ -125,6 +127,207 @@ class TestLoweringRejections:
                         compute_per_level=(1,))
         with pytest.raises(LoweringError, match="block-aligned"):
             lower_plan(ssrify(nest, force=True))
+
+
+def _gemm_body(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+class TestNestLowering:
+    """The level-mapped path: multi-level nests with contraction axes."""
+
+    @pytest.mark.parametrize("mnk", [(32, 32, 32), (100, 130, 70),
+                                     (4, 3, 5), (1, 1, 1)])
+    def test_gemm_end_to_end_matches_dot(self, mnk):
+        m, n, k = mnk
+        a = jnp.asarray(RNG.standard_normal((m, k)) / np.sqrt(k),
+                        jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+        got = ssr_call(compiler.gemm_nest(m, n, k), _gemm_body,
+                       {"A": a, "B": b})
+        want = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_gemm_multi_step_contraction_grid(self):
+        # force a >1-step contraction walk so the accumulator's
+        # init-on-first / drain-on-last actually carries across grid steps
+        m, n, k = 64, 512, 1024
+        lowered = lower_nest(ssrify(compiler.gemm_nest(m, n, k),
+                                    num_lanes=3, force=True))
+        assert lowered.grid[2] > 1
+        assert lowered.semantics == ("parallel", "parallel", "arbitrary")
+        a = jnp.asarray(RNG.standard_normal((m, k)) / np.sqrt(k),
+                        jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+        got = ssr_call(compiler.gemm_nest(m, n, k), _gemm_body,
+                       {"A": a, "B": b})
+        want = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_coeff_level_lowers_to_invariant_index_map(self):
+        # A's level-1 coefficient is 0: its index_map must ignore the n
+        # grid axis (the repeat register at block granularity), and B must
+        # likewise ignore m.
+        lowered = lower_nest(ssrify(compiler.gemm_nest(64, 512, 256),
+                                    num_lanes=3, force=True))
+        by_name = {s.name: s for s in lowered.in_streams}
+        for name, dead_axis in (("A", 1), ("B", 0)):
+            _, coeffs = agu.affine_coefficients(
+                by_name[name].stream.index_map, lowered.grid)
+            assert all(int(x) == 0 for x in coeffs[dead_axis]), name
+
+    def test_write_ref_storage_permutation(self):
+        # B is stored (k, n) — a permutation of the (m, n, k) loop order
+        lowered = lower_nest(ssrify(compiler.gemm_nest(8, 6, 4),
+                                    num_lanes=3, force=True))
+        by_name = {s.name: s for s in lowered.in_streams}
+        assert by_name["B"].levels == (2, 1)
+        assert by_name["B"].logical_shape == (4, 6)
+        assert lowered.out_stream.levels == (0, 1)
+
+    def test_non_trailing_contraction_rejected(self):
+        # output varies with the innermost level but is revisited across a
+        # *middle* level: the accumulator would drain mid-reduction
+        nest = LoopNest(
+            bounds=(4, 8, 16),
+            refs=(MemRef("a", Direction.READ, (8 * 16, 16, 1)),
+                  MemRef("o", Direction.WRITE, (16, 0, 1))),
+            compute_per_level=(0, 1, 1))
+        with pytest.raises(LoweringError, match="innermost"):
+            lower_nest(ssrify(nest, num_lanes=2, force=True))
+
+    def test_two_write_refs_rejected(self):
+        nest = LoopNest(
+            bounds=(64,),
+            refs=(MemRef("x", Direction.READ, (1,)),
+                  MemRef("u", Direction.WRITE, (1,)),
+                  MemRef("v", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        with pytest.raises(LoweringError, match="write refs"):
+            lower_nest(ssrify(nest, num_lanes=3, force=True))
+
+    def test_unallocated_write_ref_rejected(self):
+        # two lanes: deepest-first allocation spends both on A/B, the
+        # output write gets no data mover
+        plan = ssrify(compiler.gemm_nest(32, 32, 32), num_lanes=2,
+                      force=True)
+        with pytest.raises(LoweringError, match="not allocated a lane"):
+            lower_nest(plan)
+
+    def test_overlapping_walk_rejected(self):
+        # stencil window x[i+j]: no dense storage order exists
+        nest = LoopNest(
+            bounds=(128, 11),
+            refs=(MemRef("x", Direction.READ, (1, 1)),
+                  MemRef("y", Direction.WRITE, (1, 0)),),
+            compute_per_level=(0, 1))
+        with pytest.raises(LoweringError, match="no dense"):
+            lower_nest(ssrify(nest, num_lanes=2, force=True))
+
+    def test_explicit_write_map_nest(self):
+        # a write ref with no contraction axes: every step owns its block
+        n = 3000
+        nest = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("X", Direction.READ, (1,)),
+                  MemRef("Y", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        x = arr(n)
+        got = ssr_call(nest, lambda b: jnp.maximum(b, 0), {"X": x})
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.relu_ref(x)))
+
+    def test_scalar_write_ref_is_full_contraction(self):
+        # all-zero write coefficients: the dot product, write side included
+        n = 4096
+        nest = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("A", Direction.READ, (1,)),
+                  MemRef("B", Direction.READ, (1,)),
+                  MemRef("acc", Direction.WRITE, (0,))),
+            compute_per_level=(1,))
+        x, y = arr(n), arr(n)
+        got = ssr_call(nest, lambda a, b: jnp.sum(a * b), {"A": x, "B": y})
+        assert np.ndim(np.asarray(got)) == 0
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.dot_ref(x, y)),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_invariant_operand_must_fit_one_block(self):
+        # a loop-invariant read serves exactly one (1, lanes) block; a
+        # larger constant must error loudly, never silently truncate
+        n = 2048
+        nest = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("X", Direction.READ, (1,)),
+                  MemRef("w", Direction.READ, (0,)),
+                  MemRef("Y", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        with pytest.raises(ValueError, match="one .1, 128. block"):
+            ssr_call(nest, lambda xb, wb: xb * wb[0, 0],
+                     {"X": arr(n), "w": arr(300)})
+        # a fitting constant works and honours its value
+        got = ssr_call(nest, lambda xb, wb: xb * wb[0, 0],
+                       {"X": arr(n), "w": jnp.full((1,), 3.0, jnp.float32)})
+        assert got.shape == (n,)
+
+    def test_invariant_operand_consumed_by_offset_rejected(self):
+        # an offset past the end of the constant would serve pure padding
+        n = 2048
+        nest = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("X", Direction.READ, (1,)),
+                  MemRef("w", Direction.READ, (0,), offset=64),
+                  MemRef("Y", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        with pytest.raises(ValueError, match="no elements past offset"):
+            ssr_call(nest, lambda xb, wb: xb * wb[0, 0],
+                     {"X": arr(n), "w": arr(64)})
+
+    def test_gemm_registry_kernel_rides_the_compiler(self):
+        # the flagship: kernels/gemm.py ssr variant is a NestKernel —
+        # cost model coverage comes with it
+        stats = plan_stats(compiler.gemm_nest(32, 32, 32))
+        assert stats.ssrified and stats.n_base > stats.n_ssr
+
+
+class TestCacheUnification:
+    """One CACHE_MAX across plan/chain/kernel caches; clear empties all."""
+
+    def test_shared_sizing(self):
+        assert L._KERNEL_CACHE_MAX == L.CACHE_MAX
+        for c in L._PLAN_CACHES:
+            # lru_cache exposes maxsize via cache_info
+            assert c.cache_info().maxsize == L.CACHE_MAX
+
+    def test_plan_cache_evicts_at_cache_max(self):
+        L._plan_for.cache_clear()
+        for n in range(L.CACHE_MAX + 32):
+            L._plan_for(compiler.dot_product_nest(1024 + n), 2)
+        info = L._plan_for.cache_info()
+        assert info.currsize == L.CACHE_MAX  # eviction happened
+        L._plan_for.cache_clear()
+
+    def test_clear_caches_empties_every_cache(self):
+        n = 2048
+        nest = compiler.dot_product_nest(n)
+        x, y = arr(n), arr(n)
+        ssr_call(nest, lambda a, b: jnp.sum(a * b), {"A": x, "B": y})
+        plan_stats(nest)
+        from repro.kernels.chained import _chain_nests
+        L._chain_for(_chain_nests(n, consumer_reads_w=False), None)
+        assert L._plan_for.cache_info().currsize > 0
+        assert plan_stats.cache_info().currsize > 0
+        assert L._chain_for.cache_info().currsize > 0
+        assert len(L._kernel_cache) > 0
+        L.clear_caches()
+        for c in L._PLAN_CACHES:
+            assert c.cache_info().currsize == 0
+        assert len(L._kernel_cache) == 0
 
 
 class TestKernelCache:

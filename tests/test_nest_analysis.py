@@ -1,0 +1,135 @@
+"""Tests for the shared nest-analysis module (core/nest_analysis.py).
+
+One derivation per question: depth, classification, contraction detection,
+lane inference, dense storage orders — the facts ``ssrify``, ``chain``,
+``cluster_cost`` and the lowering all consume.
+"""
+
+import pytest
+
+from repro.core import Direction, LoopNest, MemRef, compiler
+from repro.core import nest_analysis as na
+
+
+def _gemm():
+    return compiler.gemm_nest(8, 6, 4)
+
+
+class TestClassification:
+    def test_reads_writes_split(self):
+        nest = _gemm()
+        assert [r.name for r in na.reads(nest)] == ["A", "B"]
+        assert [w.name for w in na.writes(nest)] == ["C"]
+
+    def test_output_ref_single(self):
+        assert na.output_ref(_gemm()).name == "C"
+        assert na.output_ref(compiler.dot_product_nest(16)) is None
+
+    def test_output_ref_rejects_multiple_writes(self):
+        nest = LoopNest(
+            bounds=(8,),
+            refs=(MemRef("u", Direction.WRITE, (1,)),
+                  MemRef("v", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        with pytest.raises(ValueError, match="2 write refs"):
+            na.output_ref(nest)
+
+    def test_ref_depth_and_varying_levels(self):
+        nest = _gemm()
+        a, b, c = nest.refs
+        assert na.ref_depth(a, nest) == 2 and na.varying_levels(a) == (0, 2)
+        assert na.ref_depth(b, nest) == 2 and na.varying_levels(b) == (1, 2)
+        assert na.ref_depth(c, nest) == 1 and na.varying_levels(c) == (0, 1)
+
+
+class TestContraction:
+    def test_gemm_write_contracts_over_k(self):
+        nest = _gemm()
+        assert na.contraction_axes(na.output_ref(nest), nest) == (2,)
+
+    def test_read_repeat_levels(self):
+        # A is invariant over n (level 1) — the repeat register level
+        nest = _gemm()
+        assert na.contraction_axes(nest.refs[0], nest) == (1,)
+
+    def test_bound_one_levels_are_not_contractions(self):
+        nest = compiler.gemm_nest(4, 3, 1)
+        assert na.contraction_axes(na.output_ref(nest), nest) == ()
+
+
+class TestLanes:
+    def test_auto_lanes_counts_affine_refs(self):
+        assert na.auto_lanes(_gemm()) == 3
+        assert na.auto_lanes(compiler.dot_product_nest(64)) == 2
+        assert na.auto_lanes(_gemm(), num_lanes=2) == 2
+
+    def test_auto_lanes_floor_is_one(self):
+        nest = LoopNest(bounds=(8,),
+                        refs=(MemRef("idx", Direction.READ, None),),
+                        compute_per_level=(1,))
+        assert na.auto_lanes(nest) == 1
+
+
+class TestInstrCounts:
+    def test_residuals_fold_at_their_depth(self):
+        nest = _gemm()
+        counts = na.instr_counts(nest, residual=[nest.refs[2]])  # C, depth 1
+        # C's store is NOT in compute_per_level (it is the WRITE ref), so
+        # folding it as a residual restores the explicit-store accounting
+        assert counts == [0, 1, 1]
+
+    def test_matches_ssrify_accounting(self):
+        # ssrify's Eq. (1)/(2) folding is this function — Fig. 4 exact
+        plan = compiler.ssrify(compiler.dot_product_nest(1000))
+        assert plan.n_ssr == 1012 and plan.n_base == 3001
+
+    def test_nest_compute(self):
+        assert na.nest_compute(compiler.dot_product_nest(100)) == 100
+        assert na.nest_compute(_gemm()) == 8 * 6 * 4  # fmadds only
+
+
+class TestStorageOrder:
+    def test_gemm_orders_permute_loop_order(self):
+        nest = _gemm()
+        a, b, c = nest.refs
+        assert na.storage_order(a, nest) == (0, 2)   # A stored (m, k)
+        assert na.storage_order(b, nest) == (2, 1)   # B stored (k, n)!
+        assert na.storage_order(c, nest) == (0, 1)   # C stored (m, n)
+        assert na.logical_shape(b, nest) == (4, 6)
+
+    def test_invariant_ref_has_empty_order(self):
+        nest = LoopNest(bounds=(8,),
+                        refs=(MemRef("c", Direction.READ, (0,)),),
+                        compute_per_level=(1,))
+        assert na.storage_order(nest.refs[0], nest) == ()
+
+    def test_overlapping_walk_has_no_dense_order(self):
+        # stencil window: x[i + j] — coeffs (1, 1) admit no dense layout
+        nest = LoopNest(bounds=(16, 11),
+                        refs=(MemRef("x", Direction.READ, (1, 1)),),
+                        compute_per_level=(0, 1))
+        assert na.storage_order(nest.refs[0], nest) is None
+
+    def test_bound_one_tie_breaks_to_fast_side(self):
+        # GEMM with n == 1: B's coefficients (0, 1, 1) tie — the dense
+        # order is (k, n), and a naive coefficient sort would pick (n, k)
+        # and wrongly reject the layout
+        nest = compiler.gemm_nest(8, 1, 4)
+        b = nest.refs[1]
+        assert na.storage_order(b, nest) == (2, 1)
+        assert na.logical_shape(b, nest) == (4, 1)
+
+    def test_strided_non_dense_rejected(self):
+        nest = LoopNest(bounds=(4, 8),
+                        refs=(MemRef("a", Direction.READ, (16, 1)),),
+                        compute_per_level=(0, 1))
+        assert na.storage_order(nest.refs[0], nest) is None
+
+
+class TestCompilerSharesAnalysis:
+    """The three former private re-derivations now alias this module."""
+
+    def test_aliases(self):
+        assert compiler._ref_depth is na.ref_depth
+        assert compiler._auto_lanes is na.auto_lanes
+        assert compiler._nest_compute is na.nest_compute

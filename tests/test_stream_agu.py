@@ -67,6 +67,65 @@ class TestAddressModel:
         np.testing.assert_array_equal(out, [0, 0, 0, 1, 2, 3, 0, 0])
 
 
+class TestDeepNests:
+    """Explicit 3-/4-deep iteration order and repeat semantics (§3.1).
+
+    The hypothesis sweep above covers these shapes statistically; the
+    multi-level lowering leans on the exact order, so it is pinned here
+    against hand-unrolled loop nests.
+    """
+
+    def test_3deep_iteration_order(self):
+        spec = StreamSpec(bounds=(2, 3, 4), strides=(100, 10, 1), base=7)
+        want = [7 + 100 * i + 10 * j + k
+                for i in range(2) for j in range(3) for k in range(4)]
+        assert list(spec.addresses()) == want
+        np.testing.assert_array_equal(np.asarray(address_sequence(spec)),
+                                      want)
+
+    def test_4deep_iteration_order(self):
+        spec = StreamSpec(bounds=(2, 2, 3, 4), strides=(1000, 100, 10, 1))
+        want = [1000 * h + 100 * i + 10 * j + k
+                for h in range(2) for i in range(2)
+                for j in range(3) for k in range(4)]
+        assert list(spec.addresses()) == want
+        np.testing.assert_array_equal(np.asarray(address_sequence(spec)),
+                                      want)
+
+    def test_3deep_zero_stride_revisits(self):
+        # a GEMM-A-like walk: invariant over the middle loop — the same
+        # address block re-emitted per middle iteration (repeat register
+        # generalised to a loop level)
+        spec = StreamSpec(bounds=(2, 3, 4), strides=(4, 0, 1))
+        want = [4 * i + k for i in range(2) for _j in range(3)
+                for k in range(4)]
+        assert list(spec.addresses()) == want
+        assert spec.num_memory_accesses == 24  # FIFO reuse is per-repeat
+
+    def test_repeat_reemits_each_datum(self):
+        spec = StreamSpec(bounds=(2, 3), strides=(3, 1), repeat=2)
+        base = [3 * i + j for i in range(2) for j in range(3)]
+        want = [a for a in base for _ in range(2)]
+        assert list(spec.addresses()) == want
+        assert spec.num_transactions == 12   # what the core sees
+        assert spec.num_memory_accesses == 6  # what memory serves
+
+    def test_five_deep_spec_rejected_matching_max_dims(self):
+        from repro.core import MAX_DIMS
+
+        assert MAX_DIMS == 4
+        with pytest.raises(ValueError, match="1..4 loop dims"):
+            StreamSpec(bounds=(2,) * 5, strides=(1,) * 5)
+
+    def test_five_deep_nest_rejected_matching_max_dims(self):
+        from repro.core import Direction, LoopNest, MemRef
+
+        with pytest.raises(ValueError, match="AGU dims"):
+            LoopNest(bounds=(2,) * 5,
+                     refs=(MemRef("x", Direction.READ, (1,) * 5),),
+                     compute_per_level=(1,) * 5)
+
+
 class TestValidation:
     def test_max_dims(self):
         with pytest.raises(ValueError):

@@ -1,16 +1,21 @@
-"""Docs gate for CI: markdown link integrity + generated-docs staleness.
+"""Docs gate for CI: link integrity, generated-docs staleness, coverage.
 
-Two checks, both hard failures:
+Three checks, all hard failures:
 
 1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
    files resolves to an existing file (http/mailto/anchor links skipped);
 2. the committed ``EXPERIMENTS.md`` matches a fresh render from
    ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
-   models without regenerating it, fails the build.
+   models without regenerating it, fails the build;
+3. every kernel in ``repro.kernels.registry`` appears (as `` `name` ``) in
+   the README kernel table — registering a kernel without documenting it
+   fails the build.
 
 Run from anywhere::
 
     python tools/check_docs.py [--skip-experiments]
+
+``--skip-experiments`` skips checks 2 and 3 (both import jax).
 """
 
 from __future__ import annotations
@@ -78,6 +83,16 @@ def check_experiments() -> List[str]:
         tofile="EXPERIMENTS.md (regenerated)", lineterm=""))
 
 
+def check_readme_kernels() -> List[str]:
+    """Registry kernels missing from the README kernel table."""
+    sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
+    from repro.kernels import registry
+
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    return [name for name in registry.names() if f"`{name}`" not in readme]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--skip-experiments", action="store_true",
@@ -104,6 +119,14 @@ def main(argv=None) -> int:
             print("\n".join(diff[:80]))
         else:
             print("EXPERIMENTS.md is fresh")
+
+        missing = check_readme_kernels()
+        if missing:
+            ok = False
+            print("\nregistry kernels missing from the README kernel "
+                  f"table: {missing}\n  add a `name` row per kernel")
+        else:
+            print("README kernel table covers the registry")
 
     return 0 if ok else 1
 
