@@ -25,9 +25,11 @@ Run from the repo root (forces 8 host devices before importing jax)::
 
     python benchmarks/cluster_bench.py [--quick] [--out BENCH_cluster.json]
 
-Schema (version 1): ``{"schema": 1, "generated_unix": float, "quick":
-bool, "cores": [...], "results": [{"name", "group", "variant", "value",
-"units", ...}, ...]}``.
+Schema (version 2, shared with ``kernel_bench``): ``{"schema": 2,
+"generated_unix": float, "quick": bool, "cores": [...], "results":
+[{"name", "group", "variant", "value", "units", "rows", "lanes", "grid",
+"tuned", ...}, ...]}`` — executed rows carry the per-core schedule the
+cluster layer actually dispatched (autotuned or default).
 """
 
 from __future__ import annotations
@@ -56,6 +58,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from benchmarks.kernel_bench import (BENCH_SCHEMA, _row, _time,
+                                     isolate_schedule_cache,
                                      write_bench_json)  # noqa: E402
 from repro.core import compiler  # noqa: E402
 from repro.core.compiler import (Direction, LoopNest, MemRef, cluster_cost,
@@ -132,6 +135,30 @@ def _max_abs_diff(a, b) -> float:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
+def _dispatch_provenance() -> Dict:
+    """Schedule provenance of the last executed cluster call (schema 2).
+
+    ``cluster_call``/``cluster_chain_call`` record the per-core schedule
+    they actually dispatched (tuned from the autotuner cache, or default)
+    in ``parallel.cluster.LAST_DISPATCH``; kernels routed through other
+    shims (``cluster_kernel``/``cluster_kernel2d``) leave it empty and
+    keep the default-provenance row fields.
+    """
+    from repro.parallel.cluster import LAST_DISPATCH
+
+    if not LAST_DISPATCH:
+        return {}
+    sched = LAST_DISPATCH["schedule"]
+    # "grid" in schema 2 means the launched Pallas grid; the cluster layer
+    # records the per-core *iteration-space* tile, which is a different
+    # quantity — keep the shared field None and expose the tile separately
+    # so cross-file consumers never read bounds as grid dimensions.
+    return {"rows": sched.rows, "lanes": sched.lanes,
+            "grid": None,
+            "tile_bounds": list(LAST_DISPATCH["tile_bounds"]),
+            "tuned": bool(LAST_DISPATCH["tuned"])}
+
+
 def sweep(quick: bool = False) -> List[Dict]:
     """Agreement + wall clock + cost model across the core sweep.
 
@@ -161,7 +188,11 @@ def sweep(quick: bool = False) -> List[Dict]:
             line += f"  C{c}: S={rep.speedup:4.2f} η={rep.eta_cluster:.2f}"
             if c not in runnable:
                 continue
+            from repro.parallel.cluster import LAST_DISPATCH
+
+            LAST_DISPATCH.clear()
             out = entry.cluster(*args, cores=c, **kwargs)
+            prov = _dispatch_provenance()
             diff = _max_abs_diff(out, single)
             if diff > AGREEMENT_TOL:
                 print(f"\nFAIL {name} C={c}: sharded output differs from "
@@ -171,9 +202,10 @@ def sweep(quick: bool = False) -> List[Dict]:
             us = _time(lambda *a, _c=c: entry.cluster(*a, cores=_c, **kwargs),
                        *args, iters=2 if quick else 5)
             rows.append(_row(f"cluster/{name}/C{c}", "cluster_agreement",
-                             "cluster", diff, "max_abs_diff", cores=c))
+                             "cluster", diff, "max_abs_diff", cores=c,
+                             **prov))
             rows.append(_row(f"cluster/{name}/C{c}", "cluster_wall",
-                             "cluster", us, "us/call", cores=c))
+                             "cluster", us, "us/call", cores=c, **prov))
             line += f" Δ={diff:.0e}"
         print(line)
     return rows
@@ -249,7 +281,9 @@ def validate_cluster_json(path: str) -> None:
     if not isinstance(results, list) or not results:
         raise ValueError("results must be a non-empty list")
     for row in results:
-        for field in ("name", "group", "variant", "value", "units"):
+        # schema 2: every row carries schedule provenance
+        for field in ("name", "group", "variant", "value", "units",
+                      "rows", "lanes", "grid", "tuned"):
             if field not in row:
                 raise ValueError(f"row missing {field!r}: {row}")
     for row in results:
@@ -291,6 +325,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--out", default="BENCH_cluster.json",
                     help="output JSON path (default: %(default)s)")
     args = ap.parse_args(argv)
+    # deterministic provenance: executed rows resolve per-core schedules
+    # from the cache, so the sweep isolates it unless explicitly shared
+    isolate_schedule_cache()
 
     rows: List[Dict] = []
     rows += sweep(quick=args.quick)

@@ -21,15 +21,23 @@ machine-readable perf trajectory tracked across PRs::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
 
-Schema (version 1): ``{"schema": 1, "generated_unix": float, "quick": bool,
-"results": [{"name", "group", "variant", "value", "units", ...}, ...]}``.
+Schema (version 2): ``{"schema": 2, "generated_unix": float, "quick": bool,
+"results": [{"name", "group", "variant", "value", "units", "rows",
+"lanes", "grid", "tuned", ...}, ...]}`` — every row carries schedule
+provenance (the block geometry that produced it and whether it came from
+the autotuner).  The ``autotune`` group races tuned-vs-default schedules
+and is gated: tuned may never be slower than default beyond noise, and —
+in full (non ``--quick``) runs, where iteration counts rise above CI-box
+noise — at least one kernel must win with a non-default schedule.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -37,20 +45,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lowering import DEFAULT_SCHEDULE, Schedule
 from repro.kernels import registry
 from repro.kernels.chained import fused_cases
 
 RNG = np.random.default_rng(0)
 
-BENCH_SCHEMA = 1
+#: v2: every row carries schedule provenance — the block geometry that
+#: produced it (``rows``/``lanes``), the grid it launched (``None`` where
+#: no Pallas grid is involved, e.g. pure-model rows) and a ``tuned`` flag
+#: (True when the schedule came from the autotuner, not the default).
+BENCH_SCHEMA = 2
 
 
 def _row(name: str, group: str, variant: str, value: float, units: str,
          **extras) -> Dict:
     row = {"name": name, "group": group, "variant": variant,
-           "value": float(value), "units": units}
+           "value": float(value), "units": units,
+           # schedule provenance defaults: the untuned default geometry
+           "rows": DEFAULT_SCHEDULE.rows, "lanes": DEFAULT_SCHEDULE.lanes,
+           "grid": None, "tuned": False}
     row.update(extras)
     return row
+
+
+def _sched_extras(sched: Schedule, grid=None, *, tuned: bool) -> Dict:
+    """Provenance fields for a row that ran under ``sched``."""
+    return {"rows": sched.rows, "lanes": sched.lanes,
+            "grid": list(grid) if grid is not None else None,
+            "tuned": bool(tuned)}
 
 
 def _time(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -205,6 +228,208 @@ def bench_nest_gate() -> List[Dict]:
 
 
 # --------------------------------------------------------------------------
+# Schedule autotuner sweep: tuned-vs-default gate + provenance rows
+# --------------------------------------------------------------------------
+
+#: The kernels the autotune gate covers (the CI ``autotune-smoke`` job):
+#: the ``ssr_call``-routed NestKernels plus the schedule-aware stencil.
+TUNE_GATED = ("reduction", "relu", "gemm", "stencil1d")
+
+#: Wall-clock tolerance of the tuned-never-slower gate: the tuner measures
+#: then the gate *re-races* winner vs default interleaved, so a winner that
+#: only won by scheduler noise may regress a little — but not this much.
+TUNE_GATE_TOL = 1.15
+
+
+def _autotune_cases(quick: bool):
+    """(name, nest, operands, mode, candidates, call, grid_of) per kernel.
+
+    ``operands``/``mode`` replicate exactly what ``NestKernel`` passes to
+    ``autotune.lookup``, so the committed winners are the ones transparent
+    dispatch later finds.  The stencil keeps its hand geometry (waivered):
+    its knob is the block width (``schedule.lanes``), so it brings its own
+    candidate list and grid formula.
+    """
+    from repro.core import autotune, compiler
+    from repro.kernels.stencil import TAPS
+
+    cases = []
+
+    def add(name, nest, operands, mode, candidates=None, grid_of=None):
+        entry = registry.get(name)
+        args, kwargs = entry.example(RNG)
+
+        def call(sched, _e=entry, _a=args, _k=kwargs):
+            return _e.ssr(*_a, schedule=sched, **_k)
+
+        if grid_of is None:
+            def grid_of(sched, _nest=nest):
+                try:
+                    return autotune._lower_candidate(_nest, sched).grid
+                except Exception:
+                    return None
+        cases.append((name, nest, operands, mode, candidates, call, grid_of))
+
+    (x, y), _ = registry.get("reduction").example(RNG)
+    add("reduction", compiler.dot_product_nest(x.shape[0]),
+        {"A": x, "B": y}, "reduce")
+
+    (xr,), _ = registry.get("relu").example(RNG)
+    add("relu", compiler.elementwise_nest(xr.shape[0]), {"X": xr}, "map")
+
+    (a, b), _ = registry.get("gemm").example(RNG)
+    add("gemm", compiler.gemm_nest(a.shape[0], b.shape[1], a.shape[1]),
+        {"A": a, "B": b}, "reduce")
+
+    (xs, ws), _ = registry.get("stencil1d").example(RNG)
+    n_st = xs.shape[0] - (TAPS - 1)
+    widths = (128, 1024) if quick else (128, 256, 512, 1024)
+    st_cands = [Schedule(lanes=w) for w in widths]
+    add("stencil1d", compiler.stencil_nest(n_st, TAPS),
+        {"x": xs, "w": ws}, "map", candidates=st_cands,
+        grid_of=lambda s, _n=n_st: (-(-_n // s.lanes),))
+    return cases
+
+
+def bench_autotune(quick: bool = False) -> List[Dict]:
+    """Run the schedule search per gated kernel; gate tuned ≥ default.
+
+    Hard failures (exit 1), mirrored in ``validate_autotune_rows``:
+
+    * the tuned schedule's output disagrees with the default schedule's
+      beyond the entry tolerance (a fast wrong schedule is not a win);
+    * the tuned schedule re-races slower than ``TUNE_GATE_TOL`` × default
+      on any gated kernel;
+    * no kernel picked a measurably faster non-default schedule — the
+      whole point of the search.
+    """
+    from repro.core import autotune
+
+    rows: List[Dict] = []
+    iters = 3 if quick else 7
+    nondefault_wins = 0
+    print(f"\n== schedule autotune sweep (best-of-{iters} μs/call) ==")
+    for name, nest, operands, mode, cands, call, grid_of \
+            in _autotune_cases(quick):
+        entry = registry.get(name)
+        if cands is None:
+            cands = autotune.candidate_schedules(nest, quick=quick)
+        res = autotune.autotune(
+            nest, None, operands, mode=mode, out_dtype="float32",
+            call=call, candidates=cands, top_k=4 if quick else 8,
+            warmup=1, iters=iters, force=True)
+
+        tuned_out = call(res.schedule)
+        default_out = call(DEFAULT_SCHEDULE)
+        for g, w in zip(jax.tree.leaves(tuned_out),
+                        jax.tree.leaves(default_out)):
+            if not np.allclose(np.asarray(g), np.asarray(w), **entry.tol):
+                # drop the committed winner before failing: a schedule
+                # that changes the answer must never stay in the
+                # persistent cache for transparent dispatch to pick up
+                autotune.global_cache().invalidate(res.key)
+                print(f"FAIL {name}: tuned schedule disagrees with default "
+                      f"beyond tol {entry.tol} (cache entry invalidated)",
+                      file=sys.stderr)
+                raise SystemExit(1)
+
+        # Final interleaved race, winner vs default: the screening pass
+        # (round-robin best-of-N inside the tuner) picks a candidate, the
+        # race validates it — and its verdict is what gets committed.  A
+        # screening pick that loses the race is replaced by the default,
+        # so the persisted schedule is never slower than the default *as
+        # measured here*.  A default winner has nothing to race: both
+        # thunks would be the same cached pipeline, pure jitter.
+        import dataclasses as _dc
+
+        nondefault = not res.is_default
+        if nondefault:
+            tf, td = _interleaved_best(lambda: call(res.schedule),
+                                       lambda: call(DEFAULT_SCHEDULE),
+                                       (), {}, warmup=2, iters=max(7, iters))
+            if tf > td:
+                print(f"  {name}: screening winner lost the final race "
+                      f"({tf:.1f} vs {td:.1f} μs) — committing default")
+                autotune.global_cache().put(res.key, DEFAULT_SCHEDULE, meta={
+                    "tuned_us": td, "default_us": td,
+                    "candidates": res.candidates, "raced_back": True})
+                res = _dc.replace(res, schedule=DEFAULT_SCHEDULE,
+                                  tuned_us=td, default_us=td)
+                tf, nondefault = td, False
+        else:
+            tf = td = _time(lambda: call(res.schedule), iters=max(5, iters))
+        if tf > td * TUNE_GATE_TOL:   # tripwire: unreachable by design
+            print(f"FAIL {name}: tuned schedule {tf:.1f} μs is slower than "
+                  f"default {td:.1f} μs × {TUNE_GATE_TOL}", file=sys.stderr)
+            raise SystemExit(1)
+        if nondefault and tf < td:
+            nondefault_wins += 1
+        s = res.schedule
+        grid = grid_of(s)
+        print(f"{name:12s} tuned ({s.rows}x{s.lanes}"
+              + (f", order={s.axis_order}" if s.axis_order else "")
+              + f") {tf:10.1f} μs  default {td:10.1f} μs  "
+              f"speedup {td / tf:4.2f}x  candidates {res.candidates}")
+        rows.append(_row(f"autotune/{name}", "autotune", "tuned", tf,
+                         "us/call", speedup=td / tf,
+                         candidates=res.candidates,
+                         measured=res.measured, nondefault=nondefault,
+                         cache_key=res.key,
+                         # tuned = "came from the autotuner, not the
+                         # default" — a default winner is not tuned
+                         **_sched_extras(s, grid, tuned=nondefault)))
+        rows.append(_row(f"autotune/{name}", "autotune", "default", td,
+                         "us/call",
+                         **_sched_extras(DEFAULT_SCHEDULE,
+                                         grid_of(DEFAULT_SCHEDULE),
+                                         tuned=False)))
+    if nondefault_wins == 0:
+        # Whether a non-default geometry wins is a measurement, not an
+        # invariant: on a noisy box with --quick iteration counts every
+        # final race can (correctly) fall back to the default.  The full
+        # run gates it hard — that is the artifact committed per PR; the
+        # CI smoke gates only the robust half (tuned never slower,
+        # outputs agree).
+        if not quick:
+            print("FAIL autotune: no kernel picked a measurably faster "
+                  "non-default schedule", file=sys.stderr)
+            raise SystemExit(1)
+        print("WARN autotune: no non-default winner in this --quick run "
+              "(noise-dominated); the full run gates this hard")
+    print(f"non-default winners: {nondefault_wins}/{len(TUNE_GATED)}")
+    return rows
+
+
+def validate_autotune_rows(results: Sequence[Dict],
+                           require_nondefault: bool = True) -> None:
+    """The autotune acceptance gate, re-applied to persisted rows.
+
+    ``require_nondefault=False`` (quick/CI-smoke runs) keeps only the
+    robust half of the gate — tuned never slower than default — because a
+    non-default win is a measurement, not an invariant (see
+    :func:`bench_autotune`).
+    """
+    by_kernel: Dict[str, Dict[str, Dict]] = {}
+    for r in results:
+        if r.get("group") == "autotune":
+            by_kernel.setdefault(r["name"].split("/")[1], {})[r["variant"]] = r
+    for kern in TUNE_GATED:
+        pair = by_kernel.get(kern)
+        if not pair or "tuned" not in pair or "default" not in pair:
+            raise ValueError(f"no autotune rows for {kern!r}")
+        if pair["tuned"]["value"] > pair["default"]["value"] * TUNE_GATE_TOL:
+            raise ValueError(
+                f"{kern}: tuned {pair['tuned']['value']} slower than "
+                f"default {pair['default']['value']} x {TUNE_GATE_TOL}")
+    if require_nondefault and not any(
+            p["tuned"].get("nondefault") and
+            p["tuned"]["value"] < p["default"]["value"]
+            for p in by_kernel.values() if "tuned" in p
+            and "default" in p):
+        raise ValueError("no kernel won with a non-default schedule")
+
+
+# --------------------------------------------------------------------------
 # Fused (stream-chained) variants vs their unfused compositions
 # --------------------------------------------------------------------------
 
@@ -330,7 +555,9 @@ def validate_bench_json(path: str) -> None:
     if not isinstance(results, list) or not results:
         raise ValueError("results must be a non-empty list")
     for row in results:
-        for field in ("name", "group", "variant", "value", "units"):
+        # schema 2: every row carries schedule provenance
+        for field in ("name", "group", "variant", "value", "units",
+                      "rows", "lanes", "grid", "tuned"):
             if field not in row:
                 raise ValueError(f"row missing {field!r}: {row}")
         if not isinstance(row["value"], (int, float)):
@@ -338,6 +565,9 @@ def validate_bench_json(path: str) -> None:
     groups = {r["group"] for r in results}
     if "fused" not in groups:
         raise ValueError(f"no fused results recorded (groups: {groups})")
+    if "autotune" not in groups:
+        raise ValueError(f"no autotune results recorded (groups: {groups})")
+    validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
     # compiled-nest gate: gemm/stencil1d must be present, numerically in
     # agreement, and model-profitable
     nest_rows = {(r["name"].split("/")[1], r["variant"]): r
@@ -354,6 +584,36 @@ def validate_bench_json(path: str) -> None:
             raise ValueError(f"{kern}: model speedup {model['value']} <= 1")
 
 
+def validate_autotune_json(path: str) -> None:
+    """Schema + autotune gate for the standalone ``--autotune-only`` run."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"bad schema: {doc.get('schema')!r}")
+    results = doc.get("results") or []
+    validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
+
+
+def isolate_schedule_cache() -> None:
+    """Point the schedule cache at a fresh tempdir unless the operator
+    opted into a shared one.
+
+    Two reasons: (a) determinism — a warm user-global cache would make the
+    non-autotune rows (smoke, nest gate) silently run tuned geometry that
+    their schedule-provenance fields could not honestly describe, and make
+    results differ between the first and later runs on one machine;
+    (b) hygiene — a benchmark should not mutate user-global state as a
+    side effect.  Set ``REPRO_SCHEDULE_CACHE`` explicitly to tune into
+    (and read from) a persistent cache, e.g. the default
+    ``~/.cache/repro-ssr`` that registry dispatch consults.
+    """
+    if not os.environ.get("REPRO_SCHEDULE_CACHE"):
+        tmp = tempfile.mkdtemp(prefix="repro-sched-bench-")
+        os.environ["REPRO_SCHEDULE_CACHE"] = tmp
+        print(f"schedule cache isolated at {tmp} "
+              "(set REPRO_SCHEDULE_CACHE to persist winners)")
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
@@ -362,13 +622,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="output JSON path (default: %(default)s)")
     ap.add_argument("--no-hlo", action="store_true",
                     help="skip the compiled-HLO fusion audit")
+    ap.add_argument("--autotune-only", action="store_true",
+                    help="run only the schedule-autotune sweep + gate "
+                         "(the CI autotune-smoke job)")
     args = ap.parse_args(argv)
+    isolate_schedule_cache()
+
+    if args.autotune_only:
+        rows = bench_autotune(quick=args.quick)
+        write_bench_json(rows, args.out, args.quick, subset="autotune")
+        validate_autotune_json(args.out)
+        return 0
 
     rows: List[Dict] = []
     rows += bench_reference_paths(iters=2 if args.quick else 5)
     rows += smoke_ssr_paths()
     rows += bench_stream_reports()
     rows += bench_nest_gate()
+    rows += bench_autotune(quick=args.quick)
     rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)
     write_bench_json(rows, args.out, args.quick)
     validate_bench_json(args.out)

@@ -4,8 +4,9 @@ Paper-section map (details per module, full table in DESIGN.md §2):
 ``stream`` (§2/§3.1 AGU config registers), ``agu`` (§3.1 address
 generation), ``ssr`` (§2 stream-semantic operand delivery), ``compiler``
 (§3.2 SSR-ification pass + chaining), ``lowering`` (§3.2 step 4–5: config
-emission and region execution), ``isa`` (§4/§5 exact cost models),
-``region`` (§2.2.2 ``ssrcfg`` CSR).
+emission and region execution), ``autotune`` (schedule search: cost-model
+prune + measured winners in a persistent cache), ``isa`` (§4/§5 exact cost
+models), ``region`` (§2.2.2 ``ssrcfg`` CSR).
 """
 
 from .stream import (  # noqa: F401
@@ -74,17 +75,26 @@ from .compiler import (  # noqa: F401
 from .lowering import (  # noqa: F401
     BlockPolicy,
     DEFAULT_POLICY,
+    DEFAULT_SCHEDULE,
     LoweredChain,
     LoweredNest,
     LoweredPlan,
     LoweredStream,
     LoweringError,
     NestStream,
+    Schedule,
     lower_chain,
     lower_nest,
     lower_plan,
     plan_stats,
     ssr_call,
     ssr_chain_call,
+)
+from . import autotune  # noqa: F401
+from .autotune import (  # noqa: F401
+    ScheduleCache,
+    TuneResult,
+    candidate_schedules,
+    schedule_is_legal,
 )
 from .region import ssr_enabled, ssr_region, set_ssr  # noqa: F401

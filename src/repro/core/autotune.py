@@ -1,0 +1,670 @@
+"""Schedule autotuner: cost-model-guided block-policy search + dispatch cache.
+
+The paper's speedup comes from matching the loop schedule to the memory
+system (Snitch tunes the same ISA to 2× more on the right schedule —
+PAPERS.md); our lowering used to pin every kernel, shape and core count to
+the single hard-coded ``DEFAULT_POLICY``.  This module makes the schedule a
+**searched artifact**:
+
+1. **candidate generation** — :func:`candidate_schedules` enumerates legal
+   :class:`~repro.core.lowering.Schedule` variants for a nest: block
+   geometries (rows × lanes), per-level tile targets, and grid-axis orders.
+   Legality (:func:`schedule_is_legal`) is decided by the lowering itself
+   (a candidate the §3.2 pipeline rejects is discarded), plus the hardware
+   constraints the lowering does not own: lane divisibility (a TPU lane is
+   128 wide) and the VMEM working-set budget (double-buffered stream
+   blocks + kernel-resident scratch, the :class:`~repro.core.ssr.
+   StreamReport` ``scratch_bytes`` accounting);
+2. **model prune** — :func:`model_cost` ranks candidates with the
+   Eq. (1)–(3) instruction model (``ssrify`` on the *padded* iteration
+   space, so padding blowup is charged) plus a per-grid-step dispatch
+   charge, and :func:`rank_candidates` keeps a deterministic top-K;
+3. **measure** — :func:`autotune` wall-clocks the survivors (the default
+   schedule always races) and commits the winner;
+4. **persist** — a :class:`ScheduleCache`: JSON-per-key files under a
+   cache directory (``REPRO_SCHEDULE_CACHE`` env var, else
+   ``~/.cache/repro-ssr``), an in-memory LRU in front, explicit
+   invalidation, and a version stamp so stale formats never load.  Keys
+   are :func:`cache_key`: nest signature + operand shapes/dtypes + mode +
+   out dtype + backend + cores.
+
+Dispatch integration: ``kernels.frontend.NestKernel`` and
+``parallel.cluster.cluster_call`` consult :func:`lookup` when no explicit
+schedule is passed, so ``ops.py`` callers get tuned schedules transparently
+once a cache entry exists; :func:`epoch` lets their built-pipeline caches
+invalidate when the tuner commits a new winner.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import itertools
+import json
+import math
+import os
+import tempfile
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from . import nest_analysis
+from .compiler import LoopNest, ssrify
+from .lowering import (DEFAULT_SCHEDULE, LoweredNest, LoweredPlan,
+                       LoweringError, Schedule, _plan_for)
+from .nest_analysis import auto_lanes
+from .ssr import VMEM_BUDGET_BYTES
+from .stream import Direction
+
+#: Bump when the on-disk entry format (or the meaning of a schedule's
+#: fields) changes: old entries are ignored, never mis-parsed.
+SCHEDULE_CACHE_VERSION = 1
+
+_ENV_CACHE_DIR = "REPRO_SCHEDULE_CACHE"
+
+#: Eq. (1)-style charge per grid step: loop bookkeeping + DMA descriptor
+#: issue for the double-buffered block fetches.  This is what makes the
+#: model prefer fewer/bigger blocks until padding waste outweighs it.
+STEP_COST = 32
+
+#: Search space of the generic generator (kernels with bespoke geometry,
+#: e.g. the waivered stencil, pass their own ``candidates=``).
+_ROWS_CHOICES = (4, 8, 16, 32)
+_LANES_CHOICES = (128, 256, 512)
+_LANES_FACTORS = (1, 2, 4)
+_ROWS_FACTORS = (8, 32)
+_QUICK_ROWS = (8, 16)
+_QUICK_LANES = (128, 256)
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get(_ENV_CACHE_DIR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-ssr")
+
+
+# --------------------------------------------------------------------------
+# Cache keys: nest signature + shapes + backend + cores
+# --------------------------------------------------------------------------
+
+
+def nest_signature(nest: LoopNest) -> str:
+    """Canonical text form of a nest — the schedule cache's identity.
+
+    Any change to bounds, refs (name/kind/coeffs/offset) or per-level
+    compute yields a different signature, so editing a kernel's nest
+    invalidates its cached schedules by construction.
+    """
+    refs = ";".join(
+        f"{r.name}:{r.kind.name}:{r.coeffs}:{r.offset}" for r in nest.refs)
+    return f"b={nest.bounds}|refs={refs}|c={nest.compute_per_level}"
+
+
+def operand_signature(operands: Dict[str, Any]) -> Tuple[Tuple[str, str], ...]:
+    """Sorted (name, shape×dtype) pairs; accepts arrays or (shape, dtype)."""
+    sig = []
+    for name in sorted(operands):
+        v = operands[name]
+        if hasattr(v, "shape") and hasattr(v, "dtype"):
+            sig.append((name, f"{tuple(v.shape)}:{v.dtype}"))
+        else:
+            shape, dtype = v
+            sig.append((name, f"{tuple(shape)}:{dtype}"))
+    return tuple(sig)
+
+
+def _backend() -> str:
+    import jax
+
+    try:
+        return jax.default_backend()
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return "none"
+
+
+def cache_key(nest: LoopNest, operands: Dict[str, Any], *,
+              mode: str = "reduce", out_dtype: str = "float32",
+              backend: Optional[str] = None, cores: int = 1) -> str:
+    """Stable hex digest identifying one tuning problem."""
+    backend = backend or _backend()
+    blob = json.dumps({
+        "v": SCHEDULE_CACHE_VERSION,
+        "nest": nest_signature(nest),
+        "operands": operand_signature(operands),
+        "mode": mode,
+        "out_dtype": str(out_dtype),
+        "backend": backend,
+        "cores": int(cores),
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+# --------------------------------------------------------------------------
+# Persistent schedule cache: JSON-per-key + in-memory LRU + invalidation
+# --------------------------------------------------------------------------
+
+
+class ScheduleCache:
+    """On-disk schedule store with an in-memory LRU in front.
+
+    One JSON file per key under ``path`` (atomic tmp+rename writes), so
+    concurrent tuners never corrupt each other's entries and per-key
+    invalidation is an unlink.  Misses (including version-mismatched or
+    unreadable files) return ``None`` and are negative-cached **per
+    epoch**: the transparent-dispatch hot path (``ssr_call`` with
+    ``schedule=None``) probes on every call, and a filesystem miss per
+    kernel invocation would tax exactly the path this layer exists to
+    speed up.  Any commit/invalidate in this process bumps the epoch and
+    re-probes; a tuner committing from *another* process becomes visible
+    after the next local epoch bump (or restart).
+    """
+
+    def __init__(self, path: Optional[str] = None, max_entries: int = 256):
+        self.path = path or default_cache_dir()
+        self.max_entries = max_entries
+        self._mem: "collections.OrderedDict[str, Schedule]" = \
+            collections.OrderedDict()
+        self._miss: Dict[str, int] = {}   # key -> epoch of the probed miss
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.json")
+
+    def _note_miss(self, key: str) -> None:
+        if len(self._miss) >= 4096:
+            self._miss.clear()
+        self._miss[key] = _EPOCH
+
+    def get(self, key: str) -> Optional[Schedule]:
+        hit = self._mem.get(key)
+        if hit is not None:
+            self._mem.move_to_end(key)
+            return hit
+        if self._miss.get(key) == _EPOCH:
+            return None
+        try:
+            with open(self._file(key)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            self._note_miss(key)
+            return None
+        if doc.get("version") != SCHEDULE_CACHE_VERSION:
+            self._note_miss(key)
+            return None
+        try:
+            sched = Schedule.from_json(doc["schedule"])
+        except (KeyError, TypeError, ValueError):
+            self._note_miss(key)
+            return None
+        self._remember(key, sched)
+        return sched
+
+    def meta(self, key: str) -> Optional[Dict[str, Any]]:
+        """The full stored document (schedule + provenance), or ``None``."""
+        try:
+            with open(self._file(key)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            return None
+        return doc if doc.get("version") == SCHEDULE_CACHE_VERSION else None
+
+    def put(self, key: str, schedule: Schedule,
+            meta: Optional[Dict[str, Any]] = None) -> None:
+        doc = {"version": SCHEDULE_CACHE_VERSION,
+               "schedule": schedule.to_json(),
+               "committed_unix": time.time()}
+        if meta:
+            doc["meta"] = meta
+        os.makedirs(self.path, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, self._file(key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._remember(key, schedule)
+        self._miss.pop(key, None)
+        _bump_epoch()
+
+    def invalidate(self, key: str) -> bool:
+        """Drop one entry (memory + disk); True if anything was removed."""
+        self._miss.pop(key, None)
+        dropped = self._mem.pop(key, None) is not None
+        try:
+            os.unlink(self._file(key))
+            dropped = True
+        except OSError:
+            pass
+        if dropped:
+            _bump_epoch()
+        return dropped
+
+    def clear(self) -> int:
+        """Drop every entry; returns the number of disk entries removed."""
+        self._mem.clear()
+        self._miss.clear()
+        n = 0
+        try:
+            names = os.listdir(self.path)
+        except OSError:
+            names = []
+        for name in names:
+            if name.endswith(".json"):
+                try:
+                    os.unlink(os.path.join(self.path, name))
+                    n += 1
+                except OSError:
+                    pass
+        _bump_epoch()
+        return n
+
+    def keys(self) -> List[str]:
+        try:
+            return sorted(n[:-5] for n in os.listdir(self.path)
+                          if n.endswith(".json"))
+        except OSError:
+            return []
+
+    def _remember(self, key: str, sched: Schedule) -> None:
+        self._mem[key] = sched
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.max_entries:
+            self._mem.popitem(last=False)
+
+
+_GLOBAL_CACHE: Optional[ScheduleCache] = None
+_EPOCH = 0
+
+
+def global_cache() -> ScheduleCache:
+    """The process-wide cache (respects ``REPRO_SCHEDULE_CACHE``)."""
+    global _GLOBAL_CACHE
+    if _GLOBAL_CACHE is None or \
+            _GLOBAL_CACHE.path != default_cache_dir():
+        _GLOBAL_CACHE = ScheduleCache()
+    return _GLOBAL_CACHE
+
+
+def epoch() -> int:
+    """Monotonic commit counter — built-pipeline caches key on it so a
+    newly tuned schedule takes effect without restarting the process."""
+    return _EPOCH
+
+
+def _bump_epoch() -> None:
+    global _EPOCH
+    _EPOCH += 1
+
+
+def lookup(nest: LoopNest, operands: Dict[str, Any], *,
+           mode: str = "reduce", out_dtype: str = "float32",
+           cores: int = 1,
+           cache: Optional[ScheduleCache] = None) -> Schedule:
+    """Cache-only schedule resolution: tuned winner or the default.
+
+    This is the transparent-dispatch hook — it never measures, so calling
+    it on every kernel build costs one dict/file probe.
+    """
+    cache = cache or global_cache()
+    key = cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
+                    cores=cores)
+    return cache.get(key) or DEFAULT_SCHEDULE
+
+
+# --------------------------------------------------------------------------
+# Candidate generation + legality
+# --------------------------------------------------------------------------
+
+
+def _nest_has_output(nest: LoopNest) -> bool:
+    return any(r.kind == Direction.WRITE for r in nest.refs)
+
+
+def _lower_candidate(nest: LoopNest, sched: Schedule):
+    """The lowering's own verdict on a candidate (raises LoweringError).
+
+    Routed through the lowering layer's ``_lowered_for`` LRU: legality,
+    cost-model and fingerprint checks all ask for the same (plan, sched)
+    lowering, and a later ``ssr_call`` under the winner hits it warm.
+    """
+    from .lowering import _lowered_for
+
+    plan = _plan_for(nest, auto_lanes(nest))
+    return _lowered_for(plan, sched, _nest_has_output(nest))
+
+
+def _stream_block_bytes(lowered, itemsize: int = 4) -> int:
+    """Double-buffered stream blocks + kernel-resident scratch, in bytes.
+
+    Mirrors :meth:`repro.core.ssr.StreamReport` accounting: every stream
+    block is double-buffered (FIFO depth 2); the contraction accumulator /
+    reduce accumulator is single-buffered scratch (``scratch_bytes``).
+    """
+    total = 0
+    if isinstance(lowered, LoweredNest):
+        for s in lowered.in_streams:
+            total += 2 * math.prod(s.stream.block_shape) * itemsize
+        out_block = math.prod(lowered.out_stream.stream.block_shape)
+        total += 2 * out_block * itemsize
+        if lowered.contraction_axes:     # the VMEM accumulator scratch
+            total += out_block * itemsize
+        return total
+    assert isinstance(lowered, LoweredPlan)
+    for s in lowered.in_streams:
+        total += 2 * math.prod(s.stream.block_shape) * itemsize
+    block = lowered.policy.rows * lowered.policy.lanes
+    total += 2 * block * itemsize        # synthesised output stream
+    total += block * itemsize            # reduce accumulator scratch
+    return total
+
+
+def schedule_is_legal(nest: LoopNest, sched: Schedule, *,
+                      itemsize: int = 4) -> Tuple[bool, str]:
+    """(legal, reason).  Lowering + lane divisibility + VMEM budget."""
+    if sched.lanes % 128 != 0 or sched.lanes < 128:
+        return False, f"lanes {sched.lanes} not a multiple of the 128-wide " \
+                      "hardware lane"
+    if sched.rows < 1:
+        return False, f"rows {sched.rows} < 1"
+    if sched.lanes_tile_factor < 1 or sched.rows_tile_factor < 1:
+        return False, "tile factors must be >= 1"
+    try:
+        lowered = _lower_candidate(nest, sched)
+    except LoweringError as e:
+        return False, f"lowering rejected: {e}"
+    except ValueError as e:              # MAX_DIMS / malformed nest
+        return False, f"nest rejected: {e}"
+    vmem = _stream_block_bytes(lowered, itemsize)
+    if vmem > VMEM_BUDGET_BYTES:
+        return False, (f"VMEM working set {vmem / 2**20:.1f} MiB exceeds "
+                       f"budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB")
+    return True, "ok"
+
+
+def _axis_orders(nest: LoopNest) -> List[Tuple[int, ...]]:
+    """Legal grid-axis permutations: parallel axes shuffle, contractions
+    stay trailing.  Bounded to 3-deep nests (≤ 2 extra orders)."""
+    if not _nest_has_output(nest):
+        return []
+    try:
+        out = nest_analysis.output_ref(nest)
+    except ValueError:
+        return []
+    if out is None or out.coeffs is None:
+        return []
+    zaxes = nest_analysis.contraction_axes(out, nest)
+    par = [l for l in range(len(nest.bounds)) if l not in zaxes]
+    if len(par) < 2:
+        return []
+    orders = []
+    for perm in itertools.permutations(par):
+        order = tuple(perm) + tuple(z for z in range(len(nest.bounds))
+                                    if z in zaxes)
+        if order != tuple(range(len(nest.bounds))):
+            orders.append(order)
+    return orders[:2]
+
+
+def candidate_schedules(nest: LoopNest, *, quick: bool = False,
+                        max_candidates: Optional[int] = None
+                        ) -> List[Schedule]:
+    """Legal candidates for a nest, default schedule always first.
+
+    Enumerates block geometries (rows × lanes) and — for level-mapped
+    nests — tile-factor and grid-axis-order variants, filtered through
+    :func:`schedule_is_legal`.  Deterministic order (the generator is pure
+    enumeration), so ranking + tie-breaks reproduce run to run.
+    """
+    rowses = _QUICK_ROWS if quick else _ROWS_CHOICES
+    laneses = _QUICK_LANES if quick else _LANES_CHOICES
+    raw: List[Schedule] = [DEFAULT_SCHEDULE]
+    for rows, lanes in itertools.product(rowses, laneses):
+        raw.append(Schedule(rows=rows, lanes=lanes))
+    if _nest_has_output(nest):
+        factors = _LANES_FACTORS if not quick else _LANES_FACTORS[:2]
+        for lf in factors:
+            for rf in _ROWS_FACTORS:
+                raw.append(Schedule(lanes_tile_factor=lf,
+                                    rows_tile_factor=rf))
+        for order in _axis_orders(nest):
+            raw.append(Schedule(axis_order=order))
+
+    seen, out = set(), []
+    for s in raw:
+        if s in seen:
+            continue
+        seen.add(s)
+        if schedule_is_legal(nest, s)[0]:
+            out.append(s)
+    if max_candidates is not None:
+        out = out[:max_candidates]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Model prune: Eq. (1)–(3) on the padded iteration space + step charge
+# --------------------------------------------------------------------------
+
+
+def _padded_bounds(nest: LoopNest, sched: Schedule) -> Tuple[Tuple[int, ...],
+                                                             int]:
+    """(padded bounds, grid steps) of the schedule — lowering-accurate
+    where the lowering accepts the nest, closed-form otherwise."""
+    try:
+        lowered = _lower_candidate(nest, sched)
+    except (LoweringError, ValueError):
+        E = sched.block_elems
+        inner = -(-nest.bounds[-1] // E) * E
+        padded = tuple(nest.bounds[:-1]) + (inner,)
+        return padded, math.prod(nest.bounds[:-1]) * (inner // E)
+    if isinstance(lowered, LoweredNest):
+        return lowered.padded_bounds, lowered.steps
+    padded = tuple(lowered.plan.nest.bounds[:-1]) + (
+        lowered.grid[-1] * sched.block_elems,)
+    return padded, lowered.steps
+
+
+def model_cost(nest: LoopNest, sched: Schedule, *,
+               step_cost: int = STEP_COST) -> float:
+    """Eq. (1) instruction count on the *padded* iteration space, plus a
+    per-grid-step dispatch charge.
+
+    The instruction model alone is block-geometry-blind (it counts loop
+    iterations, not tiles); padding the bounds to what the schedule
+    actually executes charges ragged-shape blowup, and the step charge
+    models the per-block loop/DMA overhead that makes tiny blocks slow.
+    Never raises for lane-legal candidates — geometry the lowering cannot
+    express falls back to the closed-form block count.
+    """
+    padded, steps = _padded_bounds(nest, sched)
+    padded_nest = dataclasses.replace(nest, bounds=padded)
+    plan = ssrify(padded_nest, num_lanes=auto_lanes(padded_nest), force=True)
+    return float(plan.n_ssr + step_cost * steps)
+
+
+def schedule_fingerprint(nest: LoopNest, sched: Schedule) -> Any:
+    """What the schedule *lowers to*: grid, tiles, block shapes.
+
+    Two schedules with the same fingerprint build byte-identical kernels
+    (e.g. every tile-factor variant of a problem whose tiles all clamp to
+    the padded dims), so measuring them separately would just race noise
+    against itself.  Falls back to the schedule's own identity where the
+    generic lowering cannot express the nest (hand-geometry kernels own
+    their knob semantics).
+    """
+    try:
+        lowered = _lower_candidate(nest, sched)
+    except (LoweringError, ValueError):
+        return ("sched", sched)
+    if isinstance(lowered, LoweredNest):
+        # Axis order only matters across axes that actually iterate:
+        # permuting unit grid axes yields a byte-identical kernel.
+        eff_order = tuple(l for k, l in enumerate(lowered.axis_order)
+                          if lowered.grid[k] > 1)
+        return ("nest", lowered.grid, lowered.tiles, eff_order,
+                tuple(s.stream.block_shape for s in lowered.in_streams),
+                lowered.out_stream.stream.block_shape, sched.acc_dtype)
+    return ("flat", lowered.grid,
+            tuple(s.stream.block_shape for s in lowered.in_streams),
+            sched.acc_dtype)
+
+
+def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
+                    top_k: int = 8,
+                    step_cost: int = STEP_COST) -> List[Schedule]:
+    """Deterministic model ranking; the default schedule always survives.
+
+    Sort key is (model cost, schedule identity) so equal-cost candidates
+    order reproducibly.  Candidates that lower to the same geometry
+    (:func:`schedule_fingerprint`) collapse to one survivor — the default
+    schedule claims its own fingerprint, so an equal-geometry variant can
+    never displace it — and the default is re-inserted if the prune would
+    drop it: the measurement phase must always race the baseline.
+    """
+    def ident(s: Schedule):
+        return (s.rows, s.lanes, s.lanes_tile_factor, s.rows_tile_factor,
+                s.axis_order or (), s.acc_dtype)
+
+    ranked = sorted(candidates,
+                    key=lambda s: (model_cost(nest, s,
+                                              step_cost=step_cost),
+                                   ident(s)))
+    default_fp = schedule_fingerprint(nest, DEFAULT_SCHEDULE) \
+        if DEFAULT_SCHEDULE in candidates else None
+    kept: List[Schedule] = []
+    seen = set()
+    for s in ranked:
+        fp = schedule_fingerprint(nest, s)
+        if fp in seen:
+            continue
+        seen.add(fp)
+        kept.append(DEFAULT_SCHEDULE if fp == default_fp else s)
+    kept = kept[:max(1, top_k)]
+    if DEFAULT_SCHEDULE in candidates and DEFAULT_SCHEDULE not in kept:
+        kept[-1] = DEFAULT_SCHEDULE
+    return kept
+
+
+# --------------------------------------------------------------------------
+# Measure + commit
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one autotune run (or cache hit)."""
+
+    key: str
+    schedule: Schedule
+    tuned_us: float
+    default_us: float
+    candidates: int
+    measured: int
+    from_cache: bool = False
+
+    @property
+    def speedup(self) -> float:
+        return self.default_us / self.tuned_us if self.tuned_us else 1.0
+
+    @property
+    def is_default(self) -> bool:
+        return self.schedule == DEFAULT_SCHEDULE
+
+
+def autotune(nest: LoopNest, body: Callable, operands: Dict[str, Any], *,
+             mode: str = "reduce", out_dtype="float32",
+             num_lanes: Optional[int] = None,
+             interpret: Optional[bool] = None,
+             call: Optional[Callable[[Schedule], Any]] = None,
+             candidates: Optional[Sequence[Schedule]] = None,
+             top_k: int = 8, warmup: int = 1, iters: int = 3,
+             cores: int = 1,
+             cache: Optional[ScheduleCache] = None,
+             use_cache: bool = True, force: bool = False) -> TuneResult:
+    """Search → prune → measure → commit the winning schedule.
+
+    ``call(schedule)`` executes the kernel under one candidate; the default
+    routes through :func:`~repro.core.lowering.ssr_call` with ``nest``/
+    ``body``/``operands``, but a whole-kernel callable (e.g. a registry
+    entry's ``ssr`` function taking ``schedule=``) slots in so hand-
+    scheduled kernels with their own geometry vocabulary tune through the
+    same machinery.  The default schedule is always among the measured
+    survivors, so the committed winner is never slower than the default
+    *as measured* — the gate ``benchmarks/kernel_bench.py`` re-checks.
+
+    A cache hit short-circuits everything unless ``force=True``.
+    """
+    from .lowering import ssr_call
+
+    cache = cache or (global_cache() if use_cache else None)
+    key = cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
+                    cores=cores)
+    if cache is not None and not force:
+        hit = cache.get(key)
+        if hit is not None:
+            meta = cache.meta(key) or {}
+            m = meta.get("meta", {})
+            return TuneResult(key=key, schedule=hit,
+                              tuned_us=float(m.get("tuned_us", 0.0)),
+                              default_us=float(m.get("default_us", 0.0)),
+                              candidates=int(m.get("candidates", 0)),
+                              measured=0, from_cache=True)
+
+    if call is None:
+        def call(sched: Schedule):
+            return ssr_call(nest, body, operands, mode=mode,
+                            out_dtype=out_dtype, schedule=sched,
+                            num_lanes=num_lanes, interpret=interpret)
+
+    cands = list(candidates) if candidates is not None \
+        else candidate_schedules(nest)
+    if DEFAULT_SCHEDULE not in cands:
+        cands.insert(0, DEFAULT_SCHEDULE)
+    survivors = rank_candidates(nest, cands, top_k=top_k)
+
+    # Round-robin measurement: one timed call per survivor per round, so
+    # machine drift (thermal, background load) hits every candidate
+    # equally instead of biasing whichever was measured last.
+    import jax
+
+    best = [float("inf")] * len(survivors)
+    for _ in range(max(0, warmup)):
+        for sched in survivors:
+            jax.block_until_ready(jax.tree.leaves(call(sched)))
+    for _ in range(max(1, iters)):
+        for i, sched in enumerate(survivors):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(call(sched)))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    timings = [(us * 1e6, i, sched)
+               for i, (us, sched) in enumerate(zip(best, survivors))]
+    default_us = next(us for us, _, s in timings if s == DEFAULT_SCHEDULE)
+    tuned_us, _, winner = min(timings)
+
+    if cache is not None:
+        cache.put(key, winner, meta={
+            "tuned_us": tuned_us, "default_us": default_us,
+            "candidates": len(cands), "measured": len(survivors),
+            "nest": nest_signature(nest), "mode": mode,
+            "out_dtype": str(out_dtype), "cores": cores,
+            "backend": _backend(),
+        })
+    return TuneResult(key=key, schedule=winner, tuned_us=tuned_us,
+                      default_us=default_us, candidates=len(cands),
+                      measured=len(survivors))
+
+
+def invalidate(nest: LoopNest, operands: Dict[str, Any], *,
+               mode: str = "reduce", out_dtype: str = "float32",
+               cores: int = 1,
+               cache: Optional[ScheduleCache] = None) -> bool:
+    """Explicitly drop the cached schedule for one tuning problem."""
+    cache = cache or global_cache()
+    return cache.invalidate(
+        cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
+                  cores=cores))

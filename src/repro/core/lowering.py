@@ -36,6 +36,14 @@ strides — expressible by the word-granular hardware AGU but not by
 whole-block DMA) raises :class:`LoweringError`; those kernels keep
 hand-scheduled layouts under ``repro.kernels``, each behind a declared
 ``lowering_waiver``.
+
+Every entry point is **schedule-parametric**: a :class:`Schedule` (block
+geometry, per-level tile targets, grid-axis order, accumulator dtype) can
+be passed explicitly, searched by ``core/autotune.py``, or left at the
+default.  Dispatch is **zero-overhead**: prepare (pad/reshape), the Pallas
+kernel and the result trim compose into one cached jitted callable per
+(nest, schedule, shapes, body), so repeated calls never re-dispatch the
+padding traffic eagerly (see ``DISPATCH_STATS``).
 """
 
 from __future__ import annotations
@@ -82,6 +90,87 @@ class BlockPolicy:
 
 
 DEFAULT_POLICY = BlockPolicy()
+
+
+#: Per-level tile targets, in units of the policy's lane/sublane widths.
+#: Lanes-role levels (the last storage dim of some stream) tile up to
+#: 4×128 = 512 elements; sublane-role levels up to 32×8 = 256 rows.
+#: These are the *defaults* — a :class:`Schedule` overrides both.
+_LANES_TILE_FACTOR = 4
+_ROWS_TILE_FACTOR = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One complete block-scheduling decision for a lowered kernel.
+
+    :class:`BlockPolicy` says how element streams become VMEM tiles;
+    ``Schedule`` is the full searched artifact on top of it — the knobs the
+    autotuner (``core/autotune.py``) varies per (nest, shapes, backend):
+
+    * ``rows``/``lanes`` — the block geometry (the policy);
+    * ``lanes_tile_factor``/``rows_tile_factor`` — per-level tile targets
+      of the level-mapped path, in units of ``lanes``/``rows``
+      (:func:`lower_nest`'s ``_nest_tiles``);
+    * ``axis_order`` — a permutation of the loop levels giving the grid
+      iteration order (outermost first).  Only the level-mapped path honours
+      it; contraction axes must stay trailing so the accumulator's revisits
+      remain consecutive grid steps.  ``None`` keeps loop order;
+    * ``acc_dtype`` — the contraction accumulator dtype (dtype *name*, so
+      the dataclass stays hashable/JSON-serialisable).  f32 is the MXU/VPU
+      accumulation width and the repo-wide default.
+
+    Frozen + hashable: a ``Schedule`` is a cache key component everywhere
+    (kernel cache, schedule cache, benchmark provenance).
+    """
+
+    rows: int = 8
+    lanes: int = 128
+    lanes_tile_factor: int = _LANES_TILE_FACTOR
+    rows_tile_factor: int = _ROWS_TILE_FACTOR
+    axis_order: Optional[Tuple[int, ...]] = None
+    acc_dtype: str = "float32"
+
+    @property
+    def policy(self) -> BlockPolicy:
+        return BlockPolicy(rows=self.rows, lanes=self.lanes)
+
+    @property
+    def block_elems(self) -> int:
+        return self.rows * self.lanes
+
+    @classmethod
+    def from_policy(cls, policy: BlockPolicy, **kw) -> "Schedule":
+        return cls(rows=policy.rows, lanes=policy.lanes, **kw)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["axis_order"] = list(self.axis_order) if self.axis_order else None
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "Schedule":
+        ao = d.get("axis_order")
+        return cls(rows=int(d["rows"]), lanes=int(d["lanes"]),
+                   lanes_tile_factor=int(d.get("lanes_tile_factor",
+                                               _LANES_TILE_FACTOR)),
+                   rows_tile_factor=int(d.get("rows_tile_factor",
+                                              _ROWS_TILE_FACTOR)),
+                   axis_order=tuple(int(a) for a in ao) if ao else None,
+                   acc_dtype=str(d.get("acc_dtype", "float32")))
+
+
+DEFAULT_SCHEDULE = Schedule()
+
+
+def _resolve_schedule(policy: BlockPolicy,
+                      schedule: Optional[Schedule]) -> Schedule:
+    """``schedule`` wins; a bare policy is promoted to a default Schedule."""
+    if schedule is not None:
+        return schedule
+    if policy is DEFAULT_POLICY:
+        return DEFAULT_SCHEDULE
+    return Schedule.from_policy(policy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +224,7 @@ class LoweredPlan:
     grid: Tuple[int, ...]
     in_streams: Tuple[LoweredStream, ...]
     out_streams: Tuple[LoweredStream, ...]
+    schedule: Schedule = DEFAULT_SCHEDULE
 
     @property
     def steps(self) -> int:
@@ -248,14 +338,25 @@ def _canonical_grid(bounds: Tuple[int, ...],
 
 
 def lower_plan(plan: StreamPlan,
-               policy: BlockPolicy = DEFAULT_POLICY) -> LoweredPlan:
+               policy: BlockPolicy = DEFAULT_POLICY, *,
+               schedule: Optional[Schedule] = None) -> LoweredPlan:
     """Lower every allocated lane of ``plan`` to Pallas block schedules.
 
     The grid is the nest's loop structure with the innermost level tiled by
     the policy block — computed through :func:`agu.block_grid` on the nest's
     canonical (dense row-major) iteration-space spec, so the kernel's block
     schedule provably *is* the AGU pattern at block granularity.
+
+    ``schedule`` (when given) wins over ``policy``; the flat path honours
+    only its block geometry — ``axis_order`` permutes *loop levels*, which
+    this path has already flattened, so a non-``None`` order is rejected.
     """
+    sched = _resolve_schedule(policy, schedule)
+    if sched.axis_order is not None:
+        raise LoweringError(
+            "schedule.axis_order applies to the level-mapped path "
+            "(lower_nest) only; the flat schedule's grid IS the AGU walk")
+    policy = sched.policy
     if not plan.allocations:
         raise LoweringError(
             "plan has no stream allocations (Eq. (3) verdict was 'keep "
@@ -268,7 +369,7 @@ def lower_plan(plan: StreamPlan,
     ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
     outs = tuple(s for s in lowered if s.stream.direction == Direction.WRITE)
     return LoweredPlan(plan=plan, policy=policy, grid=grid,
-                       in_streams=ins, out_streams=outs)
+                       in_streams=ins, out_streams=outs, schedule=sched)
 
 
 # --------------------------------------------------------------------------
@@ -291,13 +392,6 @@ def lower_plan(plan: StreamPlan,
 # axis from its index_map: Pallas sees an unchanged block index and skips
 # the re-fetch, exactly as the FIFO re-emits a repeated datum.
 # --------------------------------------------------------------------------
-
-
-#: Per-level tile targets, in units of the policy's lane/sublane widths.
-#: Lanes-role levels (the last storage dim of some stream) tile up to
-#: 4×128 = 512 elements; sublane-role levels up to 32×8 = 256 rows.
-_LANES_TILE_FACTOR = 4
-_ROWS_TILE_FACTOR = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -363,10 +457,12 @@ class NestStream:
 class LoweredNest:
     """A StreamPlan with an output ref, lowered level-by-level.
 
-    ``grid[l]`` covers loop level ``l`` (padded bound / tile);
-    ``contraction_axes`` are the output's revisited levels — declared
-    ``arbitrary`` (sequential) so the accumulator carries, every other
-    axis ``parallel``.
+    ``grid[k]`` covers loop level ``axis_order[k]`` (padded bound / tile;
+    ``axis_order`` is the identity unless the schedule permutes it);
+    ``tiles``/``padded_bounds`` stay in *loop-level* order.
+    ``contraction_axes`` are the output's revisited levels as **grid-axis
+    positions** — declared ``arbitrary`` (sequential) so the accumulator
+    carries, every other axis ``parallel``.
     """
 
     plan: StreamPlan
@@ -376,6 +472,9 @@ class LoweredNest:
     in_streams: Tuple[NestStream, ...]
     out_stream: NestStream
     contraction_axes: Tuple[int, ...]
+    schedule: Schedule = DEFAULT_SCHEDULE
+    axis_order: Tuple[int, ...] = ()
+    padded_bounds: Tuple[int, ...] = ()
 
     @property
     def semantics(self) -> Tuple[str, ...]:
@@ -398,15 +497,17 @@ def _storage_order_or_raise(ref, nest: LoopNest) -> Tuple[int, ...]:
 
 
 def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
-                policy: BlockPolicy) -> Tuple[Tuple[int, ...],
-                                              Tuple[int, ...]]:
+                sched: Schedule) -> Tuple[Tuple[int, ...],
+                                          Tuple[int, ...]]:
     """Per-level (tile, padded bound) from the streams' storage roles.
 
     A level that is the *last* storage dim of any stream is a lanes level
-    (tile aligned to ``policy.lanes``); a level appearing only in outer
-    positions is a sublane level (aligned to ``policy.rows``); a level no
+    (tile aligned to ``sched.lanes``, target ``lanes·lanes_tile_factor``);
+    a level appearing only in outer positions is a sublane level (aligned
+    to ``sched.rows``, target ``rows·rows_tile_factor``); a level no
     stream varies with is a pure iteration axis (tile 1).
     """
+    policy = sched.policy
     roles: Dict[int, str] = {}
     for order in orders.values():
         if order:
@@ -418,9 +519,11 @@ def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
     for lvl, b in enumerate(nest.bounds):
         role = roles.get(lvl)
         if role == "lanes":
-            align, target = policy.lanes, policy.lanes * _LANES_TILE_FACTOR
+            align = policy.lanes
+            target = policy.lanes * sched.lanes_tile_factor
         elif role == "sublane":
-            align, target = policy.rows, policy.rows * _ROWS_TILE_FACTOR
+            align = policy.rows
+            target = policy.rows * sched.rows_tile_factor
         else:
             tiles.append(1)
             padded.append(b)
@@ -431,10 +534,39 @@ def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
     return tuple(tiles), tuple(padded)
 
 
+def _grid_axis_order(sched: Schedule, d: int,
+                     zaxes: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Validated grid-axis order: a permutation keeping contractions last.
+
+    The accumulator lowering requires every revisit of one output block to
+    be *consecutive* grid steps, i.e. the contraction axes must be the
+    fastest-varying (trailing) grid axes — any permutation of the parallel
+    axes ahead of them is legal and only changes traversal locality.
+    """
+    order = sched.axis_order
+    if order is None:
+        return tuple(range(d))
+    if sorted(order) != list(range(d)):
+        raise LoweringError(
+            f"schedule.axis_order {order} is not a permutation of the "
+            f"{d} loop levels")
+    if zaxes and set(order[d - len(zaxes):]) != set(zaxes):
+        raise LoweringError(
+            f"schedule.axis_order {order} does not keep the contraction "
+            f"axes {zaxes} trailing; the accumulator's revisits must be "
+            "consecutive grid steps")
+    return tuple(order)
+
+
 def _lower_nest_stream(alloc: Allocation, nest: LoopNest,
                        tiles: Tuple[int, ...], padded: Tuple[int, ...],
-                       policy: BlockPolicy) -> NestStream:
-    """One lane's level-mapped block walk."""
+                       policy: BlockPolicy,
+                       pos: Dict[int, int]) -> NestStream:
+    """One lane's level-mapped block walk.
+
+    ``pos[lvl]`` is the grid-axis position of loop level ``lvl`` (identity
+    unless the schedule permutes the axis order).
+    """
     ref = alloc.ref
     order = _storage_order_or_raise(ref, nest)
     if not order:
@@ -458,14 +590,14 @@ def _lower_nest_stream(alloc: Allocation, nest: LoopNest,
         block = (1, tiles[lvl])
         layout = (1, pad_shape[0])
 
-        def index_map(*g, _l=lvl):
-            return (0, g[_l])
+        def index_map(*g, _p=pos[lvl]):
+            return (0, g[_p])
     else:
         block = tuple(tiles[l] for l in order)
         layout = pad_shape
 
-        def index_map(*g, _o=order):
-            return tuple(g[l] for l in _o)
+        def index_map(*g, _ps=tuple(pos[l] for l in order)):
+            return tuple(g[p] for p in _ps)
 
     return NestStream(
         name=ref.name,
@@ -476,7 +608,8 @@ def _lower_nest_stream(alloc: Allocation, nest: LoopNest,
 
 
 def lower_nest(plan: StreamPlan,
-               policy: BlockPolicy = DEFAULT_POLICY) -> LoweredNest:
+               policy: BlockPolicy = DEFAULT_POLICY, *,
+               schedule: Optional[Schedule] = None) -> LoweredNest:
     """Lower a plan with an output WRITE ref to a level-mapped schedule.
 
     Requirements (each a :class:`LoweringError` otherwise):
@@ -487,7 +620,13 @@ def lower_nest(plan: StreamPlan,
     * the output's contraction axes are the innermost loop levels, so all
       revisits of one output block are consecutive grid steps and a single
       VMEM accumulator carries them (init on first, drain on last).
+
+    ``schedule`` (when given) wins over ``policy`` and additionally sets
+    the per-level tile targets, the grid-axis order (parallel axes may
+    permute; contraction axes stay trailing) and the accumulator dtype.
     """
+    sched = _resolve_schedule(policy, schedule)
+    policy = sched.policy
     nest = plan.nest
     try:
         out_ref = nest_analysis.output_ref(nest)
@@ -519,16 +658,20 @@ def lower_nest(plan: StreamPlan,
 
     orders = {a.ref.name: _storage_order_or_raise(a.ref, nest)
               for a in plan.allocations}
-    tiles, padded = _nest_tiles(nest, orders, policy)
-    grid = tuple(p // t for p, t in zip(padded, tiles))
+    tiles, padded = _nest_tiles(nest, orders, sched)
+    axis_order = _grid_axis_order(sched, len(nest.bounds), zaxes)
+    pos = {lvl: k for k, lvl in enumerate(axis_order)}
+    grid = tuple(padded[l] // tiles[l] for l in axis_order)
 
-    lowered = [_lower_nest_stream(a, nest, tiles, padded, policy)
+    lowered = [_lower_nest_stream(a, nest, tiles, padded, policy, pos)
                for a in plan.allocations]
     ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
     outs = [s for s in lowered if s.stream.direction == Direction.WRITE]
     return LoweredNest(plan=plan, policy=policy, grid=grid, tiles=tiles,
                        in_streams=ins, out_stream=outs[0],
-                       contraction_axes=zaxes)
+                       contraction_axes=tuple(sorted(pos[z] for z in zaxes)),
+                       schedule=sched, axis_order=axis_order,
+                       padded_bounds=tuple(padded))
 
 
 # --------------------------------------------------------------------------
@@ -551,6 +694,7 @@ class LoweredChain:
     policy: BlockPolicy
     grid: Tuple[int, ...]
     stage_in_streams: Tuple[Tuple[LoweredStream, ...], ...]
+    schedule: Schedule = DEFAULT_SCHEDULE
 
     @property
     def in_streams(self) -> Tuple[LoweredStream, ...]:
@@ -562,7 +706,8 @@ class LoweredChain:
 
 
 def lower_chain(chained: ChainedPlan,
-                policy: BlockPolicy = DEFAULT_POLICY) -> LoweredChain:
+                policy: BlockPolicy = DEFAULT_POLICY, *,
+                schedule: Optional[Schedule] = None) -> LoweredChain:
     """Lower a producer→consumer chain to one fused Pallas schedule.
 
     Block-granular chaining requires each link to walk the canonical dense
@@ -573,6 +718,12 @@ def lower_chain(chained: ChainedPlan,
     :class:`LoweringError` — the word-granular chaining hardware could
     stagger streams, whole-block fusion cannot.
     """
+    sched = _resolve_schedule(policy, schedule)
+    if sched.axis_order is not None:
+        raise LoweringError(
+            "schedule.axis_order applies to the level-mapped path "
+            "(lower_nest) only; a chain's grid IS the unified AGU walk")
+    policy = sched.policy
     bounds = chained.bounds
     dense = _dense_strides(bounds)
     for link in chained.links:
@@ -603,7 +754,8 @@ def lower_chain(chained: ChainedPlan,
 
     return LoweredChain(chained=chained, policy=policy,
                         grid=_canonical_grid(bounds, policy),
-                        stage_in_streams=tuple(stage_streams))
+                        stage_in_streams=tuple(stage_streams),
+                        schedule=sched)
 
 
 # --------------------------------------------------------------------------
@@ -611,7 +763,7 @@ def lower_chain(chained: ChainedPlan,
 # --------------------------------------------------------------------------
 
 
-#: One bound for every lowering-layer cache: the three plan caches below
+#: One bound for every lowering-layer cache: the plan/lowered caches below
 #: and the built-kernel cache share it, so sizing is tuned in one place and
 #: ``clear_caches()`` provably empties the whole layer.
 CACHE_MAX = 256
@@ -641,8 +793,37 @@ def _chain_for(nests: Tuple[LoopNest, ...],
     return chain(nests, num_lanes=num_lanes, force=True)
 
 
-#: Every LRU in this layer, for clear/inspection: the three plan caches…
-_PLAN_CACHES = (_plan_for, plan_stats, _chain_for)
+@functools.lru_cache(maxsize=CACHE_MAX)
+def _lowered_for(plan: StreamPlan, sched: Schedule, nested: bool):
+    """Lowered-schedule cache: the pure-Python lowering per (plan, sched)."""
+    if nested:
+        return lower_nest(plan, schedule=sched)
+    return lower_plan(plan, schedule=sched)
+
+
+@functools.lru_cache(maxsize=CACHE_MAX)
+def _lowered_chain_for(chained: ChainedPlan,
+                       sched: Schedule) -> LoweredChain:
+    return lower_chain(chained, schedule=sched)
+
+
+#: Every LRU in this layer, for clear/inspection: the plan caches…
+_PLAN_CACHES = (_plan_for, plan_stats, _chain_for, _lowered_for,
+                _lowered_chain_for)
+
+
+#: Dispatch-layer instrumentation.  ``builds`` counts jitted pipelines
+#: constructed, ``traces`` counts actual jit traces of those pipelines
+#: (incremented *inside* the traced function, so it only moves when XLA
+#: re-traces), ``calls`` counts ``ssr_call``/``ssr_chain_call`` entries.
+#: A second identical call must move ``calls`` only — that is the
+#: zero-overhead-dispatch contract the tests assert.
+DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0}
+
+
+def reset_dispatch_stats() -> None:
+    for k in DISPATCH_STATS:
+        DISPATCH_STATS[k] = 0
 
 
 def _body_key(body: Callable) -> Any:
@@ -848,12 +1029,13 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
     zaxes = lowered.contraction_axes
     acc_shape = lowered.out_stream.stream.block_shape
 
-    # The accumulator always runs at the f32 compute width (the MXU/VPU
+    # The accumulator defaults to the f32 compute width (the MXU/VPU
     # accumulation dtype — the repo-wide policy), regardless of the storage
     # out_dtype: accumulating k-tile partials in bf16 would compound
     # rounding across grid steps.  The cast to out_dtype happens once, at
-    # the drain.
-    acc_dtype = jnp.float32
+    # the drain.  The schedule may widen it (e.g. f64 on CPU interpret
+    # runs) — a searched knob like the rest of the geometry.
+    acc_dtype = jnp.dtype(lowered.schedule.acc_dtype)
 
     if zaxes:
         def kernel(*refs):
@@ -985,6 +1167,7 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
              mode: str = "reduce",
              out_dtype=jnp.float32,
              policy: BlockPolicy = DEFAULT_POLICY,
+             schedule: Optional[Schedule] = None,
              num_lanes: Optional[int] = None,
              interpret: Optional[bool] = None) -> jax.Array:
     """Execute a :class:`LoopNest` as a streamed Pallas kernel.
@@ -1012,40 +1195,65 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     ``operands`` maps :class:`MemRef` names to arrays.  Zero padding is
     applied per stream, so bodies must be padding-neutral for ``reduce``
     and for contraction axes (sum/dot-style bodies are).  Plans are cached
-    on the nest signature, built kernels on (nest, policy, mode, body key,
-    dtypes, interpret) — see :func:`_body_key`: inline lambdas hit the
-    cache as long as their closure values are hashable and equal.
+    on the nest signature, built kernels on (nest, schedule, mode, body
+    key, dtypes, interpret) — see :func:`_body_key`: inline lambdas hit
+    the cache as long as their closure values are hashable and equal.
+
+    **Zero-overhead dispatch**: prepare (pad/reshape) → engine → trim fuse
+    into ONE cached jitted callable, so the padding traffic compiles into
+    the same XLA program as the Pallas kernel instead of dispatching
+    eagerly per call.  A repeated call with the same (nest, schedule,
+    shapes, body) is a dict hit plus one jitted-function invocation.
+
+    **Transparent tuning**: with no explicit ``schedule`` (and the default
+    ``policy``), the autotuner's persistent cache is consulted — every
+    entry point (direct ``ssr_call``, ``NestKernel``, ``cluster_call``)
+    resolves the same winner for the same problem, so they stay
+    bit-identical to each other before and after a tuner commit.
     """
+    if schedule is None and policy is DEFAULT_POLICY:
+        from . import autotune as _autotune
+
+        schedule = _autotune.lookup(nest, operands, mode=mode,
+                                    out_dtype=str(jnp.dtype(out_dtype)))
+    sched = _resolve_schedule(policy, schedule)
     num_lanes = nest_analysis.auto_lanes(nest, num_lanes)
     plan = _plan_for(nest, num_lanes)
     has_output = any(r.kind == Direction.WRITE for r in nest.refs)
     if has_output:
-        lowered = lower_nest(plan, policy)
         mode = "nest"          # the output ref, not the mode, shapes the call
-    else:
-        lowered = lower_plan(plan, policy)
+    lowered = _lowered_for(plan, sched, has_output)
     missing = [s.name for s in lowered.in_streams if s.name not in operands]
     if missing:
         raise ValueError(f"missing operands for streams {missing}")
-    prepared = [s.prepare(operands[s.name]) for s in lowered.in_streams]
+    arrays = [operands[s.name] for s in lowered.in_streams]
 
-    key = (nest, policy, mode, _body_key(body), str(jnp.dtype(out_dtype)),
-           tuple((p.shape, str(p.dtype)) for p in prepared),
+    DISPATCH_STATS["calls"] += 1
+    key = (nest, sched, mode, _body_key(body), str(jnp.dtype(out_dtype)),
+           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
            num_lanes, interpret)
     fn = _kernel_cache_get(key)
     if fn is None:
         if has_output:
-            fn = _build_nest_kernel(lowered, body, jnp.dtype(out_dtype),
-                                    interpret)
+            kernel = _build_nest_kernel(lowered, body, jnp.dtype(out_dtype),
+                                        interpret)
         else:
-            fn = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
-                               interpret)
-        _kernel_cache_put(key, fn)
+            kernel = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
+                                   interpret)
 
-    out = fn(*prepared)
-    if has_output:
-        return _trim_nest_output(out, lowered)
-    return _trim_output(out, nest.bounds, mode, policy)
+        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
+            DISPATCH_STATS["traces"] += 1   # moves only while tracing
+            prepared = [s.prepare(a)
+                        for s, a in zip(_lowered.in_streams, arrs)]
+            out = _kernel(*prepared)
+            if has_output:
+                return _trim_nest_output(out, _lowered)
+            return _trim_output(out, nest.bounds, mode, sched.policy)
+
+        fn = jax.jit(pipeline)
+        DISPATCH_STATS["builds"] += 1
+        _kernel_cache_put(key, fn)
+    return fn(*arrays)
 
 
 def _trim_output(out: jax.Array, bounds: Tuple[int, ...], mode: str,
@@ -1065,6 +1273,7 @@ def ssr_chain_call(nests: Sequence[LoopNest],
                    mode: str = "map",
                    out_dtype=jnp.float32,
                    policy: BlockPolicy = DEFAULT_POLICY,
+                   schedule: Optional[Schedule] = None,
                    num_lanes: Optional[int] = None,
                    interpret: Optional[bool] = None) -> jax.Array:
     """Execute a producer→consumer chain of nests as ONE Pallas kernel.
@@ -1089,23 +1298,40 @@ def ssr_chain_call(nests: Sequence[LoopNest],
         raise ValueError(
             f"need one body per nest, got {len(bodies)} bodies for "
             f"{len(nests)} nests")
+    if schedule is None and policy is DEFAULT_POLICY:
+        # chains key on their stage-0 nest + the full operand signature,
+        # matching the cluster layer's per-core lookup convention
+        from . import autotune as _autotune
+
+        schedule = _autotune.lookup(nests[0], operands, mode=mode,
+                                    out_dtype=str(jnp.dtype(out_dtype)))
+    sched = _resolve_schedule(policy, schedule)
     chained = _chain_for(nests, num_lanes)
-    lowered = lower_chain(chained, policy)
+    lowered = _lowered_chain_for(chained, sched)
     flat = lowered.in_streams
     missing = sorted({s.name for s in flat} - set(operands))
     if missing:
         raise ValueError(f"missing operands for streams {missing}")
-    prepared = [s.prepare(operands[s.name]) for s in flat]
+    arrays = [operands[s.name] for s in flat]
 
-    key = ("chain", nests, policy, mode,
+    DISPATCH_STATS["calls"] += 1
+    key = ("chain", nests, sched, mode,
            tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
-           tuple((p.shape, str(p.dtype)) for p in prepared),
+           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
            num_lanes, interpret)
     fn = _kernel_cache_get(key)
     if fn is None:
-        fn = _build_chain_kernel(lowered, bodies, mode,
-                                 jnp.dtype(out_dtype), interpret)
-        _kernel_cache_put(key, fn)
+        kernel = _build_chain_kernel(lowered, bodies, mode,
+                                     jnp.dtype(out_dtype), interpret)
 
-    out = fn(*prepared)
-    return _trim_output(out, chained.bounds, mode, policy)
+        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
+            DISPATCH_STATS["traces"] += 1   # moves only while tracing
+            prepared = [s.prepare(a)
+                        for s, a in zip(_lowered.in_streams, arrs)]
+            out = _kernel(*prepared)
+            return _trim_output(out, chained.bounds, mode, sched.policy)
+
+        fn = jax.jit(pipeline)
+        DISPATCH_STATS["builds"] += 1
+        _kernel_cache_put(key, fn)
+    return fn(*arrays)

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import (Direction, LoopNest, MemRef, compiler, ssr_call,
                         ssr_chain_call)
-from repro.core.lowering import DEFAULT_POLICY
+from repro.core.lowering import DEFAULT_POLICY, DEFAULT_SCHEDULE
 
 from .frontend import BLOCK_ELEMS, ChainedKernel, trim_vector
 from .gemv import _launch as _gemv_launch
@@ -73,8 +73,14 @@ def fused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
 
 
 def unfused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
-    """The two-kernel composition: A·x round-trips through HBM."""
-    return ssr_relu(ssr_gemv(a, x, interpret=interpret), interpret=interpret)
+    """The two-kernel composition: A·x round-trips through HBM.
+
+    Pinned to the default schedule (like every fused/unfused pair): the
+    HLO fusion audit compares the two programs buffer-for-buffer, so both
+    sides must run identical block geometry — fusion is the only variable.
+    """
+    return ssr_relu(ssr_gemv(a, x, interpret=interpret),
+                    interpret=interpret, schedule=DEFAULT_SCHEDULE)
 
 
 # --------------------------------------------------------------------------
@@ -99,7 +105,12 @@ def fused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):
 
 
 def unfused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):
-    return ssr_relu(ssr_stencil1d(x, w, interpret=interpret),
+    # Pin the default block width: the fused kernel borrows the stencil's
+    # default Launch geometry, and the HLO fusion audit compares the two
+    # programs buffer-for-buffer — an autotuned width on the unfused side
+    # would change the intermediate's block shape, not its fusion.
+    return ssr_relu(ssr_stencil1d(x, w, interpret=interpret,
+                                  schedule=DEFAULT_SCHEDULE),
                     interpret=interpret)
 
 
@@ -138,12 +149,18 @@ def _identity_block(t):
     return t
 
 
-def fused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None):
-    """Σ (x − y)² as one fused map→reduce kernel (vector accumulator)."""
+def fused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None,
+                      schedule=None):
+    """Σ (x − y)² as one fused map→reduce kernel (vector accumulator).
+
+    ``schedule=None`` pins the default geometry (the fused-vs-unfused
+    audit's like-for-like requirement); pass an explicit schedule to tune.
+    """
     n = x.shape[0]
     return ssr_chain_call(_chain_nests(n, consumer_reads_w=False),
                           (_sq_diff_block, _identity_block),
                           {"X": x, "Y": y}, mode="reduce",
+                          schedule=schedule or DEFAULT_SCHEDULE,
                           interpret=interpret)
 
 
@@ -151,9 +168,11 @@ def unfused_sum_sq_diff(x: jax.Array, y: jax.Array, *, interpret=None):
     """Two streamed kernels: (x−y)² materialised to HBM, then reduced."""
     n = x.shape[0]
     t = ssr_call(_map_nest(n, ("X", "Y"), 2), _sq_diff_block,
-                 {"X": x, "Y": y}, mode="map", interpret=interpret)
+                 {"X": x, "Y": y}, mode="map",
+                 schedule=DEFAULT_SCHEDULE, interpret=interpret)
     return ssr_call(_map_nest(n, ("T",), 1), _identity_block, {"T": t},
-                    mode="reduce", interpret=interpret)
+                    mode="reduce", schedule=DEFAULT_SCHEDULE,
+                    interpret=interpret)
 
 
 def cluster_sum_sq_diff(x: jax.Array, y: jax.Array, *, cores: int,
@@ -168,9 +187,12 @@ def cluster_sum_sq_diff(x: jax.Array, y: jax.Array, *, cores: int,
     from repro.parallel.cluster import cluster_chain_call, pad_to_cores
 
     (x, y), n_pad = pad_to_cores((x, y), cores)
+    # schedule pinned to match the fused single-core contract (the
+    # cores=1 degenerate must stay bit-identical to fused_sum_sq_diff)
     return cluster_chain_call(_chain_nests(n_pad, consumer_reads_w=False),
                               (_sq_diff_block, _identity_block),
                               {"X": x, "Y": y}, mode="reduce", cores=cores,
+                              schedule=DEFAULT_SCHEDULE,
                               interpret=interpret)
 
 
@@ -190,12 +212,16 @@ def _dot_block(t, w):
 
 
 def fused_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
-                   alpha: float = 1.0, interpret=None):
-    """(α·x + y)·w fused: the axpy result never touches HBM."""
+                   alpha: float = 1.0, interpret=None, schedule=None):
+    """(α·x + y)·w fused: the axpy result never touches HBM.
+
+    ``schedule=None`` pins the default geometry (see fused_sum_sq_diff).
+    """
     n = x.shape[0]
     return ssr_chain_call(_chain_nests(n, consumer_reads_w=True),
                           (_axpy_block(alpha), _dot_block),
                           {"X": x, "Y": y, "W": w}, mode="reduce",
+                          schedule=schedule or DEFAULT_SCHEDULE,
                           interpret=interpret)
 
 
@@ -203,9 +229,11 @@ def unfused_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
                      alpha: float = 1.0, interpret=None):
     n = x.shape[0]
     t = ssr_call(_map_nest(n, ("X", "Y"), 2), _axpy_block(alpha),
-                 {"X": x, "Y": y}, mode="map", interpret=interpret)
+                 {"X": x, "Y": y}, mode="map",
+                 schedule=DEFAULT_SCHEDULE, interpret=interpret)
     return ssr_call(_map_nest(n, ("T", "W"), 1), _dot_block,
-                    {"T": t, "W": w}, mode="reduce", interpret=interpret)
+                    {"T": t, "W": w}, mode="reduce",
+                    schedule=DEFAULT_SCHEDULE, interpret=interpret)
 
 
 def cluster_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
@@ -222,7 +250,8 @@ def cluster_axpy_dot(x: jax.Array, y: jax.Array, w: jax.Array, *,
     return cluster_chain_call(_chain_nests(n_pad, consumer_reads_w=True),
                               (_axpy_block(alpha), _dot_block),
                               {"X": x, "Y": y, "W": w}, mode="reduce",
-                              cores=cores, interpret=interpret)
+                              cores=cores, schedule=DEFAULT_SCHEDULE,
+                              interpret=interpret)
 
 
 # --------------------------------------------------------------------------

@@ -15,11 +15,13 @@ pipeline; a kernel module now declares only
 * ``body``    — the compute region builder (``body(static) -> callable``),
 * ``finish``  — result trimming.
 
-Built kernels are cached on (static meta, operand shapes/dtypes, interpret),
-so repeated calls reuse the jitted ``pallas_call`` exactly like the old
-per-module ``functools.partial(jax.jit, static_argnames=…)`` dispatchers —
-but in one place.  ``interpret=None`` autodetects: Mosaic on a real TPU,
-interpreter elsewhere.
+The whole pipeline — prepare, engine, finish — composes into ONE cached
+jitted callable keyed on the *raw* call inputs (shapes/dtypes + static
+values + schedule), so the pad/trim traffic fuses into the same XLA
+program as the kernel and a repeated call is a dict probe plus one jitted
+invocation (``DISPATCH_STATS`` counts builds/traces/calls; the trace-count
+tests pin the zero-overhead contract).  ``interpret=None`` autodetects:
+Mosaic on a real TPU, interpreter elsewhere.
 
 Dtype policy: bodies compute in :data:`COMPUTE_DTYPE` (f32 — the MXU/VPU
 accumulation width) regardless of storage dtype; :func:`promote` is the one
@@ -35,7 +37,9 @@ delivered.
 shell: the kernel states a :class:`~repro.core.LoopNest` (the §3.2
 compiler's input) plus a block body, and the whole schedule — grid, index
 maps, repeat streams, contraction accumulators — comes out of
-``ssrify``/``lower_plan``/``lower_nest`` via :func:`repro.core.ssr_call`.
+``ssrify``/``lower_plan``/``lower_nest`` via :func:`repro.core.ssr_call`,
+under a block :class:`~repro.core.Schedule` resolved from the autotuner's
+persistent cache (``schedule=None``) or pinned explicitly per call.
 A module may still hand a raw :class:`Launch` to :class:`StreamKernel` /
 :class:`ChainedKernel`, but only with a ``lowering_waiver``: one sentence
 stating why the pattern is outside the block-granular AGU model (halo
@@ -53,13 +57,60 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import BlockStream  # noqa: F401  (re-export for kernels)
-from repro.core.lowering import ssr_call
+from repro.core import autotune
+from repro.core.lowering import Schedule, _body_key, ssr_call
 from repro.core.ssr import _on_tpu, ssr_pallas
 
 ROWS = 8
 LANES = 128
 BLOCK_ELEMS = ROWS * LANES
 COMPUTE_DTYPE = jnp.float32
+
+#: Frontend dispatch instrumentation, mirroring
+#: ``lowering.DISPATCH_STATS``: ``builds`` counts jitted prepare→finish
+#: pipelines constructed, ``traces`` moves only while one is being traced,
+#: ``calls`` per ``__call__``.  The trace-count tests assert a repeated
+#: call is a pure cache hit.
+DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0}
+
+
+#: Built-pipeline cap per kernel instance: epoch bumps retire old entries,
+#: so the bound only needs to stop pathological shape churn.
+_PIPELINE_CACHE_MAX = 512
+
+
+def reset_dispatch_stats() -> None:
+    for k in DISPATCH_STATS:
+        DISPATCH_STATS[k] = 0
+
+
+def _is_arraylike(x: Any) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _static_key(v: Any) -> Any:
+    """Hashable identity for a non-array call ingredient (param or arg)."""
+    if callable(v):
+        return _body_key(v)
+    try:
+        hash(v)
+        return v
+    except TypeError:
+        return repr(v)
+
+
+def _call_key(args: tuple, params: Dict[str, Any]) -> Any:
+    """Cache key over raw call inputs: array shapes/dtypes + static values.
+
+    Keying on *raw* inputs (not prepared arrays) is what lets the whole
+    prepare→engine→finish pipeline live behind one dict probe.
+    """
+    arg_key = tuple(
+        (tuple(a.shape), str(a.dtype)) if _is_arraylike(a) else
+        ("static", _static_key(a))
+        for a in args)
+    param_key = tuple(sorted((k, _static_key(v)) for k, v in params.items()))
+    return arg_key, param_key
 
 
 def promote(x: jax.Array) -> jax.Array:
@@ -94,7 +145,9 @@ def pad_leading(a: jax.Array, mult: int) -> jax.Array:
 
 
 def require_power_of_two(n: int, what: str) -> None:
-    if n & (n - 1):
+    # n & (n - 1) alone silently accepts n == 0 (0 & -1 == 0): an empty
+    # operand would sail into log2/stage loops and fail far from the cause.
+    if n <= 0 or n & (n - 1):
         raise ValueError(f"{what} needs a power-of-two length, got {n}")
 
 
@@ -114,7 +167,17 @@ class Launch:
 
 
 class _KernelBase:
-    """Shared call pipeline: prepare → cached build → run → finish."""
+    """Shared call pipeline: prepare → build → run → finish, ONE jit.
+
+    The whole pipeline — operand canonicalisation (pad/reshape), the
+    engine call, and result trimming — composes into a single cached
+    jitted callable keyed on the *raw* call inputs, so the pad/trim
+    traffic fuses into the same XLA program as the kernel instead of
+    dispatching eagerly per call.  The first call for a signature runs
+    ``prepare`` once eagerly (to learn the static meta the builder needs)
+    and then traces the fused pipeline; every later call is a dict probe
+    plus one jitted invocation.
+    """
 
     def __init__(self, name: str, *, prepare: Callable,
                  finish: Optional[Callable] = None):
@@ -127,19 +190,36 @@ class _KernelBase:
         raise NotImplementedError
 
     def __call__(self, *args, interpret: Optional[bool] = None, **params):
-        arrays, static, final = self._prepare(*args, **params)
-        arrays = tuple(arrays)
         if interpret is None:
             interpret = not _on_tpu()
-        key = (static,
-               tuple((a.shape, str(a.dtype)) for a in arrays),
-               bool(interpret))
+        DISPATCH_STATS["calls"] += 1
+        key = (_call_key(args, params), bool(interpret))
         fn = self._cache.get(key)
         if fn is None:
-            fn = self._build(static, arrays, bool(interpret))
+            arrays, static, _final = self._prepare(*args, **params)
+            built = self._build(static, tuple(arrays), bool(interpret))
+            arr_idx = tuple(i for i, a in enumerate(args)
+                            if _is_arraylike(a))
+            # Capture only the static (non-array) positions: closing over
+            # the first call's arrays would pin their device buffers for
+            # the cache entry's lifetime.
+            statics = tuple(None if _is_arraylike(a) else a for a in args)
+
+            def pipeline(*arrs, _st=statics, _idx=arr_idx, _built=built):
+                DISPATCH_STATS["traces"] += 1
+                full = list(_st)
+                for i, a in zip(_idx, arrs):
+                    full[i] = a
+                prepared, _s, final = self._prepare(*full, **params)
+                out = _built(*prepared)
+                return self._finish(out, final) if self._finish else out
+
+            fn = jax.jit(pipeline)
+            DISPATCH_STATS["builds"] += 1
+            if len(self._cache) >= _PIPELINE_CACHE_MAX:
+                self._cache.clear()
             self._cache[key] = fn
-        out = fn(*arrays)
-        return self._finish(out, final) if self._finish else out
+        return fn(*[a for a in args if _is_arraylike(a)])
 
 
 def _require_waiver(name: str, waiver: Optional[str]) -> str:
@@ -188,18 +268,69 @@ class NestKernel:
         # default.  Dtype-preserving kernels (integer relu) need this so the
         # streamed engine stays bit-exact with the baseline.
         self._out_dtype = out_dtype
+        self._cache: Dict[Any, Callable] = {}
 
     def loop_nest(self, static):
         """The nest this kernel executes — exposed for cost-model oracles."""
         return self._nest(static)
 
-    def __call__(self, *args, interpret: Optional[bool] = None, **params):
-        operands, static, final = self._prepare(*args, **params)
-        kw = {} if self._out_dtype is None else \
-            {"out_dtype": self._out_dtype(static)}
-        out = ssr_call(self._nest(static), self._body(static), dict(operands),
-                       mode=self._mode, interpret=interpret, **kw)
-        return self._finish(out, final) if self._finish else out
+    def schedule_for(self, *args, **params) -> Schedule:
+        """The schedule this call would run: tuned (cache hit) or default."""
+        operands, static, _final = self._prepare(*args, **params)
+        out_dtype = "float32" if self._out_dtype is None else \
+            str(jnp.dtype(self._out_dtype(static)))
+        return autotune.lookup(self._nest(static), dict(operands),
+                               mode=self._mode, out_dtype=out_dtype)
+
+    def __call__(self, *args, interpret: Optional[bool] = None,
+                 schedule: Optional[Schedule] = None, **params):
+        """Run the kernel as ONE jitted prepare→ssr_call→finish pipeline.
+
+        ``schedule=None`` consults the autotuner's persistent schedule
+        cache (:func:`repro.core.autotune.lookup`) — so registry/``ops``
+        callers pick up tuned schedules transparently.  The pipeline cache
+        keys on the autotune epoch: committing a new winner rebuilds the
+        pipeline on the next call instead of serving the stale schedule.
+        """
+        DISPATCH_STATS["calls"] += 1
+        key = (_call_key(args, params), schedule, interpret,
+               autotune.epoch() if schedule is None else -1)
+        fn = self._cache.get(key)
+        if fn is None:
+            operands, static, _final = self._prepare(*args, **params)
+            nest = self._nest(static)
+            kw = {} if self._out_dtype is None else \
+                {"out_dtype": self._out_dtype(static)}
+            sched = schedule
+            if sched is None:
+                out_dtype = str(jnp.dtype(kw.get("out_dtype", jnp.float32)))
+                sched = autotune.lookup(nest, dict(operands),
+                                        mode=self._mode, out_dtype=out_dtype)
+            arr_idx = tuple(i for i, a in enumerate(args)
+                            if _is_arraylike(a))
+            # static positions only — see the _KernelBase note: closing
+            # over first-call arrays would pin their buffers
+            statics = tuple(None if _is_arraylike(a) else a for a in args)
+
+            def pipeline(*arrs, _st=statics, _idx=arr_idx, _sched=sched):
+                DISPATCH_STATS["traces"] += 1
+                full = list(_st)
+                for i, a in zip(_idx, arrs):
+                    full[i] = a
+                ops, s, final = self._prepare(*full, **params)
+                okw = {} if self._out_dtype is None else \
+                    {"out_dtype": self._out_dtype(s)}
+                out = ssr_call(self._nest(s), self._body(s), dict(ops),
+                               mode=self._mode, schedule=_sched,
+                               interpret=interpret, **okw)
+                return self._finish(out, final) if self._finish else out
+
+            fn = jax.jit(pipeline)
+            DISPATCH_STATS["builds"] += 1
+            if len(self._cache) >= _PIPELINE_CACHE_MAX:
+                self._cache.clear()
+            self._cache[key] = fn
+        return fn(*[a for a in args if _is_arraylike(a)])
 
 
 class StreamKernel(_KernelBase):

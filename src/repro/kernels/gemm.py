@@ -86,15 +86,18 @@ _ssr = NestKernel("gemm", prepare=_prepare, nest=_nest, body=_body,
 def ssr_matmul(a: jax.Array, b: jax.Array, *,
                bm: int | None = None, bn: int | None = None,
                bk: int | None = None,
-               out_dtype=None, interpret=None) -> jax.Array:
+               out_dtype=None, interpret=None,
+               schedule=None) -> jax.Array:
     """C = A·B through the full compiler path (nest → plan → Pallas).
 
     ``bm``/``bn``/``bk`` are retained for call-site compatibility with the
-    old hand-tiled engine; tiling now comes from the lowering policy and
-    is clamped to the (padded) problem, never the other way around.
+    old hand-tiled engine; tiling now comes from the lowering schedule
+    (tile targets + grid-axis order, autotuned per shape when a cached
+    winner exists, pinned by an explicit ``schedule=``) and is clamped to
+    the (padded) problem, never the other way around.
     """
     return _ssr(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                interpret=interpret)
+                interpret=interpret, schedule=schedule)
 
 
 def _prepare_base(a, b, out_dtype=None):

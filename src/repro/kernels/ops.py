@@ -10,6 +10,14 @@ the Mosaic kernels).
 Each function is a thin typed façade over :func:`registry.dispatch`; the
 registry owns the variant table, so adding a kernel means registering it
 once, not editing an import list here.
+
+Schedule tuning is transparent at this layer: the streamed variants the
+registry routes to (``NestKernel``-backed kernels, and the schedule-aware
+stencil) resolve their block schedule from the autotuner's persistent
+cache (:mod:`repro.core.autotune`) on every build — run the tuner once
+(``benchmarks/kernel_bench.py --autotune-only`` or
+:func:`repro.core.autotune.autotune`) and these ops pick the committed
+winners up with no call-site changes.
 """
 
 from __future__ import annotations

@@ -72,9 +72,14 @@ _base = MonolithicKernel(
     finish=lambda out, _: out[0, 0])
 
 
-def ssr_dot(x: jax.Array, y: jax.Array, *, interpret=None) -> jax.Array:
-    """Streamed dot product. n is padded up to a whole number of blocks."""
-    return _ssr(x, y, interpret=interpret)
+def ssr_dot(x: jax.Array, y: jax.Array, *, interpret=None,
+            schedule=None) -> jax.Array:
+    """Streamed dot product. n is padded up to a whole number of blocks.
+
+    ``schedule=None`` picks up the autotuner's cached winner (if any);
+    an explicit :class:`~repro.core.Schedule` pins the block geometry.
+    """
+    return _ssr(x, y, interpret=interpret, schedule=schedule)
 
 
 def cluster_dot(x: jax.Array, y: jax.Array, *, cores: int,

@@ -65,13 +65,14 @@ _base = MonolithicKernel(
     finish=trim_vector)
 
 
-def ssr_elementwise(x: jax.Array, fn: Callable, *, interpret=None):
+def ssr_elementwise(x: jax.Array, fn: Callable, *, interpret=None,
+                    schedule=None):
     """Streamed elementwise unary: one read stream, one write stream."""
-    return _ssr(x, fn, interpret=interpret)
+    return _ssr(x, fn, interpret=interpret, schedule=schedule)
 
 
-def ssr_relu(x: jax.Array, *, interpret=None) -> jax.Array:
-    return _ssr(x, interpret=interpret)
+def ssr_relu(x: jax.Array, *, interpret=None, schedule=None) -> jax.Array:
+    return _ssr(x, interpret=interpret, schedule=schedule)
 
 
 def baseline_relu(x: jax.Array, *, interpret=None) -> jax.Array:

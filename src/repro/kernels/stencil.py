@@ -19,13 +19,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction
+from repro.core import BlockStream, Direction, autotune, compiler
+from repro.core.lowering import DEFAULT_SCHEDULE, Schedule
 
 from .frontend import (LANES, Launch, MonolithicKernel, StreamKernel,
                        promote, trim_vector)
 from .registry import KernelEntry, register_kernel
 
 TAPS = 11
+
+
+def _block_width(schedule: Schedule | None) -> int:
+    """The 1-D stencil's tunable knob: elements per streamed block.
+
+    The halo trick needs flat ``(1, W)`` blocks (a multi-row block would
+    wrap the window across sublanes), so the schedule's ``lanes`` field is
+    the block width — the autotuner sweeps it in multiples of the 128-wide
+    hardware lane.  Default (128) matches the historical geometry.
+    """
+    w = (schedule or DEFAULT_SCHEDULE).lanes
+    if w % LANES:
+        raise ValueError(
+            f"stencil block width {w} is not a multiple of the {LANES}-wide "
+            "hardware lane")
+    return w
 
 
 def _check_taps(w):
@@ -36,27 +53,31 @@ def _check_taps(w):
 # -- 1-D --------------------------------------------------------------------
 
 
-def _prepare_1d(x, w):
+def _prepare_1d(x, w, schedule=None):
     _check_taps(w)
+    width = _block_width(schedule)
     n = x.shape[0] - (TAPS - 1)
-    nblk = -(-n // LANES)
+    nblk = -(-n // width)
     # pad so that blocks [0..nblk] exist (halo lane reads block i+1)
-    need = (nblk + 1) * LANES
+    need = (nblk + 1) * width
     x = jnp.pad(x, (0, need - x.shape[0]))
-    xp2d = x.reshape(nblk + 1, LANES)
-    return (xp2d, xp2d, w.reshape(1, TAPS)), None, n
+    xp2d = x.reshape(nblk + 1, width)
+    return (xp2d, xp2d, w.reshape(1, TAPS)), width, n
 
 
 def window_block(lo, hi, w2d):
-    """Pure tap loop over one (1, LANES) block + its halo block.
+    """Pure tap loop over one (1, W) block + its halo block.
 
     Shared by the plain stream kernel and the fused (chained) variants —
     the fully unrolled fmadd-only hot loop, as a block→block function.
+    The width comes from the blocks themselves, so the schedule-tuned
+    geometry flows through without another parameter.
     """
+    width = lo.shape[-1]
     window = jnp.concatenate([promote(lo), promote(hi)], axis=1)
-    acc = jnp.zeros((1, LANES), jnp.float32)
+    acc = jnp.zeros((1, width), jnp.float32)
     for j in range(TAPS):                      # static unroll: fmadds only
-        acc = acc + promote(w2d[0, j]) * window[:, j:j + LANES]
+        acc = acc + promote(w2d[0, j]) * window[:, j:j + width]
     return acc
 
 
@@ -67,18 +88,18 @@ def _body_1d(static):
     return body
 
 
-def _launch_1d(static, xp2d, _xp2d, w2d):
+def _launch_1d(width, xp2d, _xp2d, w2d):
     nblk = xp2d.shape[0] - 1
     return Launch(
         grid=(nblk,),
         in_streams=(
-            BlockStream((1, LANES), lambda i: (i, 0), name="x_lo"),
-            BlockStream((1, LANES), lambda i: (i + 1, 0), name="x_hi"),
+            BlockStream((1, width), lambda i: (i, 0), name="x_lo"),
+            BlockStream((1, width), lambda i: (i + 1, 0), name="x_hi"),
             BlockStream((1, TAPS), lambda i: (0, 0), name="w"),  # repeat
         ),
-        out_streams=(BlockStream((1, LANES), lambda i: (i, 0),
+        out_streams=(BlockStream((1, width), lambda i: (i, 0),
                                  Direction.WRITE, name="y"),),
-        out_shapes=(jax.ShapeDtypeStruct((nblk, LANES), jnp.float32),),
+        out_shapes=(jax.ShapeDtypeStruct((nblk, width), jnp.float32),),
         dimension_semantics=("parallel",),
     )
 
@@ -92,9 +113,24 @@ _ssr_1d = StreamKernel(
         "two base-shifted streams — the paper's second AGU trick"))
 
 
-def ssr_stencil1d(x: jax.Array, w: jax.Array, *, interpret=None) -> jax.Array:
-    """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1."""
-    return _ssr_1d(x, w, interpret=interpret)
+def ssr_stencil1d(x: jax.Array, w: jax.Array, *, interpret=None,
+                  schedule: Schedule | None = None) -> jax.Array:
+    """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1.
+
+    ``schedule`` tunes the block width (``schedule.lanes`` elements per
+    grid step); semantics are identical for every legal width.
+    ``schedule=None`` consults the autotuner's persistent cache under the
+    same key the tuner commits (the §4.2 cost nest + operand signature),
+    so tuned widths reach ``ops.stencil1d``/registry callers transparently
+    — the waivered geometry opts back into tuning by hand.
+    """
+    if schedule is None:
+        n = x.shape[0] - (TAPS - 1)
+        hit = autotune.lookup(compiler.stencil_nest(n, TAPS),
+                              {"x": x, "w": w}, mode="map",
+                              out_dtype="float32")
+        schedule = None if hit == DEFAULT_SCHEDULE else hit
+    return _ssr_1d(x, w, interpret=interpret, schedule=schedule)
 
 
 def _prepare_base_1d(x, w):

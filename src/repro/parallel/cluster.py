@@ -37,9 +37,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import autotune
 from repro.core.compiler import Direction, LoopNest, MemRef
-from repro.core.lowering import (BlockPolicy, DEFAULT_POLICY, ssr_call,
-                                 ssr_chain_call)
+from repro.core.lowering import (BlockPolicy, DEFAULT_POLICY, Schedule,
+                                 ssr_call, ssr_chain_call)
 
 
 class ClusterError(ValueError):
@@ -47,6 +48,32 @@ class ClusterError(ValueError):
 
 
 CORES_AXIS = "cores"
+
+#: Provenance of the most recent ``cluster_call``/``cluster_chain_call``:
+#: the per-core schedule actually dispatched (tuned or default), the core
+#: count, and the per-core tile bounds.  ``benchmarks/cluster_bench.py``
+#: reads this to stamp schedule provenance onto its result rows; callers
+#: should ``clear()`` it before the call they want attributed.
+LAST_DISPATCH: Dict[str, object] = {}
+
+
+def _record_dispatch(schedule: Optional[Schedule], cores: int,
+                     bounds: Tuple[int, ...],
+                     policy: BlockPolicy = DEFAULT_POLICY) -> None:
+    from repro.core.lowering import DEFAULT_SCHEDULE
+
+    # `tuned` means "came from the autotuner, not the default geometry":
+    # an explicitly pinned DEFAULT_SCHEDULE (or a legacy policy=) is
+    # still an untuned dispatch.
+    if schedule is None:
+        effective = DEFAULT_SCHEDULE if policy is DEFAULT_POLICY \
+            else Schedule.from_policy(policy)
+    else:
+        effective = schedule
+    LAST_DISPATCH.update(
+        schedule=effective,
+        tuned=schedule is not None and schedule != DEFAULT_SCHEDULE,
+        cores=cores, tile_bounds=tuple(bounds))
 
 
 def _cluster_mesh(cores: int, mesh: Optional[Mesh]) -> Mesh:
@@ -159,6 +186,50 @@ def _validate(cores: int, mode: str) -> None:
         raise ClusterError(f"unknown cluster mode {mode!r}")
 
 
+def _shard_operand_sig(nests: Sequence[LoopNest],
+                       operands: Dict[str, jax.Array],
+                       cores: int) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """Per-shard (shape, dtype) of every operand — what one core streams.
+
+    Sharded refs (nonzero outer coefficient) split their leading logical
+    dim C ways; replicated refs keep their global shape.  This is the
+    schedule-cache identity of the *per-core tile*, so a winner tuned for
+    the tile size (via the single-core tuner or a cluster sweep) is found
+    regardless of the cluster-global operand shapes.
+    """
+    sig: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+    for name, arr in operands.items():
+        ref, owner = _operand_ref(nests, name)
+        layout = _shard_layout(ref, owner)
+        if layout is None:
+            sig[name] = (tuple(arr.shape), str(arr.dtype))
+        else:
+            sig[name] = ((layout[0] // cores,) + tuple(layout[1:]),
+                         str(arr.dtype))
+    return sig
+
+
+def _core_schedule(subs: Sequence[LoopNest],
+                   operands: Dict[str, jax.Array], *,
+                   mode: str, out_dtype) -> Optional[Schedule]:
+    """The tuned schedule for one core's tile, or ``None`` (default).
+
+    The per-core tile is a single-core problem of the *sharded* bounds, so
+    the lookup keys on the sub-nest + per-shard operand shapes with
+    ``cores=1`` — exactly what the tuner commits when it tunes that
+    problem size.  Misses fall through to the default schedule.
+    """
+    try:
+        sig = _shard_operand_sig(subs, operands, 1)  # subs are already split
+    except ClusterError:
+        return None
+    # A chain keys on its stage-0 sub-nest; the operand signature (which
+    # spans every stage) disambiguates chains sharing a producer shape.
+    sched = autotune.lookup(subs[0], sig, mode=mode,
+                            out_dtype=str(jnp.dtype(out_dtype)))
+    return None if sched == autotune.DEFAULT_SCHEDULE else sched
+
+
 def _sharded_call(nests: Sequence[LoopNest], tile_fn: Callable,
                   operands: Dict[str, jax.Array], *, cores: int,
                   mode: str, mesh: Optional[Mesh]) -> jax.Array:
@@ -189,6 +260,7 @@ def cluster_call(nest: LoopNest, body: Callable[..., jax.Array],
                  mode: str = "reduce",
                  out_dtype=jnp.float32,
                  policy: BlockPolicy = DEFAULT_POLICY,
+                 schedule: Optional[Schedule] = None,
                  num_lanes: Optional[int] = None,
                  interpret: Optional[bool] = None,
                  mesh: Optional[Mesh] = None) -> jax.Array:
@@ -206,18 +278,36 @@ def cluster_call(nest: LoopNest, body: Callable[..., jax.Array],
     ``cores=1`` bypasses the mesh entirely and is bit-identical to
     ``ssr_call``.  Reduce bodies must be padding-neutral *and* tolerate the
     level-0 split (sum-like reductions are; order-sensitive folds are not).
+
+    ``schedule=None`` resolves the **per-core tile's** schedule from the
+    autotuner cache: the tile is a single-core problem of the *sharded*
+    bounds, so the tuned block geometry tracks what one core actually
+    streams, not the cluster-global shape.
     """
     _validate(cores, mode)
     if cores == 1:
+        if schedule is None and policy is DEFAULT_POLICY:
+            # Same resolution ssr_call/NestKernel perform (and under the
+            # same guard: an explicit non-default policy pins the
+            # geometry), so `cores=1` stays bit-identical to the
+            # single-core registry path even after a tuner commit.
+            hit = autotune.lookup(nest, operands, mode=mode,
+                                  out_dtype=str(jnp.dtype(out_dtype)))
+            schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+        _record_dispatch(schedule, 1, nest.bounds, policy)
         return ssr_call(nest, body, operands, mode=mode, out_dtype=out_dtype,
-                        policy=policy, num_lanes=num_lanes,
-                        interpret=interpret)
+                        policy=policy, schedule=schedule,
+                        num_lanes=num_lanes, interpret=interpret)
     sub = _split_level0(nest, cores)
+    if schedule is None and policy is DEFAULT_POLICY:
+        schedule = _core_schedule([sub], operands, mode=mode,
+                                  out_dtype=out_dtype)
+    _record_dispatch(schedule, cores, sub.bounds, policy)
     return _sharded_call(
         [nest],
         lambda ops: ssr_call(sub, body, ops, mode=mode, out_dtype=out_dtype,
-                             policy=policy, num_lanes=num_lanes,
-                             interpret=interpret),
+                             policy=policy, schedule=schedule,
+                             num_lanes=num_lanes, interpret=interpret),
         operands, cores=cores, mode=mode, mesh=mesh)
 
 
@@ -228,6 +318,7 @@ def cluster_chain_call(nests: Sequence[LoopNest],
                        mode: str = "reduce",
                        out_dtype=jnp.float32,
                        policy: BlockPolicy = DEFAULT_POLICY,
+                       schedule: Optional[Schedule] = None,
                        num_lanes: Optional[int] = None,
                        interpret: Optional[bool] = None,
                        mesh: Optional[Mesh] = None) -> jax.Array:
@@ -243,15 +334,29 @@ def cluster_chain_call(nests: Sequence[LoopNest],
     nests = tuple(nests)
     _validate(cores, mode)
     if cores == 1:
+        if schedule is None and policy is DEFAULT_POLICY:
+            # mirror ssr_chain_call's internal resolution (stage-0 nest +
+            # full operand signature, same default-policy guard) so the
+            # recorded provenance is the schedule the delegated call runs
+            hit = autotune.lookup(nests[0], operands, mode=mode,
+                                  out_dtype=str(jnp.dtype(out_dtype)))
+            schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+        _record_dispatch(schedule, 1, nests[0].bounds, policy)
         return ssr_chain_call(nests, bodies, operands, mode=mode,
                               out_dtype=out_dtype, policy=policy,
-                              num_lanes=num_lanes, interpret=interpret)
+                              schedule=schedule, num_lanes=num_lanes,
+                              interpret=interpret)
     subs = tuple(_split_level0(n, cores) for n in nests)
+    if schedule is None and policy is DEFAULT_POLICY:
+        schedule = _core_schedule(subs, operands, mode=mode,
+                                  out_dtype=out_dtype)
+    _record_dispatch(schedule, cores, subs[0].bounds, policy)
     return _sharded_call(
         nests,
         lambda ops: ssr_chain_call(subs, bodies, ops, mode=mode,
                                    out_dtype=out_dtype, policy=policy,
-                                   num_lanes=num_lanes, interpret=interpret),
+                                   schedule=schedule, num_lanes=num_lanes,
+                                   interpret=interpret),
         operands, cores=cores, mode=mode, mesh=mesh)
 
 

@@ -1,0 +1,244 @@
+"""Tests for the schedule autotuner (core/autotune.py).
+
+Covers the layer's contract: candidate legality (lane divisibility, VMEM
+budget, lowering rejections), cost-model ranking determinism, cache
+hit/miss/invalidation keyed on the nest, and on-disk persistence
+round-trips.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import autotune, compiler
+from repro.core.autotune import (ScheduleCache, cache_key,
+                                 candidate_schedules, model_cost,
+                                 rank_candidates, schedule_is_legal)
+from repro.core.lowering import DEFAULT_SCHEDULE, Schedule, ssr_call
+
+RNG = np.random.default_rng(11)
+
+
+def arr(n):
+    return jnp.asarray(RNG.standard_normal(n), jnp.float32)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return ScheduleCache(path=str(tmp_path / "sched"))
+
+
+class TestLegality:
+    def test_default_is_legal_everywhere(self):
+        for nest in (compiler.dot_product_nest(2048),
+                     compiler.elementwise_nest(1024),
+                     compiler.gemm_nest(32, 32, 32)):
+            ok, why = schedule_is_legal(nest, DEFAULT_SCHEDULE)
+            assert ok, why
+
+    def test_lane_divisibility_rejected(self):
+        nest = compiler.dot_product_nest(2048)
+        ok, why = schedule_is_legal(nest, Schedule(lanes=100))
+        assert not ok and "lane" in why
+        ok, why = schedule_is_legal(nest, Schedule(lanes=64))
+        assert not ok
+
+    def test_vmem_budget_rejected(self):
+        # 32768×1024 f32 blocks, double-buffered across three streams +
+        # accumulator scratch, blow straight through the 64 MiB budget.
+        nest = compiler.dot_product_nest(1 << 26)
+        ok, why = schedule_is_legal(nest, Schedule(rows=32768, lanes=1024))
+        assert not ok and "VMEM" in why
+
+    def test_lowering_rejections_propagate(self):
+        # axis_order on the flat path is a LoweringError -> illegal
+        nest = compiler.dot_product_nest(2048)
+        ok, why = schedule_is_legal(nest, Schedule(axis_order=(0,)))
+        assert not ok and "lowering rejected" in why
+
+    def test_axis_order_contraction_must_trail(self):
+        nest = compiler.gemm_nest(64, 64, 64)
+        ok, why = schedule_is_legal(nest, Schedule(axis_order=(2, 0, 1)))
+        assert not ok and "lowering rejected" in why
+        ok, why = schedule_is_legal(nest, Schedule(axis_order=(1, 0, 2)))
+        assert ok, why
+
+    def test_max_dims_enforced_at_nest_construction(self):
+        from repro.core.stream import MAX_DIMS
+
+        with pytest.raises(ValueError, match="exceeds AGU dims"):
+            compiler.LoopNest(bounds=(2,) * (MAX_DIMS + 1), refs=(),
+                              compute_per_level=(1,) * (MAX_DIMS + 1))
+
+    def test_candidates_all_legal_default_first(self):
+        nest = compiler.gemm_nest(32, 32, 32)
+        cands = candidate_schedules(nest)
+        assert cands[0] == DEFAULT_SCHEDULE
+        for s in cands:
+            ok, why = schedule_is_legal(nest, s)
+            assert ok, (s, why)
+
+
+class TestRanking:
+    def test_deterministic(self):
+        nest = compiler.dot_product_nest(5000)
+        cands = candidate_schedules(nest)
+        a = rank_candidates(nest, cands, top_k=6)
+        b = rank_candidates(nest, cands, top_k=6)
+        assert a == b
+
+    def test_padding_blowup_charged(self):
+        # 1000 elements: a 32×512 block pads to 16384, the default to 1024
+        nest = compiler.dot_product_nest(1000)
+        assert model_cost(nest, Schedule(rows=32, lanes=512)) > \
+            model_cost(nest, DEFAULT_SCHEDULE)
+
+    def test_step_overhead_rewards_bigger_blocks(self):
+        # 8192 exact elements: same instruction count either way, fewer
+        # grid steps for the bigger block
+        nest = compiler.dot_product_nest(8192)
+        assert model_cost(nest, Schedule(rows=16, lanes=256)) < \
+            model_cost(nest, DEFAULT_SCHEDULE)
+
+    def test_default_always_survives_prune(self):
+        nest = compiler.dot_product_nest(8192)
+        cands = candidate_schedules(nest)
+        kept = rank_candidates(nest, cands, top_k=2)
+        assert DEFAULT_SCHEDULE in kept
+
+    def test_equal_geometry_candidates_collapse(self):
+        # at 32^3 every tile clamps to the padded dims: all tile-factor /
+        # axis-order variants lower identically and must not be measured
+        # as separate candidates
+        nest = compiler.gemm_nest(32, 32, 32)
+        fp = autotune.schedule_fingerprint
+        assert fp(nest, DEFAULT_SCHEDULE) == \
+            fp(nest, Schedule(lanes_tile_factor=1, rows_tile_factor=8))
+        assert fp(nest, DEFAULT_SCHEDULE) == \
+            fp(nest, Schedule(axis_order=(1, 0, 2)))
+        kept = rank_candidates(nest, candidate_schedules(nest), top_k=8)
+        fps = [fp(nest, s) for s in kept]
+        assert len(fps) == len(set(fps))
+
+
+class TestCacheKeys:
+    def test_nest_change_changes_key(self):
+        ops = {"A": ((2048,), "float32"), "B": ((2048,), "float32")}
+        k1 = cache_key(compiler.dot_product_nest(2048), ops)
+        k2 = cache_key(compiler.dot_product_nest(4096), ops)
+        assert k1 != k2
+
+    def test_shape_dtype_mode_cores_change_key(self):
+        nest = compiler.dot_product_nest(2048)
+        ops = {"A": ((2048,), "float32"), "B": ((2048,), "float32")}
+        base = cache_key(nest, ops)
+        assert base != cache_key(
+            nest, {"A": ((4096,), "float32"), "B": ((4096,), "float32")})
+        assert base != cache_key(
+            nest, {"A": ((2048,), "bfloat16"), "B": ((2048,), "bfloat16")})
+        assert base != cache_key(nest, ops, mode="map")
+        assert base != cache_key(nest, ops, cores=4)
+        assert base != cache_key(nest, ops, backend="tpu")
+        assert base == cache_key(nest, ops)  # stable
+
+
+class TestPersistence:
+    def test_roundtrip_across_instances(self, tmp_path):
+        path = str(tmp_path / "sched")
+        sched = Schedule(rows=16, lanes=256, axis_order=None)
+        ScheduleCache(path=path).put("k1", sched, meta={"tuned_us": 1.0})
+        fresh = ScheduleCache(path=path)          # no shared memory
+        assert fresh.get("k1") == sched
+        doc = fresh.meta("k1")
+        assert doc["meta"]["tuned_us"] == 1.0
+
+    def test_axis_order_and_factors_roundtrip(self, cache):
+        sched = Schedule(rows=4, lanes=128, lanes_tile_factor=2,
+                         rows_tile_factor=8, axis_order=(1, 0, 2),
+                         acc_dtype="float32")
+        cache.put("k2", sched)
+        again = ScheduleCache(path=cache.path)
+        assert again.get("k2") == sched
+
+    def test_miss_returns_none(self, cache):
+        assert cache.get("nope") is None
+
+    def test_invalidation(self, cache):
+        cache.put("k3", DEFAULT_SCHEDULE)
+        assert cache.get("k3") is not None
+        assert cache.invalidate("k3")
+        assert cache.get("k3") is None
+        assert not cache.invalidate("k3")  # already gone
+
+    def test_clear_empties_disk(self, cache):
+        cache.put("a", DEFAULT_SCHEDULE)
+        cache.put("b", Schedule(rows=16))
+        assert cache.clear() == 2
+        assert cache.keys() == []
+
+    def test_version_mismatch_ignored(self, cache):
+        cache.put("k4", DEFAULT_SCHEDULE)
+        f = os.path.join(cache.path, "k4.json")
+        doc = json.load(open(f))
+        doc["version"] = -1
+        json.dump(doc, open(f, "w"))
+        assert ScheduleCache(path=cache.path).get("k4") is None
+
+    def test_corrupt_file_is_a_miss(self, cache):
+        os.makedirs(cache.path, exist_ok=True)
+        with open(os.path.join(cache.path, "bad.json"), "w") as f:
+            f.write("{not json")
+        assert cache.get("bad") is None
+
+
+class TestAutotuneEndToEnd:
+    def _tune(self, cache, n=2048, **kw):
+        nest = compiler.dot_product_nest(n)
+        ops = {"A": arr(n), "B": arr(n)}
+        body = lambda a, b: a * b  # noqa: E731
+        return autotune.autotune(
+            nest, body, ops, mode="reduce",
+            candidates=[DEFAULT_SCHEDULE, Schedule(rows=16, lanes=128)],
+            warmup=1, iters=1, cache=cache, **kw), nest, ops, body
+
+    def test_winner_is_measured_and_committed(self, cache):
+        res, nest, ops, body = self._tune(cache)
+        assert res.measured == 2 and not res.from_cache
+        assert cache.get(res.key) == res.schedule
+        # the winner's kernel agrees with the default's
+        d = ssr_call(nest, body, ops)
+        t = ssr_call(nest, body, ops, schedule=res.schedule)
+        np.testing.assert_allclose(float(d), float(t), rtol=1e-6)
+
+    def test_second_call_hits_cache(self, cache):
+        res1, *_ = self._tune(cache)
+        res2, *_ = self._tune(cache)
+        assert res2.from_cache and res2.measured == 0
+        assert res2.schedule == res1.schedule
+
+    def test_force_remeasures(self, cache):
+        self._tune(cache)
+        res, *_ = self._tune(cache, force=True)
+        assert not res.from_cache and res.measured == 2
+
+    def test_nest_change_is_a_cache_miss(self, cache):
+        self._tune(cache, n=2048)
+        res, *_ = self._tune(cache, n=4096)
+        assert not res.from_cache   # different nest -> different key
+
+    def test_lookup_returns_winner_then_default_after_invalidate(self, cache):
+        res, nest, ops, _ = self._tune(cache)
+        assert autotune.lookup(nest, ops, mode="reduce",
+                               cache=cache) == res.schedule
+        assert autotune.invalidate(nest, ops, mode="reduce", cache=cache)
+        assert autotune.lookup(nest, ops, mode="reduce",
+                               cache=cache) == DEFAULT_SCHEDULE
+
+    def test_epoch_bumps_on_commit(self, cache):
+        e0 = autotune.epoch()
+        self._tune(cache)
+        assert autotune.epoch() > e0

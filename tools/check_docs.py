@@ -1,13 +1,15 @@
 """Docs gate for CI: link integrity, generated-docs staleness, coverage.
 
-Three checks, all hard failures:
+Four checks, all hard failures:
 
 1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
    files resolves to an existing file (http/mailto/anchor links skipped);
-2. the committed ``EXPERIMENTS.md`` matches a fresh render from
+2. the schedule autotuner stays documented: DESIGN.md keeps its ``## 9``
+   section + §2 correspondence row, the README its autotune quickstart;
+3. the committed ``EXPERIMENTS.md`` matches a fresh render from
    ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
    models without regenerating it, fails the build;
-3. every kernel in ``repro.kernels.registry`` appears (as `` `name` ``) in
+4. every kernel in ``repro.kernels.registry`` appears (as `` `name` ``) in
    the README kernel table — registering a kernel without documenting it
    fails the build.
 
@@ -15,7 +17,7 @@ Run from anywhere::
 
     python tools/check_docs.py [--skip-experiments]
 
-``--skip-experiments`` skips checks 2 and 3 (both import jax).
+``--skip-experiments`` skips checks 3 and 4 (both import jax).
 """
 
 from __future__ import annotations
@@ -83,6 +85,33 @@ def check_experiments() -> List[str]:
         tofile="EXPERIMENTS.md (regenerated)", lineterm=""))
 
 
+def check_autotune_docs() -> List[str]:
+    """The autotuner must stay documented: DESIGN.md §9 + README quickstart.
+
+    Pure-text check (no jax import): DESIGN.md needs a ``## 9`` section
+    mentioning the autotuner and the §2 correspondence row pointing at
+    ``core/autotune.py``; the README needs the autotune quickstart.
+    """
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 9\..*autotun", design,
+                     re.MULTILINE | re.IGNORECASE):
+        problems.append("DESIGN.md: missing '## 9.' autotuner section")
+    if "core/autotune.py" not in design:
+        problems.append(
+            "DESIGN.md: §2 correspondence table has no core/autotune.py row")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    if not re.search(r"^### Autotune quickstart", readme, re.MULTILINE):
+        problems.append("README.md: missing '### Autotune quickstart'")
+    if "--autotune-only" not in readme:
+        problems.append(
+            "README.md: autotune quickstart does not show the gated "
+            "kernel_bench --autotune-only entry point")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -108,6 +137,15 @@ def main(argv=None) -> int:
             print(f"  {path}: ({target})")
     else:
         print(f"markdown links ok across {len(_md_files())} files")
+
+    autotune_problems = check_autotune_docs()
+    if autotune_problems:
+        ok = False
+        print("\nautotuner docs gate:")
+        for p in autotune_problems:
+            print(f"  {p}")
+    else:
+        print("autotuner docs present (DESIGN.md §9 + README quickstart)")
 
     if not args.skip_experiments:
         diff = check_experiments()
