@@ -136,7 +136,7 @@ def _max_abs_diff(a, b) -> float:
 
 
 def _dispatch_provenance() -> Dict:
-    """Schedule provenance of the last executed cluster call (schema 2).
+    """Schedule provenance of the last executed cluster call (schema 3).
 
     ``cluster_call``/``cluster_chain_call`` record the per-core schedule
     they actually dispatched (tuned from the autotuner cache, or default)
@@ -156,7 +156,8 @@ def _dispatch_provenance() -> Dict:
     return {"rows": sched.rows, "lanes": sched.lanes,
             "grid": None,
             "tile_bounds": list(LAST_DISPATCH["tile_bounds"]),
-            "tuned": bool(LAST_DISPATCH["tuned"])}
+            "tuned": bool(LAST_DISPATCH["tuned"]),
+            "buffer_depth": sched.buffer_depth}
 
 
 def sweep(quick: bool = False) -> List[Dict]:
@@ -281,9 +282,11 @@ def validate_cluster_json(path: str) -> None:
     if not isinstance(results, list) or not results:
         raise ValueError("results must be a non-empty list")
     for row in results:
-        # schema 2: every row carries schedule provenance
+        # schema 3: every row carries schedule provenance, FIFO depth
+        # included (cluster rows record the dispatched per-core schedule's
+        # depth via LAST_DISPATCH)
         for field in ("name", "group", "variant", "value", "units",
-                      "rows", "lanes", "grid", "tuned"):
+                      "rows", "lanes", "grid", "tuned", "buffer_depth"):
             if field not in row:
                 raise ValueError(f"row missing {field!r}: {row}")
     for row in results:

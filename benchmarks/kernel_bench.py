@@ -21,14 +21,18 @@ machine-readable perf trajectory tracked across PRs::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
 
-Schema (version 2): ``{"schema": 2, "generated_unix": float, "quick": bool,
+Schema (version 3): ``{"schema": 3, "generated_unix": float, "quick": bool,
 "results": [{"name", "group", "variant", "value", "units", "rows",
-"lanes", "grid", "tuned", ...}, ...]}`` — every row carries schedule
-provenance (the block geometry that produced it and whether it came from
-the autotuner).  The ``autotune`` group races tuned-vs-default schedules
-and is gated: tuned may never be slower than default beyond noise, and —
-in full (non ``--quick``) runs, where iteration counts rise above CI-box
-noise — at least one kernel must win with a non-default schedule.
+"lanes", "grid", "tuned", "buffer_depth", ...}, ...]}`` — every row
+carries schedule provenance (the block geometry that produced it, the data
+mover's FIFO depth, and whether it came from the autotuner).  The
+``autotune`` group races tuned-vs-default schedules and is gated: tuned may
+never be slower than default beyond noise, and — in full (non ``--quick``)
+runs, where iteration counts rise above CI-box noise — at least one kernel
+must win with a non-default schedule.  The ``pipeline`` group is the
+bandwidth-bound buffer-depth sweep (large-stride gemv + stencil1d): the
+autotuned pipelined schedule races the synchronous depth-2 default under a
+≤ 1e-5 agreement gate, and a full run must find a depth > 2 winner.
 """
 
 from __future__ import annotations
@@ -55,7 +59,10 @@ RNG = np.random.default_rng(0)
 #: produced it (``rows``/``lanes``), the grid it launched (``None`` where
 #: no Pallas grid is involved, e.g. pure-model rows) and a ``tuned`` flag
 #: (True when the schedule came from the autotuner, not the default).
-BENCH_SCHEMA = 2
+#: v3: adds ``buffer_depth`` — the data mover's FIFO depth the row ran
+#: under (2 = synchronous Pallas double-buffer, > 2 = explicit N-deep DMA
+#: rotation) — and the gated ``pipeline`` group.
+BENCH_SCHEMA = 3
 
 
 def _row(name: str, group: str, variant: str, value: float, units: str,
@@ -64,7 +71,8 @@ def _row(name: str, group: str, variant: str, value: float, units: str,
            "value": float(value), "units": units,
            # schedule provenance defaults: the untuned default geometry
            "rows": DEFAULT_SCHEDULE.rows, "lanes": DEFAULT_SCHEDULE.lanes,
-           "grid": None, "tuned": False}
+           "grid": None, "tuned": False,
+           "buffer_depth": DEFAULT_SCHEDULE.buffer_depth}
     row.update(extras)
     return row
 
@@ -73,7 +81,7 @@ def _sched_extras(sched: Schedule, grid=None, *, tuned: bool) -> Dict:
     """Provenance fields for a row that ran under ``sched``."""
     return {"rows": sched.rows, "lanes": sched.lanes,
             "grid": list(grid) if grid is not None else None,
-            "tuned": bool(tuned)}
+            "tuned": bool(tuned), "buffer_depth": sched.buffer_depth}
 
 
 def _time(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -430,6 +438,181 @@ def validate_autotune_rows(results: Sequence[Dict],
 
 
 # --------------------------------------------------------------------------
+# Pipelined emission sweep: buffer-depth race on bandwidth-bound kernels
+# --------------------------------------------------------------------------
+
+#: Numeric agreement gate of the pipeline sweep: the pipelined schedule
+#: must match the synchronous default to ≤ 1e-5 — tighter than the entry
+#: tolerances because only operand *delivery* changes, never arithmetic.
+PIPE_AGREEMENT_TOL = 1e-5
+
+#: The kernels the pipeline gate covers: the two bandwidth-bound entries
+#: (GEMV streams the whole matrix once per call; the stencil is ~1 fmadd
+#: per byte), where hiding the fetch behind compute is the whole game.
+PIPE_GATED = ("gemv", "stencil1d")
+
+
+def _pipeline_cases(quick: bool):
+    """(name, nest, operands, candidates, call, grid, tol) per kernel.
+
+    Large-stride shapes — bigger than the §4.2 example sizes — so the
+    per-step fetch the rotation hides is resolvable above timing noise.
+    Candidates cross the depth choices with each kernel's native geometry
+    knob (the stencil's block width); depth 2 is always among them, so the
+    sweep races the synchronous default by construction.
+    """
+    from repro.core import compiler
+    from repro.kernels.gemv import ssr_gemv
+    from repro.kernels.stencil import TAPS, ssr_stencil1d
+
+    depths = (2, 3) if quick else (2, 3, 4)
+    cases = []
+
+    m, n = (64, 1024) if quick else (256, 4096)
+    a = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    xv = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    cases.append((
+        "gemv", compiler.gemv_nest(m, n), {"A": a, "x": xv},
+        [Schedule(buffer_depth=d) for d in depths],
+        lambda s, _a=a, _x=xv: ssr_gemv(_a, _x, schedule=s),
+        (m // 8,), {"rtol": PIPE_AGREEMENT_TOL, "atol": PIPE_AGREEMENT_TOL}))
+
+    n_st = (1 << 14) if quick else (1 << 16)
+    xs = jnp.asarray(RNG.standard_normal(n_st + TAPS - 1), jnp.float32)
+    ws = jnp.asarray(RNG.standard_normal(TAPS) * 0.3, jnp.float32)
+    widths = (128, 512) if quick else (128, 512, 1024)
+    cases.append((
+        "stencil1d", compiler.stencil_nest(n_st, TAPS),
+        {"x": xs, "w": ws},
+        [Schedule(lanes=w, buffer_depth=d)
+         for w in widths for d in depths],
+        lambda s, _x=xs, _w=ws: ssr_stencil1d(_x, _w, schedule=s),
+        None, {"rtol": PIPE_AGREEMENT_TOL, "atol": PIPE_AGREEMENT_TOL}))
+    return cases
+
+
+def bench_pipeline(quick: bool = False) -> List[Dict]:
+    """Race the autotuned pipelined schedule vs the synchronous default.
+
+    Hard failures (exit 1), mirrored in ``validate_pipeline_rows``:
+
+    * the pipelined winner's output disagrees with the synchronous
+      depth-2 default beyond ``PIPE_AGREEMENT_TOL`` (delivery must never
+      change the numbers);
+    * the committed winner re-races slower than ``TUNE_GATE_TOL`` ×
+      default on any gated kernel (never-slower is structural: a race
+      loser is replaced by the default before commit);
+    * in full runs, no kernel won with ``buffer_depth > 2`` — the
+      latency-hiding claim this sweep exists to gate.
+    """
+    import dataclasses as _dc
+
+    from repro.core import autotune
+
+    rows: List[Dict] = []
+    iters = 3 if quick else 7
+    deep_wins = 0
+    print(f"\n== pipelined emission sweep (best-of-{iters} μs/call) ==")
+    for name, nest, operands, cands, call, grid, tol \
+            in _pipeline_cases(quick):
+        res = autotune.autotune(
+            nest, None, operands, mode="map", out_dtype="float32",
+            call=call, candidates=cands, top_k=len(cands),
+            warmup=1, iters=iters, force=True)
+
+        tuned_out = call(res.schedule)
+        sync_out = call(DEFAULT_SCHEDULE)
+        for g, w in zip(jax.tree.leaves(tuned_out),
+                        jax.tree.leaves(sync_out)):
+            if not np.allclose(np.asarray(g), np.asarray(w), **tol):
+                autotune.global_cache().invalidate(res.key)
+                print(f"FAIL {name}: pipelined schedule disagrees with the "
+                      f"synchronous default beyond {PIPE_AGREEMENT_TOL} "
+                      "(cache entry invalidated)", file=sys.stderr)
+                raise SystemExit(1)
+
+        # Final interleaved race vs the synchronous default — same
+        # commit-the-race-verdict contract as bench_autotune: a screening
+        # winner that loses here is replaced by the default in the cache,
+        # so the persisted schedule is never slower as measured.
+        pipelined = res.schedule.buffer_depth > 2
+        if res.schedule != DEFAULT_SCHEDULE:
+            tf, td = _interleaved_best(lambda: call(res.schedule),
+                                       lambda: call(DEFAULT_SCHEDULE),
+                                       (), {}, warmup=2, iters=max(7, iters))
+            if tf > td:
+                print(f"  {name}: pipelined winner lost the final race "
+                      f"({tf:.1f} vs {td:.1f} μs) — committing default")
+                autotune.global_cache().put(res.key, DEFAULT_SCHEDULE, meta={
+                    "tuned_us": td, "default_us": td,
+                    "candidates": res.candidates, "raced_back": True})
+                res = _dc.replace(res, schedule=DEFAULT_SCHEDULE,
+                                  tuned_us=td, default_us=td)
+                tf, pipelined = td, False
+        else:
+            tf = td = _time(lambda: call(res.schedule), iters=max(5, iters))
+        if tf > td * TUNE_GATE_TOL:   # tripwire: unreachable by design
+            print(f"FAIL {name}: pipelined {tf:.1f} μs slower than "
+                  f"sync default {td:.1f} μs × {TUNE_GATE_TOL}",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        if pipelined and tf < td:
+            deep_wins += 1
+        s = res.schedule
+        print(f"{name:12s} depth={s.buffer_depth} lanes={s.lanes} "
+              f"{tf:10.1f} μs  sync default {td:10.1f} μs  "
+              f"speedup {td / tf:5.2f}x  candidates {res.candidates}")
+        rows.append(_row(f"pipeline/{name}", "pipeline", "pipelined", tf,
+                         "us/call", speedup=td / tf,
+                         candidates=res.candidates, cache_key=res.key,
+                         agreement_tol=PIPE_AGREEMENT_TOL,
+                         **_sched_extras(s, grid, tuned=pipelined)))
+        rows.append(_row(f"pipeline/{name}", "pipeline", "sync", td,
+                         "us/call",
+                         **_sched_extras(DEFAULT_SCHEDULE, grid,
+                                         tuned=False)))
+    if deep_wins == 0:
+        if not quick:
+            print("FAIL pipeline: no bandwidth-bound kernel won with "
+                  "buffer_depth > 2", file=sys.stderr)
+            raise SystemExit(1)
+        print("WARN pipeline: no depth > 2 winner in this --quick run "
+              "(noise-dominated); the full run gates this hard")
+    print(f"pipelined winners: {deep_wins}/{len(PIPE_GATED)}")
+    return rows
+
+
+def validate_pipeline_rows(results: Sequence[Dict],
+                           require_deep: bool = True) -> None:
+    """The pipeline acceptance gate, re-applied to persisted rows.
+
+    ``require_deep=False`` (quick/CI-smoke runs) keeps only the robust
+    half — pipelined never slower than the synchronous default; a full
+    artifact must additionally record a ``buffer_depth > 2`` winner.
+    """
+    by_kernel: Dict[str, Dict[str, Dict]] = {}
+    for r in results:
+        if r.get("group") == "pipeline":
+            by_kernel.setdefault(r["name"].split("/")[1], {})[r["variant"]] = r
+    for kern in PIPE_GATED:
+        pair = by_kernel.get(kern)
+        if not pair or "pipelined" not in pair or "sync" not in pair:
+            raise ValueError(f"no pipeline rows for {kern!r}")
+        if pair["pipelined"]["value"] > pair["sync"]["value"] * TUNE_GATE_TOL:
+            raise ValueError(
+                f"{kern}: pipelined {pair['pipelined']['value']} slower "
+                f"than sync {pair['sync']['value']} x {TUNE_GATE_TOL}")
+        if pair["sync"].get("buffer_depth") != 2:
+            raise ValueError(f"{kern}: sync row must record depth 2")
+    if require_deep and not any(
+            p["pipelined"].get("buffer_depth", 2) > 2 and
+            p["pipelined"]["value"] < p["sync"]["value"]
+            for p in by_kernel.values()
+            if "pipelined" in p and "sync" in p):
+        raise ValueError("no kernel won with buffer_depth > 2")
+
+
+# --------------------------------------------------------------------------
 # Fused (stream-chained) variants vs their unfused compositions
 # --------------------------------------------------------------------------
 
@@ -555,9 +738,10 @@ def validate_bench_json(path: str) -> None:
     if not isinstance(results, list) or not results:
         raise ValueError("results must be a non-empty list")
     for row in results:
-        # schema 2: every row carries schedule provenance
+        # schema 3: every row carries schedule provenance, FIFO depth
+        # included
         for field in ("name", "group", "variant", "value", "units",
-                      "rows", "lanes", "grid", "tuned"):
+                      "rows", "lanes", "grid", "tuned", "buffer_depth"):
             if field not in row:
                 raise ValueError(f"row missing {field!r}: {row}")
         if not isinstance(row["value"], (int, float)):
@@ -567,7 +751,10 @@ def validate_bench_json(path: str) -> None:
         raise ValueError(f"no fused results recorded (groups: {groups})")
     if "autotune" not in groups:
         raise ValueError(f"no autotune results recorded (groups: {groups})")
+    if "pipeline" not in groups:
+        raise ValueError(f"no pipeline results recorded (groups: {groups})")
     validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
+    validate_pipeline_rows(results, require_deep=not doc.get("quick"))
     # compiled-nest gate: gemm/stencil1d must be present, numerically in
     # agreement, and model-profitable
     nest_rows = {(r["name"].split("/")[1], r["variant"]): r
@@ -585,13 +772,20 @@ def validate_bench_json(path: str) -> None:
 
 
 def validate_autotune_json(path: str) -> None:
-    """Schema + autotune gate for the standalone ``--autotune-only`` run."""
+    """Schema + autotune + pipeline gates for the standalone
+    ``--autotune-only`` run (the CI ``autotune-smoke`` job)."""
     with open(path) as f:
         doc = json.load(f)
     if doc.get("schema") != BENCH_SCHEMA:
         raise ValueError(f"bad schema: {doc.get('schema')!r}")
     results = doc.get("results") or []
+    for row in results:
+        for field in ("name", "group", "variant", "value", "units",
+                      "rows", "lanes", "grid", "tuned", "buffer_depth"):
+            if field not in row:
+                raise ValueError(f"row missing {field!r}: {row}")
     validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
+    validate_pipeline_rows(results, require_deep=not doc.get("quick"))
 
 
 def isolate_schedule_cache() -> None:
@@ -630,6 +824,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.autotune_only:
         rows = bench_autotune(quick=args.quick)
+        rows += bench_pipeline(quick=args.quick)
         write_bench_json(rows, args.out, args.quick, subset="autotune")
         validate_autotune_json(args.out)
         return 0
@@ -640,6 +835,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rows += bench_stream_reports()
     rows += bench_nest_gate()
     rows += bench_autotune(quick=args.quick)
+    rows += bench_pipeline(quick=args.quick)
     rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)
     write_bench_json(rows, args.out, args.quick)
     validate_bench_json(args.out)

@@ -15,6 +15,14 @@ VMEM/registers; recorded as such).  The dominant term is the bottleneck the
 gives the "useful fraction" dot_FLOPs vs model FLOPs (catching remat /
 redundant-compute waste — note remat intentionally recomputes ~1 extra
 forward, so a healthy train cell sits near 4/3 overhead).
+
+When a ``BENCH_kernels.json`` (schema 3) sits next to the dry-run records,
+:func:`kernel_points` additionally reports the *measured* bandwidth-bound
+kernel points from the pipelined-emission sweep: per (kernel × buffer
+depth) the wall clock and its speedup over the synchronous default —
+deeper FIFOs hide the fetch behind compute, shifting the bandwidth-bound
+points left toward the compute ceiling without changing arithmetic
+intensity.
 """
 
 from __future__ import annotations
@@ -158,6 +166,52 @@ def table(rows: List[dict], mesh: str = "pod16x16") -> str:
     return "\n".join(out)
 
 
+def kernel_points(path: str = "BENCH_kernels.json") -> List[dict]:
+    """Measured bandwidth-bound points from the pipelined-emission sweep.
+
+    Reads the schema-3 ``pipeline`` group rows (gemv/stencil1d at each
+    raced buffer depth) and pairs every pipelined row with its synchronous
+    baseline: one point per (kernel × depth), carrying the wall clock and
+    the latency-hiding speedup.  Missing/old-schema files return ``[]`` —
+    the dry-run roofline stands alone.
+    """
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema", 0) < 3:
+        return []
+    sync: Dict[str, dict] = {}
+    piped: Dict[str, dict] = {}
+    for r in doc.get("results", []):
+        if r.get("group") != "pipeline":
+            continue
+        kern = r["name"].split("/")[1]
+        (sync if r["variant"] == "sync" else piped)[kern] = r
+    points = []
+    for kern, row in sorted(piped.items()):
+        base = sync.get(kern)
+        if base is None:
+            continue
+        points.append({
+            "kernel": kern, "buffer_depth": row.get("buffer_depth", 2),
+            "us": row["value"], "sync_us": base["value"],
+            "speedup": base["value"] / row["value"] if row["value"] else 0.0,
+            "tuned": bool(row.get("tuned")),
+        })
+    return points
+
+
+def kernel_table(points: List[dict]) -> str:
+    out = [f"{'kernel':12s} {'depth':>5s} {'us/call':>10s} "
+           f"{'sync us':>10s} {'speedup':>8s}"]
+    for p in points:
+        out.append(f"{p['kernel']:12s} {p['buffer_depth']:5d} "
+                   f"{p['us']:10.1f} {p['sync_us']:10.1f} "
+                   f"{p['speedup']:7.2f}x")
+    return "\n".join(out)
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
     rows = load(path)
@@ -171,6 +225,13 @@ def main() -> None:
     for r in rows:
         if r["mesh"] == "pod16x16" and not r["tag"]:
             print(f"{r['arch']}/{r['shape']}: [{r['dominant']}] {advice(r)}")
+    points = kernel_points(os.path.join(os.path.dirname(path) or ".",
+                                        "BENCH_kernels.json"))
+    if points:
+        print()
+        print("=== measured kernel points (pipelined emission, "
+              "latency-hiding shift) ===")
+        print(kernel_table(points))
 
 
 if __name__ == "__main__":

@@ -12,9 +12,10 @@ the single hard-coded ``DEFAULT_POLICY``.  This module makes the schedule a
    Legality (:func:`schedule_is_legal`) is decided by the lowering itself
    (a candidate the §3.2 pipeline rejects is discarded), plus the hardware
    constraints the lowering does not own: lane divisibility (a TPU lane is
-   128 wide) and the VMEM working-set budget (double-buffered stream
-   blocks + kernel-resident scratch, the :class:`~repro.core.ssr.
-   StreamReport` ``scratch_bytes`` accounting);
+   128 wide) and the *depth-aware* VMEM working-set budget
+   (``buffer_depth`` buffers per stream block via :func:`repro.core.ssr.
+   stream_vmem_bytes` + kernel-resident scratch, the :class:`~repro.core.
+   ssr.StreamReport` accounting);
 2. **model prune** — :func:`model_cost` ranks candidates with the
    Eq. (1)–(3) instruction model (``ssrify`` on the *padded* iteration
    space, so padding blowup is charged) plus a per-grid-step dispatch
@@ -53,7 +54,8 @@ from .compiler import LoopNest, ssrify
 from .lowering import (DEFAULT_SCHEDULE, LoweredNest, LoweredPlan,
                        LoweringError, Schedule, _plan_for)
 from .nest_analysis import auto_lanes
-from .ssr import VMEM_BUDGET_BYTES
+from .ssr import (DEFAULT_BUFFER_DEPTH, MAX_BUFFER_DEPTH, VMEM_BUDGET_BYTES,
+                  stream_vmem_bytes)
 from .stream import Direction
 
 #: Bump when the on-disk entry format (or the meaning of a schedule's
@@ -75,6 +77,10 @@ _LANES_FACTORS = (1, 2, 4)
 _ROWS_FACTORS = (8, 32)
 _QUICK_ROWS = (8, 16)
 _QUICK_LANES = (128, 256)
+#: Data-mover FIFO depths the generator explores (2 = the synchronous
+#: Pallas double-buffer; deeper = explicit N-deep DMA rotation).
+_DEPTH_CHOICES = (2, 3, 4)
+_QUICK_DEPTHS = (2, 3)
 
 
 def default_cache_dir() -> str:
@@ -339,26 +345,32 @@ def _lower_candidate(nest: LoopNest, sched: Schedule):
 
 
 def _stream_block_bytes(lowered, itemsize: int = 4) -> int:
-    """Double-buffered stream blocks + kernel-resident scratch, in bytes.
+    """Depth-buffered stream blocks + kernel-resident scratch, in bytes.
 
-    Mirrors :meth:`repro.core.ssr.StreamReport` accounting: every stream
-    block is double-buffered (FIFO depth 2); the contraction accumulator /
-    reduce accumulator is single-buffered scratch (``scratch_bytes``).
+    Mirrors :meth:`repro.core.ssr.StreamReport` accounting exactly — both
+    route every stream block through :func:`repro.core.ssr.
+    stream_vmem_bytes` at the schedule's ``buffer_depth``, so the budget
+    the tuner enforces is the budget the emitter allocates (the depth
+    knob cannot drift between them).  The contraction / reduce
+    accumulator is single-buffered scratch (``scratch_bytes``).
     """
+    depth = lowered.schedule.buffer_depth
     total = 0
     if isinstance(lowered, LoweredNest):
         for s in lowered.in_streams:
-            total += 2 * math.prod(s.stream.block_shape) * itemsize
+            total += stream_vmem_bytes(
+                math.prod(s.stream.block_shape) * itemsize, depth)
         out_block = math.prod(lowered.out_stream.stream.block_shape)
-        total += 2 * out_block * itemsize
+        total += stream_vmem_bytes(out_block * itemsize, depth)
         if lowered.contraction_axes:     # the VMEM accumulator scratch
             total += out_block * itemsize
         return total
     assert isinstance(lowered, LoweredPlan)
     for s in lowered.in_streams:
-        total += 2 * math.prod(s.stream.block_shape) * itemsize
+        total += stream_vmem_bytes(
+            math.prod(s.stream.block_shape) * itemsize, depth)
     block = lowered.policy.rows * lowered.policy.lanes
-    total += 2 * block * itemsize        # synthesised output stream
+    total += stream_vmem_bytes(block * itemsize, depth)  # synthesised output
     total += block * itemsize            # reduce accumulator scratch
     return total
 
@@ -373,6 +385,9 @@ def schedule_is_legal(nest: LoopNest, sched: Schedule, *,
         return False, f"rows {sched.rows} < 1"
     if sched.lanes_tile_factor < 1 or sched.rows_tile_factor < 1:
         return False, "tile factors must be >= 1"
+    if not DEFAULT_BUFFER_DEPTH <= sched.buffer_depth <= MAX_BUFFER_DEPTH:
+        return False, (f"buffer_depth {sched.buffer_depth} outside "
+                       f"[{DEFAULT_BUFFER_DEPTH}, {MAX_BUFFER_DEPTH}]")
     try:
         lowered = _lower_candidate(nest, sched)
     except LoweringError as e:
@@ -422,6 +437,7 @@ def candidate_schedules(nest: LoopNest, *, quick: bool = False,
     """
     rowses = _QUICK_ROWS if quick else _ROWS_CHOICES
     laneses = _QUICK_LANES if quick else _LANES_CHOICES
+    depths = _QUICK_DEPTHS if quick else _DEPTH_CHOICES
     raw: List[Schedule] = [DEFAULT_SCHEDULE]
     for rows, lanes in itertools.product(rowses, laneses):
         raw.append(Schedule(rows=rows, lanes=lanes))
@@ -433,6 +449,14 @@ def candidate_schedules(nest: LoopNest, *, quick: bool = False,
                                     rows_tile_factor=rf))
         for order in _axis_orders(nest):
             raw.append(Schedule(axis_order=order))
+    # Depth × geometry cross: every geometry candidate at every FIFO
+    # depth, so the tuner can trade run-ahead against tile size under the
+    # depth-aware VMEM budget (a deep+large candidate that busts it is
+    # simply filtered below).
+    for s in list(raw):
+        for d in depths:
+            if d != s.buffer_depth:
+                raw.append(dataclasses.replace(s, buffer_depth=d))
 
     seen, out = set(), []
     for s in raw:
@@ -480,11 +504,22 @@ def model_cost(nest: LoopNest, sched: Schedule, *,
     models the per-block loop/DMA overhead that makes tiny blocks slow.
     Never raises for lane-legal candidates — geometry the lowering cannot
     express falls back to the closed-form block count.
+
+    The step charge splits evenly into loop bookkeeping and DMA latency;
+    the latency half shrinks as ``buffer_depth − 1`` in-flight fetches
+    cover it (the data mover's run-ahead hides the fetch behind compute).
+    At the default depth 2 the charge is exactly ``step_cost`` — the
+    historical model — so deeper buffering is strictly cheaper per step
+    and the tuner can justify smaller tiles at deeper FIFOs for
+    bandwidth-bound nests.  Measurement still decides: the model only
+    ranks who gets wall-clocked.
     """
     padded, steps = _padded_bounds(nest, sched)
     padded_nest = dataclasses.replace(nest, bounds=padded)
     plan = ssrify(padded_nest, num_lanes=auto_lanes(padded_nest), force=True)
-    return float(plan.n_ssr + step_cost * steps)
+    half = step_cost / 2.0
+    per_step = half + half / (sched.buffer_depth - 1)
+    return float(plan.n_ssr + per_step * steps)
 
 
 def schedule_fingerprint(nest: LoopNest, sched: Schedule) -> Any:
@@ -508,10 +543,11 @@ def schedule_fingerprint(nest: LoopNest, sched: Schedule) -> Any:
                           if lowered.grid[k] > 1)
         return ("nest", lowered.grid, lowered.tiles, eff_order,
                 tuple(s.stream.block_shape for s in lowered.in_streams),
-                lowered.out_stream.stream.block_shape, sched.acc_dtype)
+                lowered.out_stream.stream.block_shape, sched.acc_dtype,
+                sched.buffer_depth)
     return ("flat", lowered.grid,
             tuple(s.stream.block_shape for s in lowered.in_streams),
-            sched.acc_dtype)
+            sched.acc_dtype, sched.buffer_depth)
 
 
 def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
@@ -528,7 +564,7 @@ def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
     """
     def ident(s: Schedule):
         return (s.rows, s.lanes, s.lanes_tile_factor, s.rows_tile_factor,
-                s.axis_order or (), s.acc_dtype)
+                s.axis_order or (), s.acc_dtype, s.buffer_depth)
 
     ranked = sorted(candidates,
                     key=lambda s: (model_cost(nest, s,

@@ -574,6 +574,26 @@ def stencil_nest(n: int, taps: int, *, lanes: int = 128) -> LoopNest:
     )
 
 
+def gemv_nest(m: int, n: int) -> LoopNest:
+    """Cost-model nest for y[m] = A[m,n]·x[n] (kernels/gemv.py).
+
+    A walks both loops dense (row-major), x repeats across rows (the §2.3
+    repeat register — coefficient 0 on the m level), y writes once per row.
+    The *execution* schedule stays hand-written under a ``lowering_waiver``
+    (row-block geometry with an in-block reduction); this nest is its
+    Eq. (1)–(3) accounting and the autotuner's cache key — the schedule's
+    only effective knob there is ``buffer_depth``, the geometry being
+    pinned by the launch.
+    """
+    return LoopNest(
+        bounds=(m, n),
+        refs=(MemRef("A", Direction.READ, (n, 1)),
+              MemRef("x", Direction.READ, (0, 1)),   # repeated per row
+              MemRef("y", Direction.WRITE, (1, 0))),
+        compute_per_level=(0, 1),
+    )
+
+
 def gemm_nest(m: int, n: int, k: int) -> LoopNest:
     """C[m,n] += A[m,k]·B[k,n] — 3-deep, with A reused across n (repeat).
 

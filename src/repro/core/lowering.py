@@ -118,7 +118,14 @@ class Schedule:
       remain consecutive grid steps.  ``None`` keeps loop order;
     * ``acc_dtype`` — the contraction accumulator dtype (dtype *name*, so
       the dataclass stays hashable/JSON-serialisable).  f32 is the MXU/VPU
-      accumulation width and the repo-wide default.
+      accumulation width and the repo-wide default;
+    * ``buffer_depth`` — the data mover's FIFO depth (paper §2.3: the mover
+      "proactively performs memory reads").  2 keeps Pallas's synchronous
+      double-buffered pipeline; > 2 emits the explicit N-deep DMA rotation
+      (``core/ssr.py::_pipelined_call``) that prefetches grid step
+      ``i + depth − 1`` while step ``i`` computes.  VMEM budgeting scales
+      with it (``ssr.stream_vmem_bytes``), so the autotuner trades depth
+      against tile size under one budget.
 
     Frozen + hashable: a ``Schedule`` is a cache key component everywhere
     (kernel cache, schedule cache, benchmark provenance).
@@ -130,6 +137,7 @@ class Schedule:
     rows_tile_factor: int = _ROWS_TILE_FACTOR
     axis_order: Optional[Tuple[int, ...]] = None
     acc_dtype: str = "float32"
+    buffer_depth: int = 2
 
     @property
     def policy(self) -> BlockPolicy:
@@ -157,7 +165,8 @@ class Schedule:
                    rows_tile_factor=int(d.get("rows_tile_factor",
                                               _ROWS_TILE_FACTOR)),
                    axis_order=tuple(int(a) for a in ao) if ao else None,
-                   acc_dtype=str(d.get("acc_dtype", "float32")))
+                   acc_dtype=str(d.get("acc_dtype", "float32")),
+                   buffer_depth=int(d.get("buffer_depth", 2)))
 
 
 DEFAULT_SCHEDULE = Schedule()
@@ -901,7 +910,8 @@ def _assemble_kernel(grid: Tuple[int, ...], policy: BlockPolicy,
                      in_streams: Sequence[BlockStream],
                      compute: Callable, n_links: int, mode: str,
                      out_dtype, part_shape: Optional[Tuple[int, ...]],
-                     interpret: Optional[bool]) -> Callable:
+                     interpret: Optional[bool],
+                     buffer_depth: int = 2) -> Callable:
     """Shared kernel assembler for single-nest and chained plans.
 
     ``compute(in_refs, link_refs)`` returns the per-step value; ``n_links``
@@ -983,6 +993,7 @@ def _assemble_kernel(grid: Tuple[int, ...], policy: BlockPolicy,
         out_shapes=out_shapes, scratch_shapes=scratch,
         interpret=interpret,
         dimension_semantics=semantics,
+        buffer_depth=buffer_depth,
     )
 
 
@@ -1008,7 +1019,7 @@ def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
     return _assemble_kernel(lowered.grid, lowered.policy,
                             [s.stream for s in lowered.in_streams],
                             compute, 0, mode, out_dtype, part_shape,
-                            interpret)
+                            interpret, lowered.schedule.buffer_depth)
 
 
 def _build_nest_kernel(lowered: LoweredNest, body: Callable,
@@ -1078,6 +1089,7 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
         scratch_shapes=scratch,
         interpret=interpret,
         dimension_semantics=lowered.semantics,
+        buffer_depth=lowered.schedule.buffer_depth,
     )
 
 
@@ -1159,7 +1171,7 @@ def _build_chain_kernel(lowered: LoweredChain, bodies: Sequence[Callable],
     return _assemble_kernel(lowered.grid, policy,
                             [s.stream for s in lowered.in_streams],
                             compute, n_links, mode, out_dtype, part_shape,
-                            interpret)
+                            interpret, lowered.schedule.buffer_depth)
 
 
 def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],

@@ -12,7 +12,14 @@ This is the TPU-native embodiment of the SSR extension.  The correspondence
   schedule the paper's AGU could not generate is rejected.
 * **data mover + FIFO prefetch** → Pallas's double-buffered HBM→VMEM DMA
   pipeline.  Block ``i+1`` is fetched while block ``i`` computes, exactly the
-  "proactively performs memory reads" behaviour of §2.3.
+  "proactively performs memory reads" behaviour of §2.3.  The FIFO depth is
+  a *schedule knob* (``Schedule.buffer_depth``): depth 2 is Pallas's own
+  pipeline; depth > 2 emits an explicit N-deep rotation of VMEM scratch
+  buffers driven by ``make_async_copy`` DMAs, prefetching grid step
+  ``i+N−1`` while step ``i`` computes (see :func:`ssr_pallas`'s
+  ``buffer_depth``).  ``pltpu.emit_pipeline`` is *not* the emitter because
+  it exposes no buffer-depth knob — the rotation is hand-rolled so the
+  depth is actually honoured.
 * **repeat register** → an ``index_map`` that revisits the same block across
   consecutive grid steps (e.g. a GEMM A-panel reused for every N-tile); the
   pipeline recognises the unchanged index and skips the re-fetch, as the FIFO
@@ -34,6 +41,7 @@ import dataclasses
 import functools
 import itertools
 import math
+import os
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
@@ -47,6 +55,46 @@ from .stream import Direction
 VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 _LANE = 128
 _SUBLANE = {4: 8, 2: 16, 1: 32}  # min sublane tile per dtype byte width
+
+#: The data mover's FIFO depth bounds.  Depth 2 is the classic
+#: double-buffered pipeline (Pallas's own); deeper buffering trades VMEM
+#: for DMA-latency run-ahead.  ``MAX_BUFFER_DEPTH`` bounds the schedule
+#: search and keeps a runaway depth from eating the whole VMEM budget.
+DEFAULT_BUFFER_DEPTH = 2
+MAX_BUFFER_DEPTH = 8
+
+
+def stream_vmem_bytes(block_bytes: int,
+                      depth: int = DEFAULT_BUFFER_DEPTH) -> int:
+    """VMEM footprint of one stream's in-flight blocks: ``depth`` buffers.
+
+    THE single source of truth for the per-stream working-set budget —
+    :meth:`StreamReport` (here) and ``core/autotune.py``'s legality check
+    both call it, so the depth-aware accounting cannot drift between the
+    executor and the search.  Conservative by design: loop-invariant
+    streams rotate through one slot at run time but are still budgeted at
+    full depth.
+    """
+    return depth * block_bytes
+
+
+def pipeline_supported() -> bool:
+    """Whether the explicit N-deep DMA rotation can be emitted here.
+
+    The rotation needs the Pallas TPU primitives (``make_async_copy``,
+    DMA semaphores, VMEM scratch, the ANY memory space) — available on TPU
+    *and* in interpret mode on this jax version.  Absent primitives, or an
+    explicit ``REPRO_DISABLE_PIPELINE`` opt-out, fall back to the
+    synchronous (depth-2 Pallas pipeline) path; semantics are identical.
+    """
+    if os.environ.get("REPRO_DISABLE_PIPELINE"):
+        return False
+    try:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+    except ImportError:  # pragma: no cover - pallas always ships tpu here
+        return False
+    return all(hasattr(pltpu, attr) for attr in
+               ("make_async_copy", "SemaphoreType", "VMEM", "TPUMemorySpace"))
 
 
 def _on_tpu() -> bool:
@@ -135,6 +183,169 @@ def _unique_blocks(stream: BlockStream, grid: Tuple[int, ...]) -> int:
     return len(seen)
 
 
+def _compiler_params(dimension_semantics: Tuple[str, ...]):
+    """TPU compiler params across jax versions (TPUCompilerParams is the
+    0.4.x name; CompilerParams the newer one)."""
+    from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+    cls = getattr(pltpu, "TPUCompilerParams",
+                  getattr(pltpu, "CompilerParams", None))
+    if cls is None:  # pragma: no cover - one of the two always exists
+        return None
+    return cls(dimension_semantics=dimension_semantics)
+
+
+def _flat_strides(grid: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Row-major strides of the grid's flat step index."""
+    strides = [1] * len(grid)
+    for k in range(len(grid) - 2, -1, -1):
+        strides[k] = strides[k + 1] * grid[k + 1]
+    return tuple(strides)
+
+
+def _stream_is_invariant(stream: BlockStream, grid: Tuple[int, ...]) -> bool:
+    """True when the index map ignores every grid axis (repeat register)."""
+    affine = agu.affine_coefficients(stream.index_map, grid)
+    if affine is None:
+        return False
+    _, coeffs = affine
+    return all(int(x) == 0 for dim in coeffs for x in dim)
+
+
+def _pipelined_call(
+    body: Callable[..., None],
+    *,
+    grid: Tuple[int, ...],
+    in_streams: Sequence[BlockStream],
+    out_streams: Sequence[BlockStream],
+    out_shapes: Sequence[jax.ShapeDtypeStruct],
+    scratch_shapes: Sequence[Any],
+    buffer_depth: int,
+    interpret: bool,
+    extra_kwargs: dict,
+) -> Callable[..., Any]:
+    """Emit the explicit N-deep HBM→VMEM rotation (pipelined emission).
+
+    Inputs move to the ANY memory space (no Pallas block pipeline); each
+    read stream gets ``depth`` rotating VMEM scratch buffers and a DMA
+    semaphore array.  At flat grid step ``s`` the kernel *starts* the
+    fetch of step ``s + depth − 1`` (into slot ``(s+depth−1) % depth``),
+    *waits* on slot ``s % depth``, and hands the body that slot's block —
+    so ``depth − 1`` fetches are in flight while one block computes, the
+    paper's "proactively performs memory reads" at configurable run-ahead.
+    Step 0 primes the first ``depth − 1`` fetches.  Loop-invariant streams
+    (the repeat register) are fetched ONCE at step 0 and re-read from slot
+    0 every step — no re-fetch traffic at all.  Other revisit patterns
+    (e.g. a GEMM A-panel reused across N-tiles) re-fetch each step: the
+    rotation trades the sync pipeline's unchanged-index elision for
+    run-ahead depth.  Outputs keep their normal BlockSpecs — only operand
+    *delivery* changes, so numerics are bit-identical to the sync path.
+
+    The grid (and therefore ``pl.program_id``-based accumulator logic in
+    bodies) is preserved; every axis is sequential (``arbitrary``) because
+    the rotation state threads through consecutive steps.
+    """
+    from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+    n_in = len(in_streams)
+    n_out = len(out_streams)
+    steps = math.prod(grid)
+    strides = _flat_strides(grid)
+    depth = buffer_depth
+    invariant = tuple(_stream_is_invariant(s, grid) for s in in_streams)
+    zeros = tuple(0 for _ in grid)
+
+    def _slices(stream: BlockStream, g) -> Tuple[Any, ...]:
+        idx = stream.index_map(*g)
+        return tuple(pl.ds(i * b, b)
+                     for i, b in zip(idx, stream.block_shape))
+
+    def wrapped(*refs):
+        hbm = refs[:n_in]
+        outs = refs[n_in:n_in + n_out]
+        sc = refs[n_in + n_out:]
+        bufs, sems = sc[:n_in], sc[n_in:2 * n_in]
+        rest = sc[2 * n_in:]
+        ids = tuple(pl.program_id(k) for k in range(len(grid)))
+        s = ids[0]
+        for k in range(1, len(grid)):
+            s = s * grid[k] + ids[k]
+
+        def unflatten(step):
+            # works for python ints (priming) and traced ints (run-ahead)
+            return tuple((step // st) % g for st, g in zip(strides, grid))
+
+        def start(step, slot):
+            g = unflatten(step)
+            for i in range(n_in):
+                if invariant[i]:
+                    continue
+                pltpu.make_async_copy(
+                    hbm[i].at[_slices(in_streams[i], g)],
+                    bufs[i].at[slot], sems[i].at[slot]).start()
+
+        @pl.when(s == 0)
+        def _prime():
+            for i in range(n_in):      # repeat register: one fetch, ever
+                if invariant[i]:
+                    copy = pltpu.make_async_copy(
+                        hbm[i].at[_slices(in_streams[i], zeros)],
+                        bufs[i].at[0], sems[i].at[0])
+                    copy.start()
+                    copy.wait()
+            for j in range(min(depth - 1, steps)):
+                start(j, j)
+
+        nxt = s + depth - 1
+
+        @pl.when(nxt < steps)
+        def _prefetch():
+            start(nxt, nxt % depth)
+
+        slot = s % depth
+        blocks = []
+        for i in range(n_in):
+            if invariant[i]:
+                blocks.append(bufs[i].at[0])
+                continue
+            pltpu.make_async_copy(
+                hbm[i].at[_slices(in_streams[i], ids)],
+                bufs[i].at[slot], sems[i].at[slot]).wait()
+            blocks.append(bufs[i].at[slot])
+        body(*blocks, *outs, *rest)
+
+    def run(*arrays):
+        if len(arrays) != n_in:
+            raise ValueError(
+                f"pipelined kernel expects {n_in} operands, got "
+                f"{len(arrays)}")
+        for a, st in zip(arrays, in_streams):
+            if a.ndim != len(st.block_shape):
+                raise ValueError(
+                    f"stream '{st.name}': operand rank {a.ndim} != block "
+                    f"rank {len(st.block_shape)} — pipelined emission "
+                    "slices the prepared layout directly")
+        rot = [pltpu.VMEM((depth, *st.block_shape), jnp.dtype(a.dtype))
+               for st, a in zip(in_streams, arrays)]
+        dma_sems = [pltpu.SemaphoreType.DMA((depth,)) for _ in in_streams]
+        call = pl.pallas_call(
+            wrapped,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+                      for _ in in_streams],
+            out_specs=[s.spec() for s in out_streams]
+            if n_out != 1 else out_streams[0].spec(),
+            out_shape=list(out_shapes) if len(out_shapes) != 1
+            else out_shapes[0],
+            scratch_shapes=rot + dma_sems + list(scratch_shapes),
+            interpret=interpret,
+            **extra_kwargs,
+        )
+        return call(*arrays)
+
+    return jax.jit(run)
+
+
 def ssr_pallas(
     body: Callable[..., None],
     *,
@@ -147,12 +358,23 @@ def ssr_pallas(
     dimension_semantics: Optional[Tuple[str, ...]] = None,
     validate: bool = True,
     cost_estimate: Optional[pl.CostEstimate] = None,
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
 ) -> Callable[..., Any]:
     """Build a streamed Pallas kernel from SSR-style block streams.
 
     ``body(*in_refs, *out_refs, *scratch_refs)`` is the pure compute region —
     the "SSR region" of Fig. 4 ③.  Returns a jitted callable; the attached
     ``.report(*, dtypes)`` computes the :class:`StreamReport`.
+
+    ``buffer_depth`` sets the data mover's FIFO depth.  Depth 2 (default)
+    is Pallas's own double-buffered pipeline; depth > 2 emits the explicit
+    N-deep rotation (:func:`_pipelined_call`) when the platform supports
+    it (:func:`pipeline_supported`) and the grid has more than one step,
+    falling back to the synchronous path otherwise — numerics are
+    identical either way.  The attached ``fn.pipelined`` flag records
+    which emitter actually ran; the VMEM report always budgets at the
+    *requested* depth (:func:`stream_vmem_bytes`), so a schedule legal
+    here is legal on the deepest path it might take.
     """
     for s in in_streams:
         if s.direction != Direction.READ:
@@ -162,6 +384,12 @@ def ssr_pallas(
             raise ValueError(f"output stream '{s.name}' must be a write stream")
     if len(out_streams) != len(out_shapes):
         raise ValueError("one out_shape per output stream")
+    if not DEFAULT_BUFFER_DEPTH <= buffer_depth <= MAX_BUFFER_DEPTH:
+        raise ValueError(
+            f"buffer_depth {buffer_depth} outside "
+            f"[{DEFAULT_BUFFER_DEPTH}, {MAX_BUFFER_DEPTH}] — depth < 2 "
+            "cannot overlap fetch with compute, deeper than "
+            f"{MAX_BUFFER_DEPTH} would eat the VMEM budget")
     if validate:
         for s in (*in_streams, *out_streams):
             _validate_affine(s, grid)
@@ -169,30 +397,44 @@ def ssr_pallas(
     if interpret is None:
         interpret = not _on_tpu()
 
-    kwargs: dict = {}
-    if dimension_semantics is not None and not interpret:
-        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+    pipelined = (buffer_depth > DEFAULT_BUFFER_DEPTH
+                 and pipeline_supported()
+                 and len(grid) >= 1 and math.prod(grid) > 1)
 
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=dimension_semantics
-        )
+    kwargs: dict = {}
+    if pipelined:
+        # rotation state threads through consecutive steps: every axis is
+        # sequential regardless of the caller's declared semantics
+        dimension_semantics = ("arbitrary",) * len(grid)
+    if dimension_semantics is not None and not interpret:
+        params = _compiler_params(dimension_semantics)
+        if params is not None:
+            kwargs["compiler_params"] = params
     if cost_estimate is not None:
         kwargs["cost_estimate"] = cost_estimate
 
-    call = pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=[s.spec() for s in in_streams],
-        out_specs=[s.spec() for s in out_streams]
-        if len(out_streams) != 1
-        else out_streams[0].spec(),
-        out_shape=list(out_shapes) if len(out_shapes) != 1 else out_shapes[0],
-        scratch_shapes=list(scratch_shapes),
-        interpret=interpret,
-        **kwargs,
-    )
+    if pipelined:
+        fn = _pipelined_call(
+            body, grid=grid, in_streams=in_streams,
+            out_streams=out_streams, out_shapes=out_shapes,
+            scratch_shapes=scratch_shapes, buffer_depth=buffer_depth,
+            interpret=interpret, extra_kwargs=kwargs)
+    else:
+        call = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[s.spec() for s in in_streams],
+            out_specs=[s.spec() for s in out_streams]
+            if len(out_streams) != 1
+            else out_streams[0].spec(),
+            out_shape=list(out_shapes) if len(out_shapes) != 1
+            else out_shapes[0],
+            scratch_shapes=list(scratch_shapes),
+            interpret=interpret,
+            **kwargs,
+        )
 
-    fn = jax.jit(call)
+        fn = jax.jit(call)
 
     def report(dtypes: Sequence[Any]) -> StreamReport:
         streams = (*in_streams, *out_streams)
@@ -204,7 +446,7 @@ def ssr_pallas(
         unique = 0
         for s, dt in zip(streams, dtypes):
             bb = s.block_bytes(dt)
-            vmem += 2 * bb  # double-buffered (data mover FIFO depth 2)
+            vmem += stream_vmem_bytes(bb, buffer_depth)  # FIFO-depth buffers
             streamed += bb * steps
             unique += bb * _unique_blocks(s, grid)
         # Kernel-resident scratch (reduce accumulators, chained-intermediate
@@ -228,6 +470,8 @@ def ssr_pallas(
 
     fn.report = report  # type: ignore[attr-defined]
     fn.grid = grid  # type: ignore[attr-defined]
+    fn.buffer_depth = buffer_depth  # type: ignore[attr-defined]
+    fn.pipelined = pipelined  # type: ignore[attr-defined]
     return fn
 
 

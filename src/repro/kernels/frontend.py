@@ -50,6 +50,7 @@ mandatory — an undeclared escape hatch is a compiler-coverage bug.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -58,7 +59,8 @@ from jax.experimental import pallas as pl
 
 from repro.core import BlockStream  # noqa: F401  (re-export for kernels)
 from repro.core import autotune
-from repro.core.lowering import Schedule, _body_key, ssr_call
+from repro.core.lowering import (DEFAULT_SCHEDULE, Schedule, _body_key,
+                                 ssr_call)
 from repro.core.ssr import _on_tpu, ssr_pallas
 
 ROWS = 8
@@ -185,19 +187,35 @@ class _KernelBase:
         self._prepare = prepare
         self._finish = finish
         self._cache: Dict[Any, Callable] = {}
+        # A ``schedule=`` param is routed to prepare only when it asks for
+        # one (geometry consumers like the stencil); otherwise it stays a
+        # builder-level knob (buffer_depth) and prepare never sees it.
+        try:
+            sig = inspect.signature(prepare)
+            self._prepare_takes_schedule = (
+                "schedule" in sig.parameters
+                or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                       for p in sig.parameters.values()))
+        except (TypeError, ValueError):  # pragma: no cover - C callables
+            self._prepare_takes_schedule = True
 
-    def _build(self, static, arrays, interpret: bool) -> Callable:
+    def _build(self, static, arrays, interpret: bool,
+               schedule: Optional[Schedule]) -> Callable:
         raise NotImplementedError
 
     def __call__(self, *args, interpret: Optional[bool] = None, **params):
         if interpret is None:
             interpret = not _on_tpu()
         DISPATCH_STATS["calls"] += 1
+        schedule = params.get("schedule")
+        prep_params = params if self._prepare_takes_schedule else \
+            {k: v for k, v in params.items() if k != "schedule"}
         key = (_call_key(args, params), bool(interpret))
         fn = self._cache.get(key)
         if fn is None:
-            arrays, static, _final = self._prepare(*args, **params)
-            built = self._build(static, tuple(arrays), bool(interpret))
+            arrays, static, _final = self._prepare(*args, **prep_params)
+            built = self._build(static, tuple(arrays), bool(interpret),
+                                schedule)
             arr_idx = tuple(i for i, a in enumerate(args)
                             if _is_arraylike(a))
             # Capture only the static (non-array) positions: closing over
@@ -210,7 +228,7 @@ class _KernelBase:
                 full = list(_st)
                 for i, a in zip(_idx, arrs):
                     full[i] = a
-                prepared, _s, final = self._prepare(*full, **params)
+                prepared, _s, final = self._prepare(*full, **prep_params)
                 out = _built(*prepared)
                 return self._finish(out, final) if self._finish else out
 
@@ -348,7 +366,8 @@ class StreamKernel(_KernelBase):
         self._launch = launch
         self._body = body
 
-    def _build(self, static, arrays, interpret: bool) -> Callable:
+    def _build(self, static, arrays, interpret: bool,
+               schedule: Optional[Schedule]) -> Callable:
         lc: Launch = self._launch(static, *arrays)
         return ssr_pallas(
             self._body(static),
@@ -359,6 +378,7 @@ class StreamKernel(_KernelBase):
             scratch_shapes=list(lc.scratch_shapes),
             interpret=interpret,
             dimension_semantics=lc.dimension_semantics,
+            buffer_depth=(schedule or DEFAULT_SCHEDULE).buffer_depth,
         )
 
 
@@ -371,7 +391,10 @@ class MonolithicKernel(_KernelBase):
         self._body = body
         self._out_shape = out_shape
 
-    def _build(self, static, arrays, interpret: bool) -> Callable:
+    def _build(self, static, arrays, interpret: bool,
+               schedule: Optional[Schedule]) -> Callable:
+        # the serialised baseline has no streams to pipeline: schedule
+        # (buffer_depth included) is deliberately ignored
         call = pl.pallas_call(
             self._body(static),
             out_shape=self._out_shape(static, *arrays),
@@ -408,7 +431,8 @@ class ChainedKernel(_KernelBase):
         self._producer = producer
         self._consumer = consumer
 
-    def _build(self, static, arrays, interpret: bool) -> Callable:
+    def _build(self, static, arrays, interpret: bool,
+               schedule: Optional[Schedule]) -> Callable:
         from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
 
         lc: Launch = self._launch(static, *arrays)
@@ -442,4 +466,5 @@ class ChainedKernel(_KernelBase):
                             *lc.scratch_shapes],
             interpret=interpret,
             dimension_semantics=lc.dimension_semantics,
+            buffer_depth=(schedule or DEFAULT_SCHEDULE).buffer_depth,
         )

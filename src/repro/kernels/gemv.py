@@ -5,6 +5,12 @@ vector is a *repeat* stream — one fetch, re-emitted for every row panel
 (the paper's repeat register: "useful if a value loaded from memory is used
 as an operand multiple times", §3.1).  Output is a write stream of row
 panels.
+
+The launch geometry is waivered (whole-row panels), so the autotuner's
+only effective knob here is ``Schedule.buffer_depth`` — the data mover's
+FIFO depth.  ``ssr_gemv(schedule=None)`` resolves it transparently from
+the schedule cache keyed on :func:`repro.core.compiler.gemv_nest`, the
+same pattern the stencil uses for its block width.
 """
 
 from __future__ import annotations
@@ -13,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction
+from repro.core import BlockStream, Direction, autotune, compiler
+from repro.core.lowering import Schedule
 
 from .frontend import (ROWS, Launch, MonolithicKernel, StreamKernel,
                        pad_leading, promote)
@@ -84,8 +91,17 @@ _base = MonolithicKernel(
     finish=lambda out, m: out.reshape(-1)[:m])
 
 
-def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret=None) -> jax.Array:
-    return _ssr(a, x, interpret=interpret)
+def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret=None,
+             schedule: Schedule | None = None) -> jax.Array:
+    """Streamed GEMV.  ``schedule=None`` consults the autotuner's cache
+    (keyed on :func:`~repro.core.compiler.gemv_nest`) for a tuned
+    ``buffer_depth``; an explicit schedule pins it."""
+    if schedule is None:
+        m, n = a.shape
+        hit = autotune.lookup(compiler.gemv_nest(m, n), {"A": a, "x": x},
+                              mode="map")
+        schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+    return _ssr(a, x, interpret=interpret, schedule=schedule)
 
 
 def baseline_gemv(a: jax.Array, x: jax.Array, *, interpret=None) -> jax.Array:

@@ -4,8 +4,10 @@ Four checks, all hard failures:
 
 1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
    files resolves to an existing file (http/mailto/anchor links skipped);
-2. the schedule autotuner stays documented: DESIGN.md keeps its ``## 9``
-   section + §2 correspondence row, the README its autotune quickstart;
+2. the schedule autotuner and the pipelined emitter stay documented:
+   DESIGN.md keeps its ``## 9`` (autotuner) and ``## 10`` (pipelined
+   emission / ``buffer_depth``) sections + their §2 correspondence rows,
+   the README its autotune quickstart;
 3. the committed ``EXPERIMENTS.md`` matches a fresh render from
    ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
    models without regenerating it, fails the build;
@@ -112,6 +114,27 @@ def check_autotune_docs() -> List[str]:
     return problems
 
 
+def check_pipeline_docs() -> List[str]:
+    """The pipelined emitter must stay documented: DESIGN.md §10 + the
+    ``Schedule.buffer_depth`` correspondence row, and the README must
+    mention the depth knob (pure-text check, no jax import)."""
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 10\..*[Pp]ipelined", design, re.MULTILINE):
+        problems.append("DESIGN.md: missing '## 10.' pipelined-emission "
+                        "section")
+    if "Schedule.buffer_depth" not in design:
+        problems.append("DESIGN.md: §2 correspondence table has no "
+                        "Schedule.buffer_depth (FIFO depth) row")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    if "buffer_depth" not in readme:
+        problems.append("README.md: no mention of the tuned buffer_depth "
+                        "(pipelined emission) knob")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -146,6 +169,16 @@ def main(argv=None) -> int:
             print(f"  {p}")
     else:
         print("autotuner docs present (DESIGN.md §9 + README quickstart)")
+
+    pipeline_problems = check_pipeline_docs()
+    if pipeline_problems:
+        ok = False
+        print("\npipelined-emission docs gate:")
+        for p in pipeline_problems:
+            print(f"  {p}")
+    else:
+        print("pipelined-emission docs present (DESIGN.md §10 + "
+              "buffer_depth rows)")
 
     if not args.skip_experiments:
         diff = check_experiments()
