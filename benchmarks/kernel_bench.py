@@ -21,7 +21,7 @@ machine-readable perf trajectory tracked across PRs::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
 
-Schema (version 3): ``{"schema": 3, "generated_unix": float, "quick": bool,
+Schema (version 4): ``{"schema": 4, "generated_unix": float, "quick": bool,
 "results": [{"name", "group", "variant", "value", "units", "rows",
 "lanes", "grid", "tuned", "buffer_depth", ...}, ...]}`` — every row
 carries schedule provenance (the block geometry that produced it, the data
@@ -32,7 +32,17 @@ runs, where iteration counts rise above CI-box noise — at least one kernel
 must win with a non-default schedule.  The ``pipeline`` group is the
 bandwidth-bound buffer-depth sweep (large-stride gemv + stencil1d): the
 autotuned pipelined schedule races the synchronous depth-2 default under a
-≤ 1e-5 agreement gate, and a full run must find a depth > 2 winner.
+≤ 1e-5 agreement gate, and a full run must find a depth > 2 winner.  The
+``dag`` group (v4) runs the whole-program fusion search of
+``autotune_dag`` over every ``kernels.dag`` DagCase (layernorm,
+softmax_xent, mlp_block) and races the committed graph cut against both
+endpoints — all-fused and all-unfused; dag rows additionally carry
+``cut_edges`` (the materialised edge indices) and ``fused_stages`` (the
+largest fused component's stage count).
+
+Each run also appends one summary line to ``BENCH_history.jsonl`` (date,
+git sha, per-kernel speedups, committed dag cuts) — the cheap
+longitudinal record raced across PRs without diffing full artifacts.
 """
 
 from __future__ import annotations
@@ -62,7 +72,11 @@ RNG = np.random.default_rng(0)
 #: v3: adds ``buffer_depth`` — the data mover's FIFO depth the row ran
 #: under (2 = synchronous Pallas double-buffer, > 2 = explicit N-deep DMA
 #: rotation) — and the gated ``pipeline`` group.
-BENCH_SCHEMA = 3
+#: v4: adds the gated ``dag`` group (whole-program fusion search); dag
+#: rows carry ``cut_edges`` (materialised edge indices of the committed
+#: partition) and ``fused_stages`` (largest fused component's stage
+#: count) alongside the schedule provenance fields.
+BENCH_SCHEMA = 4
 
 
 def _row(name: str, group: str, variant: str, value: float, units: str,
@@ -714,6 +728,193 @@ def bench_fused(quick: bool = False, check_hlo: bool = True) -> List[Dict]:
 
 
 # --------------------------------------------------------------------------
+# Fused DAGs: cost-model-guided cut search + committed-partition gate
+# --------------------------------------------------------------------------
+
+#: The DAG kernels the fusion-search gate covers (the registry's
+#: ``kernels.dag`` cases — each a 3-stage graph with a multi-consumer
+#: intermediate).
+DAG_GATED = ("layernorm", "softmax_xent", "mlp_block")
+
+
+def _dag_fused_stages(dag, cut: Sequence[int]) -> int:
+    """Largest fused component's stage count under ``cut`` (3 = the whole
+    diamond in one kernel, 1 = fully unfused)."""
+    from repro.core.lowering import _dag_components
+
+    comps = _dag_components(dag, frozenset(int(i) for i in cut))
+    return max(len(c) for c in comps)
+
+
+def _interleaved3(a: Callable, b: Callable, c: Callable,
+                  warmup: int, iters: int) -> Tuple[float, float, float]:
+    """Three-way interleaved best-of-N (μs) so drift hits all equally."""
+    for _ in range(warmup):
+        for fn in (a, b, c):
+            jax.block_until_ready(jax.tree.leaves(fn()))
+    best = [float("inf")] * 3
+    for _ in range(iters):
+        for i, fn in enumerate((a, b, c)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(fn()))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best[0] * 1e6, best[1] * 1e6, best[2] * 1e6
+
+
+def bench_dag(quick: bool = False, check_hlo: bool = True) -> List[Dict]:
+    """Whole-program fusion search per DagCase; gate the committed cut.
+
+    Per case: (a) fused / unfused / reference outputs must agree within
+    the case tolerance (a fast wrong partition is not a win); (b) the
+    compiled-HLO audit must show the fused graph materialises no more
+    intermediate-shaped buffers than the unfused composition, with fewer
+    bytes written; (c) ``autotune_dag`` searches the legal graph cuts and
+    the committed cut is re-raced three-way against both endpoints —
+    all-fused (``()``) and all-unfused (every edge materialised).  A
+    committed cut that loses the race is replaced by the winning endpoint
+    in the schedule cache (same race-back contract as ``bench_autotune``),
+    so the persisted partition is never slower than either endpoint as
+    measured; ``TUNE_GATE_TOL`` is the tripwire.
+    """
+    import dataclasses as _dc
+
+    from repro.core import autotune
+    from repro.core.lowering import _dag_for
+    from repro.kernels.dag import dag_cases
+    from repro.launch.hlo_analysis import check_dag_fusion
+
+    rows: List[Dict] = []
+    iters = 3 if quick else 7
+    print(f"\n== fused-DAG cut search (interpret, best-of-{iters} μs/call) ==")
+    for case in dag_cases():
+        args, kwargs = case.example(RNG)
+        nests, bodies, operands, mode, uniforms = case.spec(*args, **kwargs)
+        dag = _dag_for(tuple(nests), None)
+        full = tuple(range(len(dag.edges)))
+
+        def run(cut, _c=case, _a=args, _k=kwargs):
+            sched = _dc.replace(DEFAULT_SCHEDULE, cut_edges=tuple(cut))
+            return _c.fused(*_a, schedule=sched, **_k)
+
+        fused_out = run(())
+        unfused_out = case.unfused(*args, **kwargs)
+        ref_out = case.ref(*args, **kwargs)
+        for label, other in (("unfused", unfused_out), ("ref", ref_out)):
+            for g, w in zip(jax.tree.leaves(fused_out),
+                            jax.tree.leaves(other)):
+                if not np.allclose(np.asarray(g), np.asarray(w),
+                                   **case.tol):
+                    print(f"FAIL {case.name}: fused DAG disagrees with "
+                          f"{label} beyond tol {case.tol}", file=sys.stderr)
+                    raise SystemExit(1)
+
+        extras: Dict = {"iters": iters, "edges": len(dag.edges)}
+        if check_hlo:
+            chk = check_dag_fusion(
+                lambda *a, _c=case, **k: _c.fused(
+                    *a, schedule=DEFAULT_SCHEDULE, **k),
+                case.unfused, args, kwargs,
+                case.inters(*args, **kwargs))
+            if not chk.intermediates_eliminated:
+                print(f"FAIL {case.name}: fused HLO still materialises the "
+                      f"intermediates (buffers {chk.fused_buffers} vs "
+                      f"{chk.unfused_buffers}, bytes {chk.fused_bytes_out} "
+                      f"vs {chk.unfused_bytes_out})", file=sys.stderr)
+                raise SystemExit(1)
+            extras.update(fused_buffers=chk.fused_buffers,
+                          unfused_buffers=chk.unfused_buffers,
+                          intermediates_eliminated=True,
+                          bytes_saved=chk.bytes_saved)
+
+        res = autotune.autotune_dag(
+            nests, bodies, operands, mode=mode, out_dtype="float32",
+            uniforms=uniforms, top_k=4 if quick else 8,
+            warmup=1, iters=iters, force=True)
+        committed = tuple(res.schedule.cut_edges or ())
+
+        t_cut, t_fused, t_unfused = _interleaved3(
+            lambda: run(committed), lambda: run(()), lambda: run(full),
+            warmup=2, iters=max(7, iters))
+        if t_cut > min(t_fused, t_unfused) and committed not in ((), full):
+            better = () if t_fused <= t_unfused else full
+            t_best = min(t_fused, t_unfused)
+            print(f"  {case.name}: committed cut {list(committed)} lost the "
+                  f"final race ({t_cut:.1f} vs {t_best:.1f} μs) — "
+                  f"committing endpoint {list(better)}")
+            sched = _dc.replace(DEFAULT_SCHEDULE, cut_edges=better)
+            autotune.global_cache().put(res.key, sched, meta={
+                "tuned_us": t_best, "default_us": t_fused,
+                "candidates": res.candidates, "raced_back": True,
+                "cut_edges": list(better)})
+            res = _dc.replace(res, schedule=sched, tuned_us=t_best)
+            committed, t_cut = better, t_best
+        elif committed == ():
+            t_cut = t_fused
+        elif committed == full:
+            t_cut = t_unfused
+        if t_cut > min(t_fused, t_unfused) * TUNE_GATE_TOL:  # tripwire
+            print(f"FAIL {case.name}: committed cut {list(committed)} "
+                  f"{t_cut:.1f} μs is slower than the best endpoint "
+                  f"{min(t_fused, t_unfused):.1f} μs × {TUNE_GATE_TOL}",
+                  file=sys.stderr)
+            raise SystemExit(1)
+
+        print(f"{case.name:14s} cut={list(committed)!s:10s} "
+              f"{t_cut:10.1f} μs  all-fused {t_fused:10.1f} μs  "
+              f"unfused {t_unfused:10.1f} μs  "
+              f"vs-unfused {t_unfused / t_cut:4.2f}x  "
+              f"candidates {res.candidates}")
+        rows.append(_row(f"dag/{case.name}", "dag", "cut", t_cut,
+                         "us/call", speedup=t_unfused / t_cut,
+                         candidates=res.candidates,
+                         measured=res.measured, cache_key=res.key,
+                         cut_edges=list(committed),
+                         fused_stages=_dag_fused_stages(dag, committed),
+                         tuned=committed not in ((), full), **extras))
+        rows.append(_row(f"dag/{case.name}", "dag", "fused", t_fused,
+                         "us/call", cut_edges=[],
+                         fused_stages=_dag_fused_stages(dag, ()), **extras))
+        rows.append(_row(f"dag/{case.name}", "dag", "unfused", t_unfused,
+                         "us/call", cut_edges=list(full),
+                         fused_stages=1, **extras))
+    return rows
+
+
+def validate_dag_rows(results: Sequence[Dict]) -> None:
+    """The dag acceptance gate, re-applied to persisted rows.
+
+    Every gated kernel must have cut/fused/unfused rows; every dag row
+    must carry the v4 partition provenance (``cut_edges`` list +
+    ``fused_stages``); and the committed cut may never be slower than the
+    better endpoint beyond ``TUNE_GATE_TOL`` (never-slower is structural:
+    a race loser is replaced by an endpoint before commit).
+    """
+    by_kernel: Dict[str, Dict[str, Dict]] = {}
+    for r in results:
+        if r.get("group") == "dag":
+            if not isinstance(r.get("cut_edges"), list):
+                raise ValueError(f"dag row missing cut_edges list: {r}")
+            if not isinstance(r.get("fused_stages"), int):
+                raise ValueError(f"dag row missing fused_stages: {r}")
+            by_kernel.setdefault(r["name"].split("/")[1], {})[r["variant"]] = r
+    for kern in DAG_GATED:
+        trio = by_kernel.get(kern)
+        if not trio or {"cut", "fused", "unfused"} - set(trio):
+            raise ValueError(f"no complete dag rows for {kern!r}")
+        best = min(trio["fused"]["value"], trio["unfused"]["value"])
+        if trio["cut"]["value"] > best * TUNE_GATE_TOL:
+            raise ValueError(
+                f"{kern}: committed cut {trio['cut']['value']} slower than "
+                f"best endpoint {best} x {TUNE_GATE_TOL}")
+        if trio["fused"]["cut_edges"]:
+            raise ValueError(f"{kern}: all-fused row must record cut_edges "
+                             "[]")
+        if trio["unfused"]["fused_stages"] != 1:
+            raise ValueError(f"{kern}: unfused row must record "
+                             "fused_stages 1")
+
+
+# --------------------------------------------------------------------------
 # Machine-readable output: BENCH_kernels.json
 # --------------------------------------------------------------------------
 
@@ -738,7 +939,7 @@ def validate_bench_json(path: str) -> None:
     if not isinstance(results, list) or not results:
         raise ValueError("results must be a non-empty list")
     for row in results:
-        # schema 3: every row carries schedule provenance, FIFO depth
+        # schema 3+: every row carries schedule provenance, FIFO depth
         # included
         for field in ("name", "group", "variant", "value", "units",
                       "rows", "lanes", "grid", "tuned", "buffer_depth"):
@@ -753,8 +954,11 @@ def validate_bench_json(path: str) -> None:
         raise ValueError(f"no autotune results recorded (groups: {groups})")
     if "pipeline" not in groups:
         raise ValueError(f"no pipeline results recorded (groups: {groups})")
+    if "dag" not in groups:
+        raise ValueError(f"no dag results recorded (groups: {groups})")
     validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
     validate_pipeline_rows(results, require_deep=not doc.get("quick"))
+    validate_dag_rows(results)
     # compiled-nest gate: gemm/stencil1d must be present, numerically in
     # agreement, and model-profitable
     nest_rows = {(r["name"].split("/")[1], r["variant"]): r
@@ -788,6 +992,104 @@ def validate_autotune_json(path: str) -> None:
     validate_pipeline_rows(results, require_deep=not doc.get("quick"))
 
 
+# --------------------------------------------------------------------------
+# Longitudinal record: BENCH_history.jsonl (one summary line per run)
+# --------------------------------------------------------------------------
+
+
+def _git_sha() -> str:
+    """Short sha of the bench's repo, ``"unknown"`` outside a checkout."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_bench_history(rows: Sequence[Dict], path: str,
+                         quick: bool) -> Dict:
+    """Append one JSONL summary line for this run and return it.
+
+    The full ``BENCH_kernels.json`` artifact is overwritten per run; the
+    history file accumulates, one line per run, the handful of numbers a
+    perf-trajectory review actually reads — per-kernel speedups of the
+    raced groups and the graph cuts the fusion search committed — keyed by
+    date and git sha.  Kept as JSONL so appends are atomic-ish and old
+    lines never need rewriting.
+    """
+    speedups = {r["name"]: round(float(r["speedup"]), 4)
+                for r in rows
+                if isinstance(r.get("speedup"), (int, float))}
+    dag_cuts = {r["name"].split("/")[1]: r["cut_edges"]
+                for r in rows
+                if r.get("group") == "dag" and r.get("variant") == "cut"}
+    entry = {
+        "schema": BENCH_SCHEMA,
+        "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": _git_sha(),
+        "quick": bool(quick),
+        "rows": len(rows),
+        "groups": sorted({r["group"] for r in rows}),
+        "speedups": speedups,
+        "dag_cuts": dag_cuts,
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    print(f"appended run summary to {path} ({len(speedups)} speedups, "
+          f"{len(dag_cuts)} dag cuts)")
+    return entry
+
+
+def validate_bench_history(path: str) -> int:
+    """Validate every line of the history file; return the line count.
+
+    Each line must be a self-contained JSON object with the summary
+    fields — a truncated append or a hand-edit that breaks one line fails
+    loudly here rather than corrupting the trajectory silently.
+    """
+    count = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entry = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{path}:{lineno}: not valid JSON ({e})") from None
+            for field, typ in (("schema", int), ("date", str),
+                               ("git_sha", str), ("quick", bool),
+                               ("rows", int), ("groups", list),
+                               ("speedups", dict), ("dag_cuts", dict)):
+                if not isinstance(entry.get(field), typ):
+                    raise ValueError(
+                        f"{path}:{lineno}: missing/mistyped {field!r}")
+            if not (1 <= entry["schema"] <= BENCH_SCHEMA):
+                raise ValueError(
+                    f"{path}:{lineno}: schema {entry['schema']} outside "
+                    f"1..{BENCH_SCHEMA}")
+            for name, val in entry["speedups"].items():
+                if not isinstance(val, (int, float)):
+                    raise ValueError(
+                        f"{path}:{lineno}: non-numeric speedup {name!r}")
+            for kern, cut in entry["dag_cuts"].items():
+                if not isinstance(cut, list):
+                    raise ValueError(
+                        f"{path}:{lineno}: dag cut for {kern!r} is not a "
+                        "list")
+            count += 1
+    if count == 0:
+        raise ValueError(f"{path}: empty history")
+    return count
+
+
 def isolate_schedule_cache() -> None:
     """Point the schedule cache at a fresh tempdir unless the operator
     opted into a shared one.
@@ -819,6 +1121,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--autotune-only", action="store_true",
                     help="run only the schedule-autotune sweep + gate "
                          "(the CI autotune-smoke job)")
+    ap.add_argument("--dag-only", action="store_true",
+                    help="run only the fused-DAG cut search + gate "
+                         "(the CI bench-smoke dag leg)")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="per-run summary JSONL (default: %(default)s); "
+                         "'' disables")
     args = ap.parse_args(argv)
     isolate_schedule_cache()
 
@@ -829,6 +1137,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         validate_autotune_json(args.out)
         return 0
 
+    if args.dag_only:
+        rows = bench_dag(quick=args.quick, check_hlo=not args.no_hlo)
+        write_bench_json(rows, args.out, args.quick, subset="dag")
+        validate_dag_rows(rows)
+        if args.history:
+            append_bench_history(rows, args.history, args.quick)
+            validate_bench_history(args.history)
+        return 0
+
     rows: List[Dict] = []
     rows += bench_reference_paths(iters=2 if args.quick else 5)
     rows += smoke_ssr_paths()
@@ -837,8 +1154,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rows += bench_autotune(quick=args.quick)
     rows += bench_pipeline(quick=args.quick)
     rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)
+    rows += bench_dag(quick=args.quick, check_hlo=not args.no_hlo)
     write_bench_json(rows, args.out, args.quick)
     validate_bench_json(args.out)
+    if args.history:
+        append_bench_history(rows, args.history, args.quick)
+        validate_bench_history(args.history)
     return 0
 
 

@@ -55,15 +55,18 @@ from . import nest_analysis  # noqa: F401
 from .compiler import (  # noqa: F401
     Allocation,
     COMBINE_COST,
+    ChainDAG,
     ChainError,
     ChainLink,
     ChainedPlan,
     ClusterReport,
     CoreCost,
+    DagEdge,
     LoopNest,
     MemRef,
     StreamPlan,
     chain,
+    chain_dag,
     cluster_cost,
     dot_product_nest,
     elementwise_nest,
@@ -89,6 +92,7 @@ from .lowering import (  # noqa: F401
     plan_stats,
     ssr_call,
     ssr_chain_call,
+    ssr_dag_call,
 )
 from . import autotune  # noqa: F401
 from .autotune import (  # noqa: F401

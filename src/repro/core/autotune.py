@@ -50,9 +50,9 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import nest_analysis
-from .compiler import LoopNest, ssrify
-from .lowering import (DEFAULT_SCHEDULE, LoweredNest, LoweredPlan,
-                       LoweringError, Schedule, _plan_for)
+from .compiler import ChainDAG, LoopNest, _fused_region_count, ssrify
+from .lowering import (DEFAULT_SCHEDULE, LoweredChain, LoweredNest,
+                       LoweredPlan, LoweringError, Schedule, _plan_for)
 from .nest_analysis import auto_lanes
 from .ssr import (DEFAULT_BUFFER_DEPTH, MAX_BUFFER_DEPTH, VMEM_BUDGET_BYTES,
                   stream_vmem_bytes)
@@ -344,33 +344,73 @@ def _lower_candidate(nest: LoopNest, sched: Schedule):
     return _lowered_for(plan, sched, _nest_has_output(nest))
 
 
+def _depth_of(sched: Schedule, i: int, n_in: int) -> int:
+    """Stream ``i``'s FIFO depth under ``sched`` (asymmetric when set)."""
+    if sched.stream_depths and len(sched.stream_depths) == n_in:
+        return sched.stream_depths[i]
+    return sched.buffer_depth
+
+
+def _max_depth(sched: Schedule) -> int:
+    if sched.stream_depths:
+        return max(sched.stream_depths)
+    return sched.buffer_depth
+
+
 def _stream_block_bytes(lowered, itemsize: int = 4) -> int:
     """Depth-buffered stream blocks + kernel-resident scratch, in bytes.
 
     Mirrors :meth:`repro.core.ssr.StreamReport` accounting exactly — both
     route every stream block through :func:`repro.core.ssr.
-    stream_vmem_bytes` at the schedule's ``buffer_depth``, so the budget
-    the tuner enforces is the budget the emitter allocates (the depth
-    knob cannot drift between them).  The contraction / reduce
-    accumulator is single-buffered scratch (``scratch_bytes``).
+    stream_vmem_bytes` at the schedule's (possibly per-stream) FIFO
+    depths, so the budget the tuner enforces is the budget the emitter
+    allocates (the depth knob cannot drift between them).  The
+    contraction / reduce accumulator is single-buffered scratch
+    (``scratch_bytes``); a fused chain/DAG additionally charges one VMEM
+    block per *live* intermediate slot (refcounted — a diamond's peak is
+    2 slots, not one per edge).
     """
-    depth = lowered.schedule.buffer_depth
+    sched = lowered.schedule
+    depth = sched.buffer_depth
     total = 0
     if isinstance(lowered, LoweredNest):
-        for s in lowered.in_streams:
+        n_in = len(lowered.in_streams)
+        for i, s in enumerate(lowered.in_streams):
             total += stream_vmem_bytes(
-                math.prod(s.stream.block_shape) * itemsize, depth)
+                math.prod(s.stream.block_shape) * itemsize,
+                _depth_of(sched, i, n_in))
         out_block = math.prod(lowered.out_stream.stream.block_shape)
-        total += stream_vmem_bytes(out_block * itemsize, depth)
+        total += stream_vmem_bytes(out_block * itemsize, _max_depth(sched))
         if lowered.contraction_axes:     # the VMEM accumulator scratch
             total += out_block * itemsize
         return total
+    if isinstance(lowered, LoweredChain):
+        from .lowering import _dag_slots
+
+        flat = lowered.in_streams
+        n_in = len(flat)
+        for i, s in enumerate(flat):
+            total += stream_vmem_bytes(
+                math.prod(s.stream.block_shape) * itemsize,
+                _depth_of(sched, i, n_in))
+        block = lowered.policy.rows * lowered.policy.lanes
+        total += stream_vmem_bytes(block * itemsize, _max_depth(sched))
+        if isinstance(lowered.chained, ChainDAG):
+            _, n_slots = _dag_slots(lowered.chained)
+        else:
+            n_slots = len(lowered.chained.links)
+        total += n_slots * block * itemsize  # intermediate scratch slots
+        total += block * itemsize            # reduce accumulator scratch
+        return total
     assert isinstance(lowered, LoweredPlan)
-    for s in lowered.in_streams:
+    n_in = len(lowered.in_streams)
+    for i, s in enumerate(lowered.in_streams):
         total += stream_vmem_bytes(
-            math.prod(s.stream.block_shape) * itemsize, depth)
+            math.prod(s.stream.block_shape) * itemsize,
+            _depth_of(sched, i, n_in))
     block = lowered.policy.rows * lowered.policy.lanes
-    total += stream_vmem_bytes(block * itemsize, depth)  # synthesised output
+    total += stream_vmem_bytes(block * itemsize,
+                               _max_depth(sched))  # synthesised output
     total += block * itemsize            # reduce accumulator scratch
     return total
 
@@ -388,12 +428,23 @@ def schedule_is_legal(nest: LoopNest, sched: Schedule, *,
     if not DEFAULT_BUFFER_DEPTH <= sched.buffer_depth <= MAX_BUFFER_DEPTH:
         return False, (f"buffer_depth {sched.buffer_depth} outside "
                        f"[{DEFAULT_BUFFER_DEPTH}, {MAX_BUFFER_DEPTH}]")
+    if sched.stream_depths is not None:
+        for d in sched.stream_depths:
+            if not DEFAULT_BUFFER_DEPTH <= d <= MAX_BUFFER_DEPTH:
+                return False, (f"stream depth {d} outside "
+                               f"[{DEFAULT_BUFFER_DEPTH}, "
+                               f"{MAX_BUFFER_DEPTH}]")
     try:
         lowered = _lower_candidate(nest, sched)
     except LoweringError as e:
         return False, f"lowering rejected: {e}"
     except ValueError as e:              # MAX_DIMS / malformed nest
         return False, f"nest rejected: {e}"
+    if sched.stream_depths is not None \
+            and len(sched.stream_depths) != len(lowered.in_streams):
+        return False, (f"stream_depths has {len(sched.stream_depths)} "
+                       f"entries for {len(lowered.in_streams)} read "
+                       "streams")
     vmem = _stream_block_bytes(lowered, itemsize)
     if vmem > VMEM_BUDGET_BYTES:
         return False, (f"VMEM working set {vmem / 2**20:.1f} MiB exceeds "
@@ -457,6 +508,15 @@ def candidate_schedules(nest: LoopNest, *, quick: bool = False,
         for d in depths:
             if d != s.buffer_depth:
                 raw.append(dataclasses.replace(s, buffer_depth=d))
+    if not quick:
+        # Asymmetric per-stream FIFO depths (full runs only): deep
+        # run-ahead for one operand, shallow for the other.  Only 2-read-
+        # stream nests get the treatment — legality filters any schedule
+        # whose entry count mismatches the lowered stream count.
+        n_reads = sum(1 for r in nest.refs if r.kind == Direction.READ)
+        if n_reads == 2:
+            for sd in ((4, 2), (2, 4), (3, 2), (2, 3)):
+                raw.append(Schedule(stream_depths=sd))
 
     seen, out = set(), []
     for s in raw:
@@ -518,7 +578,7 @@ def model_cost(nest: LoopNest, sched: Schedule, *,
     padded_nest = dataclasses.replace(nest, bounds=padded)
     plan = ssrify(padded_nest, num_lanes=auto_lanes(padded_nest), force=True)
     half = step_cost / 2.0
-    per_step = half + half / (sched.buffer_depth - 1)
+    per_step = half + half / (_max_depth(sched) - 1)
     return float(plan.n_ssr + per_step * steps)
 
 
@@ -544,10 +604,10 @@ def schedule_fingerprint(nest: LoopNest, sched: Schedule) -> Any:
         return ("nest", lowered.grid, lowered.tiles, eff_order,
                 tuple(s.stream.block_shape for s in lowered.in_streams),
                 lowered.out_stream.stream.block_shape, sched.acc_dtype,
-                sched.buffer_depth)
+                sched.buffer_depth, sched.stream_depths)
     return ("flat", lowered.grid,
             tuple(s.stream.block_shape for s in lowered.in_streams),
-            sched.acc_dtype, sched.buffer_depth)
+            sched.acc_dtype, sched.buffer_depth, sched.stream_depths)
 
 
 def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
@@ -564,7 +624,8 @@ def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
     """
     def ident(s: Schedule):
         return (s.rows, s.lanes, s.lanes_tile_factor, s.rows_tile_factor,
-                s.axis_order or (), s.acc_dtype, s.buffer_depth)
+                s.axis_order or (), s.acc_dtype, s.buffer_depth,
+                s.stream_depths or ())
 
     ranked = sorted(candidates,
                     key=lambda s: (model_cost(nest, s,
@@ -704,3 +765,226 @@ def invalidate(nest: LoopNest, operands: Dict[str, Any], *,
     return cache.invalidate(
         cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
                   cores=cores))
+
+
+# --------------------------------------------------------------------------
+# DAG fusion search: enumerate legal graph cuts, prune by the Eq. (1)–(3)
+# model + VMEM budget, measure survivors, commit the winning partition.
+#
+# A "cut" is a set of edge indices into ``ChainDAG.edges``.  Every cut
+# edge materialises its intermediate as an HBM buffer (one kernel stops,
+# another reloads); every fused edge keeps it in VMEM scratch and credits
+# the eliminated store+loads exactly as ``chain_dag``'s accounting does.
+# The committed winner lands in the same :class:`ScheduleCache` under a
+# DAG-specific key, so ``ssr_dag_call`` resolves the best partitioning
+# transparently on the next dispatch.
+# --------------------------------------------------------------------------
+
+
+def dag_cache_key(nests: Sequence[LoopNest], operands: Dict[str, Any], *,
+                  mode: str = "map", out_dtype: str = "float32",
+                  backend: Optional[str] = None, cores: int = 1,
+                  uniforms: Optional[Dict[str, Any]] = None) -> str:
+    """Stable hex digest identifying one DAG fusion problem."""
+    backend = backend or _backend()
+    blob = json.dumps({
+        "v": SCHEDULE_CACHE_VERSION,
+        "dag": [nest_signature(n) for n in nests],
+        "operands": operand_signature(operands),
+        "uniforms": operand_signature(uniforms or {}),
+        "mode": mode,
+        "out_dtype": str(out_dtype),
+        "backend": backend,
+        "cores": int(cores),
+    }, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+def lookup_dag(nests: Sequence[LoopNest], operands: Dict[str, Any], *,
+               mode: str = "map", out_dtype: str = "float32",
+               cores: int = 1,
+               cache: Optional[ScheduleCache] = None,
+               uniforms: Optional[Dict[str, Any]] = None) -> Schedule:
+    """Cache-only partition resolution for ``ssr_dag_call`` dispatch."""
+    cache = cache or global_cache()
+    key = dag_cache_key(nests, operands, mode=mode,
+                        out_dtype=str(out_dtype), cores=cores,
+                        uniforms=uniforms)
+    return cache.get(key) or DEFAULT_SCHEDULE
+
+
+def enumerate_cuts(dag: ChainDAG) -> List[Tuple[int, ...]]:
+    """Every subset of edge indices, smallest cuts first.
+
+    DAGs here have a handful of edges (a diamond has 3–4), so the 2^E
+    enumeration is exact; the legality and model prunes below do the
+    narrowing.  ``()`` (all-fused) is always first, the full cut
+    (all-unfused) always last.
+    """
+    idx = range(len(dag.edges))
+    cuts: List[Tuple[int, ...]] = []
+    for r in range(len(dag.edges) + 1):
+        cuts.extend(itertools.combinations(idx, r))
+    return cuts
+
+
+def dag_cut_is_legal(dag: ChainDAG, cut: Sequence[int], *,
+                     sched: Schedule = DEFAULT_SCHEDULE,
+                     itemsize: int = 4) -> Tuple[bool, str]:
+    """(legal, reason) for one cut: single-exit components + VMEM budget.
+
+    A fused component must have exactly one stage whose value leaves it
+    (the map/reduce epilogue writes one output), and each component's
+    depth-buffered working set — external streams + cut-edge reloads +
+    refcounted intermediate slots — must fit the VMEM budget.
+    """
+    from .lowering import _component_exit, _dag_components
+
+    cutset = frozenset(int(i) for i in cut)
+    for i in cutset:
+        if not 0 <= i < len(dag.edges):
+            return False, (f"edge index {i} out of range for "
+                           f"{len(dag.edges)} edges")
+    comps = _dag_components(dag, cutset)
+    block = sched.rows * sched.lanes * itemsize
+    depth = _max_depth(sched)
+    for comp in comps:
+        try:
+            _component_exit(dag, comp, cutset)
+        except LoweringError as e:
+            return False, str(e)
+        inside = set(comp)
+        n_ext = sum(len(dag.stages[s].allocations) for s in comp)
+        n_cut_in = sum(1 for i, e in enumerate(dag.edges)
+                       if i in cutset and e.consumer_stage in inside)
+        intra = {e.name for i, e in enumerate(dag.edges)
+                 if i not in cutset and e.producer_stage in inside}
+        vmem = (stream_vmem_bytes(block, depth) * (n_ext + n_cut_in)
+                + stream_vmem_bytes(block, depth)   # the output stream
+                + len(intra) * block                # intermediate slots
+                + block)                            # reduce accumulator
+        if vmem > VMEM_BUDGET_BYTES:
+            return False, (f"component {comp} working set "
+                           f"{vmem / 2**20:.1f} MiB exceeds budget "
+                           f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB")
+    return True, "ok"
+
+
+def dag_model_cost(dag: ChainDAG, cut: Sequence[int], *,
+                   sched: Schedule = DEFAULT_SCHEDULE,
+                   step_cost: int = STEP_COST) -> float:
+    """Eq. (1)–(3) cost of executing the DAG under one cut.
+
+    Each fused component is ONE stream region (:func:`repro.core.compiler.
+    _fused_region_count`: single setup, bodies summed, union of lanes);
+    each cut edge charges the store its producer pays and the load its
+    consumer re-issues (2·ΠL explicit accesses — exactly the accesses
+    ``chain_dag`` credits as eliminated when the edge fuses); and every
+    component pays the per-grid-step dispatch charge of its own kernel.
+    """
+    from .lowering import _dag_components
+
+    cutset = frozenset(int(i) for i in cut)
+    comps = _dag_components(dag, cutset)
+    elems = math.prod(dag.bounds)
+    steps = -(-dag.bounds[-1] // sched.block_elems) * \
+        math.prod(dag.bounds[:-1])
+    half = step_cost / 2.0
+    per_step = half + half / (_max_depth(sched) - 1)
+    total = 0.0
+    for comp in comps:
+        total += _fused_region_count([dag.stages[s] for s in comp],
+                                     dag.bounds)
+        total += per_step * steps
+    cut_names = {dag.edges[i].name for i in cutset}
+    total += elems * (len(cutset) + len(cut_names))  # loads + stores
+    return float(total)
+
+
+def autotune_dag(nests: Sequence[LoopNest], bodies: Sequence[Callable],
+                 operands: Dict[str, Any], *,
+                 mode: str = "map", out_dtype="float32",
+                 num_lanes: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 top_k: int = 4, warmup: int = 1, iters: int = 3,
+                 cores: int = 1,
+                 cache: Optional[ScheduleCache] = None,
+                 use_cache: bool = True, force: bool = False,
+                 uniforms: Optional[Dict[str, Any]] = None) -> TuneResult:
+    """Search the DAG's legal cuts → prune by model → measure → commit.
+
+    The all-fused cut ``()`` and the full cut (all edges materialised —
+    the unfused composition) always race, so the committed partition is
+    never slower than either endpoint *as measured* — the gate
+    ``bench_dag`` re-checks.  The winner is committed as a
+    :class:`Schedule` whose ``cut_edges`` records the partition, under
+    :func:`dag_cache_key`, so a subsequent plain ``ssr_dag_call`` resolves
+    it transparently.
+    """
+    import jax
+
+    from .lowering import _dag_for, _uniform_items, ssr_dag_call
+
+    nests = tuple(nests)
+    bodies = tuple(bodies)
+    dag = _dag_for(nests, num_lanes)
+    cache = cache or (global_cache() if use_cache else None)
+    # normalise exactly like ssr_dag_call so the committed key matches the
+    # one its transparent dispatch looks up
+    uniforms = dict(_uniform_items(uniforms))
+    key = dag_cache_key(nests, operands, mode=mode,
+                        out_dtype=str(out_dtype), cores=cores,
+                        uniforms=uniforms)
+    if cache is not None and not force:
+        hit = cache.get(key)
+        if hit is not None:
+            meta = cache.meta(key) or {}
+            m = meta.get("meta", {})
+            return TuneResult(key=key, schedule=hit,
+                              tuned_us=float(m.get("tuned_us", 0.0)),
+                              default_us=float(m.get("default_us", 0.0)),
+                              candidates=int(m.get("candidates", 0)),
+                              measured=0, from_cache=True)
+
+    legal = [c for c in enumerate_cuts(dag)
+             if dag_cut_is_legal(dag, c)[0]]
+    full = tuple(range(len(dag.edges)))
+    ranked = sorted(legal, key=lambda c: (dag_model_cost(dag, c), c))
+    survivors = ranked[:max(1, top_k)]
+    for anchor in ((), full):            # both endpoints always race
+        if anchor in legal and anchor not in survivors:
+            survivors.append(anchor)
+
+    def call(cut: Tuple[int, ...]):
+        sched = dataclasses.replace(DEFAULT_SCHEDULE, cut_edges=cut)
+        return ssr_dag_call(nests, bodies, operands, mode=mode,
+                            out_dtype=out_dtype, schedule=sched,
+                            num_lanes=num_lanes, interpret=interpret,
+                            uniforms=uniforms)
+
+    best = [float("inf")] * len(survivors)
+    for _ in range(max(0, warmup)):
+        for cut in survivors:
+            jax.block_until_ready(jax.tree.leaves(call(cut)))
+    for _ in range(max(1, iters)):
+        for i, cut in enumerate(survivors):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.tree.leaves(call(cut)))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    timings = [(us * 1e6, cut) for us, cut in zip(best, survivors)]
+    fused_us = next((us for us, c in timings if c == ()), float("inf"))
+    tuned_us, winner_cut = min(timings, key=lambda t: (t[0], t[1]))
+    winner = dataclasses.replace(DEFAULT_SCHEDULE, cut_edges=winner_cut)
+
+    if cache is not None:
+        cache.put(key, winner, meta={
+            "tuned_us": tuned_us, "default_us": fused_us,
+            "candidates": len(legal), "measured": len(survivors),
+            "dag": [nest_signature(n) for n in nests],
+            "edges": len(dag.edges), "cut_edges": list(winner_cut),
+            "mode": mode, "out_dtype": str(out_dtype), "cores": cores,
+            "backend": _backend(),
+        })
+    return TuneResult(key=key, schedule=winner, tuned_us=tuned_us,
+                      default_us=fused_us, candidates=len(legal),
+                      measured=len(survivors))

@@ -221,6 +221,33 @@ def _stage_instr_counts(plan: StreamPlan) -> List[int]:
     return nest_analysis.instr_counts(plan.nest, plan.residual)
 
 
+def _unify_walk(name: str, w: MemRef, r: MemRef) -> None:
+    """Raise ChainError unless the producer's write walk and the consumer's
+    read walk of ``name`` are the same affine address sequence — the
+    condition under which the store and the load cancel."""
+    if w.coeffs is None or r.coeffs is None:
+        raise ChainError(
+            f"intermediate '{name}' is not affine on both sides")
+    if w.coeffs != r.coeffs or w.offset != r.offset:
+        raise ChainError(
+            f"intermediate '{name}': producer walk "
+            f"{w.coeffs}+{w.offset} != consumer walk "
+            f"{r.coeffs}+{r.offset}; streams cannot be unified")
+
+
+def _fused_region_count(stages: Sequence[StreamPlan],
+                        bounds: Sequence[int]) -> int:
+    """Eq. (1) for one fused stream region: a single setup over the union
+    of the surviving lanes, per-level bodies summed across stages."""
+    L = list(bounds)
+    I = [0] * len(bounds)
+    for plan in stages:
+        for lvl, c in enumerate(_stage_instr_counts(plan)):
+            I[lvl] += c
+    s = sum(len(p.allocations) for p in stages)
+    return isa.n_ssr(L, I, s) if s else isa.n_base(L, I, 0)
+
+
 def chain(nests: Sequence[LoopNest], *,
           num_lanes: Optional[int] = None,
           force: bool = False) -> ChainedPlan:
@@ -255,14 +282,7 @@ def chain(nests: Sequence[LoopNest], *,
                 f"stages {k}→{k + 1}: need exactly one producer-write / "
                 f"consumer-read ref in common, found {common or 'none'}")
         w, r = writes[common[0]], reads[common[0]]
-        if w.coeffs is None or r.coeffs is None:
-            raise ChainError(
-                f"intermediate '{common[0]}' is not affine on both sides")
-        if w.coeffs != r.coeffs or w.offset != r.offset:
-            raise ChainError(
-                f"intermediate '{common[0]}': producer walk "
-                f"{w.coeffs}+{w.offset} != consumer walk "
-                f"{r.coeffs}+{r.offset}; streams cannot be unified")
+        _unify_walk(common[0], w, r)
         links.append(ChainLink(name=common[0], producer_stage=k,
                                coeffs=w.coeffs, offset=w.offset,
                                elems=math.prod(bounds)))
@@ -295,19 +315,226 @@ def chain(nests: Sequence[LoopNest], *,
 
     # Fused cost: one setup over the union of surviving lanes; the body at
     # each level is the sum of every stage's body (+ residual accesses).
-    L = list(bounds)
-    I_chain = [0] * len(bounds)
-    for plan in stages:
-        for lvl, c in enumerate(_stage_instr_counts(plan)):
-            I_chain[lvl] += c
-    s_chain = sum(len(p.allocations) for p in stages)
-    n_chain = (isa.n_ssr(L, I_chain, s_chain) if s_chain
-               else isa.n_base(L, I_chain, 0))
+    n_chain = _fused_region_count(stages, bounds)
 
     elems = sum(link.elems for link in links)
     return ChainedPlan(stages=stages, links=tuple(links), bounds=bounds,
                        n_chain=n_chain, n_unfused=n_unfused,
                        eliminated_loads=elems, eliminated_stores=elems)
+
+
+# --------------------------------------------------------------------------
+# Chain DAGs: whole-program fusion beyond linear pipelines.
+#
+# Production dataflow — layernorm, softmax cross-entropy, MLP blocks — is
+# not a pipeline: one produced value feeds *several* consumers (diamonds,
+# residual adds).  The scalar-chaining follow-up (arXiv 2503.20609) shows
+# register chaining generalizes to arbitrary DAGs; our block-granular
+# analogue lifts ChainedPlan to a ChainDAG whose edges each record one
+# producer-WRITE → consumer-READ unification.  A multi-consumer
+# intermediate is written to VMEM scratch once and read K times, so the
+# accounting credits ONE eliminated store and K eliminated loads — the
+# refcount the lowering uses to free the scratch slot after its last
+# consumer.  ChainedPlan remains the linear special case (exactly one
+# consumer per edge, consumer == producer + 1) and keeps its own
+# entry point so linear-chain behavior is unchanged.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DagEdge:
+    """One producer→consumer dataflow edge of a :class:`ChainDAG`.
+
+    Like :class:`ChainLink` plus an explicit ``consumer_stage`` — in a DAG
+    the consumer is no longer implied by ``producer_stage + 1``, and one
+    producer may appear in several edges (multi-consumer intermediate).
+    """
+
+    name: str
+    producer_stage: int
+    consumer_stage: int
+    coeffs: Tuple[int, ...]
+    offset: int
+    elems: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainDAG:
+    """Stages fused over one iteration space along an arbitrary DAG.
+
+    ``stages[k]`` is the per-stage plan with every edge ref stripped (a
+    produced value is stored by no one, loaded by no one); ``edges`` are
+    the unified intermediates in deterministic ``(consumer, producer,
+    name)`` order.  Stage order is topological by construction (an edge
+    always points forward).  The cost fields mirror :class:`ChainedPlan`:
+
+    * ``n_dag``     — ONE fused stream region (single setup, union of
+      surviving lanes, bodies summed);
+    * ``n_unfused`` — Σ of stand-alone per-stage counts, each paying its
+      own setup and its intermediate store/load lanes;
+    * ``eliminated_stores`` — ΠL per *distinct* intermediate (written
+      once no matter how many consumers);
+    * ``eliminated_loads``  — ΠL per *edge* (each consumer's load is a
+      separate eliminated access — the multi-consumer credit).
+    """
+
+    stages: Tuple[StreamPlan, ...]
+    edges: Tuple[DagEdge, ...]
+    bounds: Tuple[int, ...]
+    n_dag: int
+    n_unfused: int
+    eliminated_loads: int
+    eliminated_stores: int
+
+    @property
+    def links(self) -> Tuple[DagEdge, ...]:
+        """Lowering-compatible view: the edges are the chain's links."""
+        return self.edges
+
+    @property
+    def eliminated_accesses(self) -> int:
+        return self.eliminated_loads + self.eliminated_stores
+
+    @property
+    def dag_speedup(self) -> float:
+        """Instruction-count speedup of the fused region vs the sequence."""
+        return self.n_unfused / self.n_dag
+
+    @property
+    def num_lanes(self) -> int:
+        return sum(len(s.allocations) for s in self.stages)
+
+    @property
+    def intermediates(self) -> Tuple[str, ...]:
+        """Distinct produced names, in producer-stage order."""
+        seen: List[str] = []
+        for e in sorted(self.edges, key=lambda e: (e.producer_stage, e.name)):
+            if e.name not in seen:
+                seen.append(e.name)
+        return tuple(seen)
+
+    def in_edges(self, stage: int) -> Tuple[DagEdge, ...]:
+        """Incoming edges of ``stage`` in (producer, name) order — the
+        order the stage's body receives its carried blocks."""
+        return tuple(sorted((e for e in self.edges
+                             if e.consumer_stage == stage),
+                            key=lambda e: (e.producer_stage, e.name)))
+
+    def out_edges(self, stage: int) -> Tuple[DagEdge, ...]:
+        return tuple(sorted((e for e in self.edges
+                             if e.producer_stage == stage),
+                            key=lambda e: (e.consumer_stage, e.name)))
+
+    def last_consumer(self, name: str) -> int:
+        """The stage after which ``name``'s scratch slot is dead — the
+        refcount-to-zero point the lowering frees at."""
+        return max(e.consumer_stage for e in self.edges if e.name == name)
+
+
+def chain_dag(nests: Sequence[LoopNest], *,
+              num_lanes: Optional[int] = None,
+              force: bool = False) -> ChainDAG:
+    """Fuse a topologically-ordered sequence of nests into one ChainDAG.
+
+    Dataflow is discovered by name: a ref WRITTEN by stage p and READ by a
+    later stage c becomes an edge p→c (one write may feed many reads); a
+    read name no earlier stage writes stays an external operand stream.
+    The same loud :class:`ChainError` failures as :func:`chain` apply to
+    still-illegal graphs — mismatched iteration spaces, non-affine or
+    mismatched walks — plus the DAG-specific ones: a name written twice,
+    a read before its write (the sequence must be topological), a
+    disconnected stage, and more than one terminal stage (only the final
+    stage's value may leave the fused region).
+    """
+    nests = tuple(nests)
+    if len(nests) < 2:
+        raise ChainError("chaining needs at least two nests")
+    bounds = nests[0].bounds
+    for k, nest in enumerate(nests[1:], start=1):
+        if nest.bounds != bounds:
+            raise ChainError(
+                f"stage {k} iteration space {nest.bounds} != stage 0 "
+                f"{bounds}; chained nests must share one iteration space")
+
+    writers: dict = {}
+    for k, nest in enumerate(nests):
+        for r in nest.refs:
+            if r.kind != Direction.WRITE:
+                continue
+            if r.name in writers:
+                raise ChainError(
+                    f"intermediate '{r.name}' is written by both stage "
+                    f"{writers[r.name][0]} and stage {k}; each intermediate "
+                    "needs exactly one producer")
+            writers[r.name] = (k, r)
+
+    edges: List[DagEdge] = []
+    for k, nest in enumerate(nests):
+        for r in nest.refs:
+            if r.kind != Direction.READ or r.name not in writers:
+                continue
+            p, w = writers[r.name]
+            if p >= k:
+                raise ChainError(
+                    f"stage {k} reads '{r.name}' which stage {p} has not "
+                    "produced yet; stages must be listed in topological "
+                    "order (producers before consumers)")
+            _unify_walk(r.name, w, r)
+            edges.append(DagEdge(name=r.name, producer_stage=p,
+                                 consumer_stage=k, coeffs=w.coeffs,
+                                 offset=w.offset, elems=math.prod(bounds)))
+    edges.sort(key=lambda e: (e.consumer_stage, e.producer_stage, e.name))
+
+    consumed = {e.name for e in edges}
+    touched = {e.producer_stage for e in edges} \
+        | {e.consumer_stage for e in edges}
+    for k in range(len(nests)):
+        if k not in touched:
+            raise ChainError(
+                f"stage {k} is disconnected from the dag: no produced "
+                "value links it to any other stage")
+    sinks = [k for k in range(len(nests))
+             if not any(e.producer_stage == k for e in edges)]
+    if sinks != [len(nests) - 1]:
+        raise ChainError(
+            f"stages {sinks} all terminate the dag; exactly one final "
+            "stage (the last) may produce the fused region's output")
+    for name, (k, _w) in writers.items():
+        if name not in consumed:
+            raise ChainError(
+                f"stage {k} writes '{name}' but no later stage reads it; "
+                "dead intermediates cannot leave the fused region")
+
+    # Strip every unified ref: each produced name loses its single WRITE
+    # and each of its consumer READs — the store and K loads all vanish.
+    stage_nests: List[LoopNest] = []
+    for k, nest in enumerate(nests):
+        incoming = {e.name for e in edges if e.consumer_stage == k}
+        outgoing = {e.name for e in edges if e.producer_stage == k}
+        refs = tuple(
+            r for r in nest.refs
+            if not (r.name in incoming and r.kind == Direction.READ)
+            and not (r.name in outgoing and r.kind == Direction.WRITE))
+        stage_nests.append(dataclasses.replace(nest, refs=refs))
+
+    stages = tuple(
+        ssrify(sn, num_lanes=nest_analysis.auto_lanes(sn, num_lanes),
+               force=force)
+        for sn in stage_nests)
+
+    unfused_plans = [
+        ssrify(n, num_lanes=nest_analysis.auto_lanes(n, num_lanes),
+               force=force)
+        for n in nests]
+    n_unfused = sum(
+        p.n_ssr if p.ssrified else p.n_base for p in unfused_plans)
+    n_dag = _fused_region_count(stages, bounds)
+
+    elems = math.prod(bounds)
+    return ChainDAG(stages=stages, edges=tuple(edges), bounds=bounds,
+                    n_dag=n_dag, n_unfused=n_unfused,
+                    eliminated_loads=elems * len(edges),
+                    eliminated_stores=elems * len(consumed))
 
 
 # --------------------------------------------------------------------------

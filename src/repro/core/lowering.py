@@ -59,8 +59,8 @@ import jax.numpy as jnp
 
 from . import agu
 from . import nest_analysis
-from .compiler import (Allocation, ChainedPlan, LoopNest, StreamPlan,
-                       _dense_strides, chain, ssrify)
+from .compiler import (Allocation, ChainDAG, ChainedPlan, LoopNest,
+                       StreamPlan, _dense_strides, chain, chain_dag, ssrify)
 from .ssr import BlockStream, auto_block, ssr_pallas
 from .stream import Direction, StreamSpec
 
@@ -125,7 +125,20 @@ class Schedule:
       (``core/ssr.py::_pipelined_call``) that prefetches grid step
       ``i + depth − 1`` while step ``i`` computes.  VMEM budgeting scales
       with it (``ssr.stream_vmem_bytes``), so the autotuner trades depth
-      against tile size under one budget.
+      against tile size under one budget;
+    * ``stream_depths`` — per-stream FIFO depths (one entry per read
+      stream, in allocation order), overriding the uniform
+      ``buffer_depth``: the strided operand that misses in HBM gets a
+      deep rotation while the unit-stride one stays shallow, each charged
+      individually through ``ssr.stream_vmem_bytes``.  ``None`` (the
+      default) keeps every stream at ``buffer_depth``.  Searched only in
+      full (non-quick) autotune runs;
+    * ``cut_edges`` — for fused-DAG calls only (``ssr_dag_call``): the
+      edge indices (into ``ChainDAG.edges``) at which the graph is *cut*
+      into separate kernels, each cut intermediate materialising in HBM.
+      ``None``/``()`` fuses the whole DAG into one kernel.  The fusion
+      search (``autotune.autotune_dag``) commits the winning cut here so
+      dispatch resolves the best partitioning transparently.
 
     Frozen + hashable: a ``Schedule`` is a cache key component everywhere
     (kernel cache, schedule cache, benchmark provenance).
@@ -138,6 +151,8 @@ class Schedule:
     axis_order: Optional[Tuple[int, ...]] = None
     acc_dtype: str = "float32"
     buffer_depth: int = 2
+    stream_depths: Optional[Tuple[int, ...]] = None
+    cut_edges: Optional[Tuple[int, ...]] = None
 
     @property
     def policy(self) -> BlockPolicy:
@@ -154,11 +169,17 @@ class Schedule:
     def to_json(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["axis_order"] = list(self.axis_order) if self.axis_order else None
+        d["stream_depths"] = (list(self.stream_depths)
+                              if self.stream_depths else None)
+        d["cut_edges"] = (list(self.cut_edges)
+                          if self.cut_edges is not None else None)
         return d
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "Schedule":
         ao = d.get("axis_order")
+        sd = d.get("stream_depths")
+        ce = d.get("cut_edges")
         return cls(rows=int(d["rows"]), lanes=int(d["lanes"]),
                    lanes_tile_factor=int(d.get("lanes_tile_factor",
                                                _LANES_TILE_FACTOR)),
@@ -166,10 +187,28 @@ class Schedule:
                                               _ROWS_TILE_FACTOR)),
                    axis_order=tuple(int(a) for a in ao) if ao else None,
                    acc_dtype=str(d.get("acc_dtype", "float32")),
-                   buffer_depth=int(d.get("buffer_depth", 2)))
+                   buffer_depth=int(d.get("buffer_depth", 2)),
+                   stream_depths=(tuple(int(x) for x in sd)
+                                  if sd else None),
+                   cut_edges=(tuple(int(x) for x in ce)
+                              if ce is not None else None))
 
 
 DEFAULT_SCHEDULE = Schedule()
+
+
+def _depths_for(sched: Schedule, n_in: int):
+    """The ``buffer_depth`` argument for ``ssr_pallas``: the uniform depth,
+    or the schedule's per-stream override (one entry per read stream, in
+    allocation order — satellite of the asymmetric-depth search)."""
+    if sched.stream_depths is None:
+        return sched.buffer_depth
+    if len(sched.stream_depths) != n_in:
+        raise LoweringError(
+            f"schedule.stream_depths has {len(sched.stream_depths)} entries "
+            f"for {n_in} read streams; give one depth per stream "
+            "(allocation order)")
+    return tuple(sched.stream_depths)
 
 
 def _resolve_schedule(policy: BlockPolicy,
@@ -691,15 +730,17 @@ def lower_nest(plan: StreamPlan,
 
 @dataclasses.dataclass(frozen=True)
 class LoweredChain:
-    """A ChainedPlan turned into a single launchable Pallas schedule.
+    """A ChainedPlan *or* ChainDAG turned into one launchable schedule.
 
     All stages share one grid (the unified iteration space, innermost level
     tiled by the policy block).  ``stage_in_streams[k]`` are stage k's
     external read streams; the link intermediates have *no* streams at all —
-    they exist only as VMEM scratch inside the kernel.
+    they exist only as VMEM scratch inside the kernel.  For a ChainDAG the
+    scratch slots are refcounted: a produced block's slot is reused once
+    its last consumer stage has read it (see ``_dag_slots``).
     """
 
-    chained: ChainedPlan
+    chained: Any                    # ChainedPlan | ChainDAG
     policy: BlockPolicy
     grid: Tuple[int, ...]
     stage_in_streams: Tuple[Tuple[LoweredStream, ...], ...]
@@ -714,10 +755,14 @@ class LoweredChain:
         return math.prod(self.grid)
 
 
-def lower_chain(chained: ChainedPlan,
-                policy: BlockPolicy = DEFAULT_POLICY, *,
+def lower_chain(chained, policy: BlockPolicy = DEFAULT_POLICY, *,
                 schedule: Optional[Schedule] = None) -> LoweredChain:
-    """Lower a producer→consumer chain to one fused Pallas schedule.
+    """Lower a chain (or chain DAG) to one fused Pallas schedule.
+
+    Accepts a linear :class:`ChainedPlan` or a :class:`ChainDAG` — both
+    expose ``stages``/``links``/``bounds``, and the stage emission is
+    topologically ordered either way (a linear chain is the special case
+    where stage k's only consumer is stage k+1).
 
     Block-granular chaining requires each link to walk the canonical dense
     row-major pattern of the shared iteration space: then grid step ``g``'s
@@ -803,6 +848,13 @@ def _chain_for(nests: Tuple[LoopNest, ...],
 
 
 @functools.lru_cache(maxsize=CACHE_MAX)
+def _dag_for(nests: Tuple[LoopNest, ...],
+             num_lanes: Optional[int]) -> ChainDAG:
+    """Chain-DAG cache (force=True: the caller asked to execute fused)."""
+    return chain_dag(nests, num_lanes=num_lanes, force=True)
+
+
+@functools.lru_cache(maxsize=CACHE_MAX)
 def _lowered_for(plan: StreamPlan, sched: Schedule, nested: bool):
     """Lowered-schedule cache: the pure-Python lowering per (plan, sched)."""
     if nested:
@@ -817,7 +869,7 @@ def _lowered_chain_for(chained: ChainedPlan,
 
 
 #: Every LRU in this layer, for clear/inspection: the plan caches…
-_PLAN_CACHES = (_plan_for, plan_stats, _chain_for, _lowered_for,
+_PLAN_CACHES = (_plan_for, plan_stats, _chain_for, _dag_for, _lowered_for,
                 _lowered_chain_for)
 
 
@@ -911,11 +963,17 @@ def _assemble_kernel(grid: Tuple[int, ...], policy: BlockPolicy,
                      compute: Callable, n_links: int, mode: str,
                      out_dtype, part_shape: Optional[Tuple[int, ...]],
                      interpret: Optional[bool],
-                     buffer_depth: int = 2) -> Callable:
+                     buffer_depth: int = 2,
+                     uniforms: Sequence[jax.ShapeDtypeStruct] = ()) -> Callable:
     """Shared kernel assembler for single-nest and chained plans.
 
     ``compute(in_refs, link_refs)`` returns the per-step value; ``n_links``
     VMEM scratch blocks hold chained intermediates (zero for plain plans).
+    ``uniforms`` appends whole-array operands (weights, tables) delivered
+    to every grid step as ONE block — a loop-invariant stream whose block
+    *is* the array, fetched once (the pipelined emitter already special-
+    cases invariant streams).  Their refs trail the streamed inputs in
+    ``in_refs``.
     Reduce mode accumulates into a *vector* accumulator when the partial is
     a multi-element 2-D block — the whole (rows, lanes) vreg adds every
     step, folded to the scalar exactly once on the last step — and keeps
@@ -926,6 +984,16 @@ def _assemble_kernel(grid: Tuple[int, ...], policy: BlockPolicy,
     from jax.experimental import pallas as pl
     from jax.experimental.pallas import tpu as pltpu
 
+    if uniforms:
+        def _whole(nd: int):
+            return lambda *_g: (0,) * nd
+
+        in_streams = list(in_streams) + [
+            BlockStream(tuple(u.shape), _whole(len(u.shape)),
+                        Direction.READ, name=f"_uniform{i}")
+            for i, u in enumerate(uniforms)]
+        if isinstance(buffer_depth, tuple):
+            buffer_depth = buffer_depth + (2,) * len(uniforms)
     n_in = len(in_streams)
     link_scratch = [pltpu.VMEM(policy.block_shape, out_dtype)
                     for _ in range(n_links)]
@@ -1005,12 +1073,19 @@ def _probe_part_shape(fn: Callable, in_shapes: Sequence[Tuple[int, ...]],
 
 
 def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
-                  out_dtype, interpret: Optional[bool]) -> Callable:
-    """Wrap a block-level ``body`` into a full ssr_pallas kernel."""
+                  out_dtype, interpret: Optional[bool],
+                  uniforms: Sequence[jax.ShapeDtypeStruct] = ()) -> Callable:
+    """Wrap a block-level ``body`` into a full ssr_pallas kernel.
+
+    ``body(*stream_blocks, *uniform_arrays)`` — uniform refs trail the
+    streamed inputs in ``in_refs``, so the pass-through read below hands
+    the body exactly that order.
+    """
     part_shape = None
     if mode == "reduce":
         part_shape = _probe_part_shape(
-            body, [s.stream.block_shape for s in lowered.in_streams],
+            body, [s.stream.block_shape for s in lowered.in_streams]
+            + [tuple(u.shape) for u in uniforms],
             out_dtype)
 
     def compute(in_refs, _links):
@@ -1019,7 +1094,10 @@ def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
     return _assemble_kernel(lowered.grid, lowered.policy,
                             [s.stream for s in lowered.in_streams],
                             compute, 0, mode, out_dtype, part_shape,
-                            interpret, lowered.schedule.buffer_depth)
+                            interpret,
+                            _depths_for(lowered.schedule,
+                                        len(lowered.in_streams)),
+                            uniforms=uniforms)
 
 
 def _build_nest_kernel(lowered: LoweredNest, body: Callable,
@@ -1089,7 +1167,7 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
         scratch_shapes=scratch,
         interpret=interpret,
         dimension_semantics=lowered.semantics,
-        buffer_depth=lowered.schedule.buffer_depth,
+        buffer_depth=_depths_for(lowered.schedule, len(lowered.in_streams)),
     )
 
 
@@ -1171,7 +1249,155 @@ def _build_chain_kernel(lowered: LoweredChain, bodies: Sequence[Callable],
     return _assemble_kernel(lowered.grid, policy,
                             [s.stream for s in lowered.in_streams],
                             compute, n_links, mode, out_dtype, part_shape,
-                            interpret, lowered.schedule.buffer_depth)
+                            interpret,
+                            _depths_for(lowered.schedule,
+                                        len(lowered.in_streams)))
+
+
+def _dag_slots(dag: ChainDAG) -> Tuple[Dict[str, int], int]:
+    """Refcounted VMEM scratch-slot assignment for a ChainDAG's values.
+
+    Walking the stages in (topological) order: a produced block takes a
+    slot; once its *last* consumer stage has read it the slot returns to
+    the free list and the next producer reuses it.  Reuse within one stage
+    is safe because bodies receive block *values* (``ref[...]`` copies) —
+    every read of a dying slot happens before the producing write.  Returns
+    ``(slot_of, n_slots)``: the per-intermediate slot index and the peak
+    number of live blocks (what the kernel actually allocates — a diamond
+    needs 2 slots, not one per edge).
+    """
+    slot_of: Dict[str, int] = {}
+    free: list = []
+    n_slots = 0
+    n = len(dag.stages)
+    for k in range(n):
+        for name in sorted({e.name for e in dag.in_edges(k)}):
+            if dag.last_consumer(name) == k:
+                free.append(slot_of[name])
+        if k == n - 1:
+            continue        # the final value exits via the call epilogue
+        produced = sorted({e.name for e in dag.out_edges(k)})
+        if len(produced) != 1:
+            raise LoweringError(
+                f"dag stage {k} produces intermediates {produced}; a stage "
+                "body returns one block, so each non-final stage must "
+                "write exactly one intermediate")
+        if free:
+            slot_of[produced[0]] = free.pop()
+        else:
+            slot_of[produced[0]] = n_slots
+            n_slots += 1
+    return slot_of, n_slots
+
+
+def _dag_stage_shapes(lowered: LoweredChain, bodies: Sequence[Callable],
+                      out_dtype, require_final_block: bool = False,
+                      uniforms: Sequence[jax.ShapeDtypeStruct] = ()
+                      ) -> Tuple[int, ...]:
+    """Shape-check every DAG stage and return the final partial's shape.
+
+    Stage ``k``'s body receives one carried block per incoming edge (in
+    ``ChainDAG.in_edges`` order) followed by its external stream blocks,
+    then every uniform array; every non-final stage must return exactly
+    one policy block — the VMEM scratch its consumers read.
+    """
+    policy = lowered.policy
+    dag = lowered.chained
+    cur: Any = None
+    for k, stage in enumerate(lowered.stage_in_streams):
+        carried = [jax.ShapeDtypeStruct(policy.block_shape, out_dtype)
+                   for _ in dag.in_edges(k)]
+        ins = [jax.ShapeDtypeStruct(s.stream.block_shape, out_dtype)
+               for s in stage]
+        cur = jax.eval_shape(lambda *xs, _b=bodies[k]: _b(*xs),
+                             *carried, *ins, *uniforms)
+        must_block = k < len(bodies) - 1 or require_final_block
+        if must_block and math.prod(cur.shape) != policy.block_elems:
+            what = ("a dag intermediate" if k < len(bodies) - 1
+                    else "the map-mode output")
+            raise LoweringError(
+                f"dag stage {k} body returns shape {cur.shape} "
+                f"({math.prod(cur.shape)} elements); {what} "
+                f"must fill one {policy.block_shape} VMEM block")
+    return tuple(cur.shape)
+
+
+def _build_dag_kernel(lowered: LoweredChain, bodies: Sequence[Callable],
+                      mode: str, out_dtype, interpret: Optional[bool],
+                      uniforms: Sequence[jax.ShapeDtypeStruct] = ()
+                      ) -> Callable:
+    """Fuse a ChainDAG's stage bodies into ONE Pallas kernel.
+
+    Topologically-ordered stage emission: per grid step each stage reads
+    its carried blocks from the refcounted VMEM scratch slots
+    (:func:`_dag_slots`), computes, and (when non-final) writes its product
+    block into its own slot.  A multi-consumer intermediate is written once
+    and read by every consumer stage from the same slot — the store and all
+    K loads that an unfused composition would pay never touch HBM.
+    """
+    policy = lowered.policy
+    dag = lowered.chained
+    counts = [len(stage) for stage in lowered.stage_in_streams]
+    offsets = [0]
+    for c in counts[:-1]:
+        offsets.append(offsets[-1] + c)
+    slot_of, n_slots = _dag_slots(dag)
+    n_stream = len(lowered.in_streams)
+
+    final_shape = _dag_stage_shapes(lowered, bodies, out_dtype,
+                                    require_final_block=(mode == "map"),
+                                    uniforms=uniforms)
+    part_shape = final_shape if mode == "reduce" else None
+
+    def compute(in_refs, link_refs):
+        uni = [r[...] for r in in_refs[n_stream:]]
+        cur: Any = None
+        for k in range(len(bodies)):
+            carried = [link_refs[slot_of[e.name]][...]
+                       for e in dag.in_edges(k)]
+            ext = [r[...] for r in
+                   in_refs[offsets[k]:offsets[k] + counts[k]]]
+            cur = bodies[k](*carried, *ext, *uni)
+            if k < len(bodies) - 1:
+                name = dag.out_edges(k)[0].name
+                link_refs[slot_of[name]][...] = jnp.asarray(
+                    cur, out_dtype).reshape(policy.block_shape)
+        return cur
+
+    return _assemble_kernel(lowered.grid, policy,
+                            [s.stream for s in lowered.in_streams],
+                            compute, n_slots, mode, out_dtype, part_shape,
+                            interpret,
+                            _depths_for(lowered.schedule,
+                                        len(lowered.in_streams)),
+                            uniforms=uniforms)
+
+
+def _uniform_items(uniforms: Optional[Dict[str, jax.Array]]
+                   ) -> Tuple[Tuple[str, jax.Array], ...]:
+    """Normalise a uniforms dict to ``((name, array), ...)`` in dict order.
+
+    1-D arrays gain a leading singleton (Pallas blocks are at least 2-D);
+    scalars are rejected — a Python float in the body's closure is already
+    hashable, cacheable, and free.
+    """
+    if not uniforms:
+        return ()
+    items = []
+    for name, arr in uniforms.items():
+        a = jnp.asarray(arr)
+        if a.ndim == 0:
+            raise ValueError(
+                f"uniform {name!r} is a scalar; close over the Python "
+                "value instead — scalar closures hash and cache fine")
+        if a.ndim == 1:
+            a = a.reshape(1, -1)
+        items.append((name, a))
+    return tuple(items)
+
+
+def _uniform_sig(items: Tuple[Tuple[str, jax.Array], ...]) -> Tuple:
+    return tuple((nm, tuple(a.shape), str(a.dtype)) for nm, a in items)
 
 
 def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
@@ -1181,7 +1407,8 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
              policy: BlockPolicy = DEFAULT_POLICY,
              schedule: Optional[Schedule] = None,
              num_lanes: Optional[int] = None,
-             interpret: Optional[bool] = None) -> jax.Array:
+             interpret: Optional[bool] = None,
+             uniforms: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
     """Execute a :class:`LoopNest` as a streamed Pallas kernel.
 
     ``body(*blocks)`` is the pure compute region: it receives one VMEM block
@@ -1234,6 +1461,11 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     has_output = any(r.kind == Direction.WRITE for r in nest.refs)
     if has_output:
         mode = "nest"          # the output ref, not the mode, shapes the call
+    uni = _uniform_items(uniforms)
+    if uni and has_output:
+        raise LoweringError(
+            "uniform operands are not supported on the level-mapped "
+            "(explicit WRITE ref) path; use a map/reduce nest")
     lowered = _lowered_for(plan, sched, has_output)
     missing = [s.name for s in lowered.in_streams if s.name not in operands]
     if missing:
@@ -1243,21 +1475,24 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     DISPATCH_STATS["calls"] += 1
     key = (nest, sched, mode, _body_key(body), str(jnp.dtype(out_dtype)),
            tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
-           num_lanes, interpret)
+           _uniform_sig(uni), num_lanes, interpret)
     fn = _kernel_cache_get(key)
     if fn is None:
         if has_output:
             kernel = _build_nest_kernel(lowered, body, jnp.dtype(out_dtype),
                                         interpret)
         else:
-            kernel = _build_kernel(lowered, body, mode, jnp.dtype(out_dtype),
-                                   interpret)
+            kernel = _build_kernel(
+                lowered, body, mode, jnp.dtype(out_dtype), interpret,
+                uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                               for _, a in uni))
 
         def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
             DISPATCH_STATS["traces"] += 1   # moves only while tracing
+            ns = len(_lowered.in_streams)
             prepared = [s.prepare(a)
-                        for s, a in zip(_lowered.in_streams, arrs)]
-            out = _kernel(*prepared)
+                        for s, a in zip(_lowered.in_streams, arrs[:ns])]
+            out = _kernel(*prepared, *arrs[ns:])
             if has_output:
                 return _trim_nest_output(out, _lowered)
             return _trim_output(out, nest.bounds, mode, sched.policy)
@@ -1265,7 +1500,7 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
         fn = jax.jit(pipeline)
         DISPATCH_STATS["builds"] += 1
         _kernel_cache_put(key, fn)
-    return fn(*arrays)
+    return fn(*arrays, *[a for _, a in uni])
 
 
 def _trim_output(out: jax.Array, bounds: Tuple[int, ...], mode: str,
@@ -1347,3 +1582,257 @@ def ssr_chain_call(nests: Sequence[LoopNest],
         DISPATCH_STATS["builds"] += 1
         _kernel_cache_put(key, fn)
     return fn(*arrays)
+
+
+def _dag_components(dag: ChainDAG,
+                    cut: frozenset) -> Tuple[Tuple[int, ...], ...]:
+    """Connected stage components over the *non-cut* edges, ordered by
+    their maximum stage index — a valid topological order of the
+    partition (every cut edge points from one component's exit to a
+    higher-indexed stage of a later component)."""
+    parent = list(range(len(dag.stages)))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i, e in enumerate(dag.edges):
+        if i not in cut:
+            parent[find(e.producer_stage)] = find(e.consumer_stage)
+    groups: Dict[int, list] = {}
+    for s in range(len(dag.stages)):
+        groups.setdefault(find(s), []).append(s)
+    return tuple(sorted((tuple(sorted(g)) for g in groups.values()),
+                        key=max))
+
+
+def _component_exit(dag: ChainDAG, comp: Tuple[int, ...],
+                    cut: frozenset) -> int:
+    """The component's unique exit stage — the one whose value leaves.
+
+    A value leaves through a cut out-edge or by being the whole DAG's
+    final stage; a legal cut gives every component exactly one such stage
+    (otherwise more than one HBM buffer would have to exit a single fused
+    kernel, which the map/reduce epilogue cannot express).
+    """
+    inside = set(comp)
+    exits = set()
+    for i, e in enumerate(dag.edges):
+        if i in cut and e.producer_stage in inside:
+            exits.add(e.producer_stage)
+    if len(dag.stages) - 1 in inside:
+        exits.add(len(dag.stages) - 1)
+    if len(exits) != 1:
+        raise LoweringError(
+            f"cut {tuple(sorted(cut))} gives component {comp} exit stages "
+            f"{sorted(exits)}; a legal cut leaves each fused component "
+            "exactly one stage whose value exits the kernel")
+    return exits.pop()
+
+
+def _reorder_body(body: Callable, callee_names: Sequence[str],
+                  want_names: Sequence[str], where: str) -> Callable:
+    """Adapt a DAG-convention body to a callee's block-argument order.
+
+    ``callee_names`` is the order the executing kernel passes blocks in;
+    ``want_names`` is the order ``body`` expects (incoming-edge blocks in
+    ``in_edges`` order, then the stage's external streams in allocation
+    order).  Cut edges turn carried blocks into external operand streams,
+    so the two orders differ per partition — the adapter permutes by name.
+    """
+    pos = {nm: i for i, nm in enumerate(callee_names)}
+    missing = [nm for nm in want_names if nm not in pos]
+    if missing or len(callee_names) != len(want_names):
+        raise LoweringError(
+            f"{where}: body expects blocks {list(want_names)} but the "
+            f"partitioned kernel streams {list(callee_names)}")
+    perm = tuple(pos[nm] for nm in want_names)
+    if perm == tuple(range(len(perm))):
+        return body
+    # trailing args beyond the named blocks (uniform arrays, appended
+    # after every stage's streams) pass through unpermuted
+    return lambda *blocks, _b=body, _p=perm: _b(
+        *(blocks[i] for i in _p), *blocks[len(_p):])
+
+
+def _stage_arg_names(dag: ChainDAG, k: int) -> list:
+    """Stage ``k``'s body-argument names in the fused-DAG convention."""
+    return ([e.name for e in dag.in_edges(k)]
+            + [a.ref.name for a in dag.stages[k].allocations])
+
+
+def _dag_partition_call(dag: ChainDAG, nests: Tuple[LoopNest, ...],
+                        bodies: Tuple[Callable, ...],
+                        operands: Dict[str, jax.Array], sched: Schedule, *,
+                        mode: str, out_dtype, num_lanes: Optional[int],
+                        interpret: Optional[bool],
+                        uniforms: Optional[Dict[str, jax.Array]] = None
+                        ) -> jax.Array:
+    """Execute a ChainDAG under a committed cut: one kernel per component.
+
+    Each cut edge materialises its intermediate as a flat HBM array (a
+    map-mode output) that downstream components stream back in as a plain
+    dense operand; within a component the DAG fuses as usual.  Components
+    run in topological order, so by the time one launches every cut value
+    it reads already exists.
+    """
+    cut = frozenset(sched.cut_edges or ())
+    for i in cut:
+        if not 0 <= i < len(dag.edges):
+            raise LoweringError(
+                f"schedule.cut_edges index {i} is out of range for a dag "
+                f"with {len(dag.edges)} edges")
+    # Sub-calls are separate kernels with their own stream counts; the
+    # committed geometry/depth carries over, the partition fields do not.
+    sub_sched = dataclasses.replace(sched, cut_edges=None,
+                                    stream_depths=None)
+    env = dict(operands)
+    n = len(nests)
+    result: Optional[jax.Array] = None
+    for comp in _dag_components(dag, cut):
+        exit_stage = _component_exit(dag, comp, cut)
+        final = (n - 1) in comp
+        comp_mode = mode if final else "map"
+        exported = (None if final
+                    else dag.out_edges(exit_stage)[0].name)
+        sub_nests = []
+        for s in comp:
+            nest = nests[s]
+            if exported is not None and s == exit_stage:
+                refs = tuple(r for r in nest.refs
+                             if not (r.kind == Direction.WRITE
+                                     and r.name == exported))
+                nest = dataclasses.replace(nest, refs=refs)
+            sub_nests.append(nest)
+        if len(comp) == 1:
+            s = comp[0]
+            nest = sub_nests[0]
+            lanes = nest_analysis.auto_lanes(nest, num_lanes)
+            lowered = _lowered_for(_plan_for(nest, lanes), sub_sched, False)
+            body = _reorder_body(
+                bodies[s], [st.name for st in lowered.in_streams],
+                _stage_arg_names(dag, s), f"dag stage {s}")
+            result = ssr_call(nest, body, env, mode=comp_mode,
+                              out_dtype=out_dtype, schedule=sub_sched,
+                              num_lanes=num_lanes, interpret=interpret,
+                              uniforms=uniforms)
+        else:
+            sub_dag = _dag_for(tuple(sub_nests), num_lanes)
+            sub_bodies = []
+            for j, s in enumerate(comp):
+                callee = ([e.name for e in sub_dag.in_edges(j)]
+                          + [st.name for st in
+                             _lowered_chain_for(sub_dag,
+                                                sub_sched)
+                             .stage_in_streams[j]])
+                sub_bodies.append(_reorder_body(
+                    bodies[s], callee, _stage_arg_names(dag, s),
+                    f"dag stage {s}"))
+            result = ssr_dag_call(tuple(sub_nests), tuple(sub_bodies), env,
+                                  mode=comp_mode, out_dtype=out_dtype,
+                                  schedule=sub_sched, num_lanes=num_lanes,
+                                  interpret=interpret, uniforms=uniforms)
+        if exported is not None:
+            env[exported] = result
+    assert result is not None
+    return result
+
+
+def ssr_dag_call(nests: Sequence[LoopNest],
+                 bodies: Sequence[Callable[..., jax.Array]],
+                 operands: Dict[str, jax.Array], *,
+                 mode: str = "map",
+                 out_dtype=jnp.float32,
+                 policy: BlockPolicy = DEFAULT_POLICY,
+                 schedule: Optional[Schedule] = None,
+                 num_lanes: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 uniforms: Optional[Dict[str, jax.Array]] = None
+                 ) -> jax.Array:
+    """Execute a DAG of nests — diamonds included — as ONE Pallas kernel.
+
+    Dataflow is discovered by name (see :func:`repro.core.compiler.chain_dag`):
+    a ref WRITTEN by stage p and READ by any later stages becomes VMEM-
+    carried edges; one producer may feed several consumers.  The carried
+    intermediates live in refcounted VMEM scratch slots and never touch
+    HBM.
+
+    ``bodies[k]`` receives stage ``k``'s *incoming-edge blocks first* (in
+    ``ChainDAG.in_edges`` order: sorted by producer stage, then name),
+    followed by its external stream blocks in allocation order, then every
+    ``uniforms`` array (in dict order).  Uniforms are whole arrays — MLP
+    weights, lookup tables — delivered to the kernel as one loop-invariant
+    block each and appended to EVERY stage body's arguments; Pallas
+    forbids kernels closing over array constants, and block streams can't
+    carry an operand that every grid step needs in full.  ``mode`` applies
+    to the final stage with the :func:`ssr_call` contract; reduce bodies
+    must be padding-neutral at every stage.
+
+    **Transparent partitioning**: with no explicit ``schedule`` (and the
+    default ``policy``) the autotuner's cache is consulted under the DAG's
+    own key; a committed ``Schedule.cut_edges`` from the fusion search
+    (``autotune.autotune_dag``) splits the graph into several kernels with
+    the cut intermediates materialised in HBM — the cost model and
+    measurements decide where fusion stops paying, dispatch just follows.
+    """
+    nests = tuple(nests)
+    bodies = tuple(bodies)
+    if len(bodies) != len(nests):
+        raise ValueError(
+            f"need one body per nest, got {len(bodies)} bodies for "
+            f"{len(nests)} nests")
+    dag = _dag_for(nests, num_lanes)
+    uni = _uniform_items(uniforms)
+    if uni:
+        clash = sorted({nm for nm, _ in uni} & set(operands))
+        if clash:
+            raise ValueError(
+                f"uniform names {clash} collide with streamed operands; "
+                "uniforms are a separate argument namespace")
+    if schedule is None and policy is DEFAULT_POLICY:
+        from . import autotune as _autotune
+
+        schedule = _autotune.lookup_dag(nests, operands, mode=mode,
+                                        out_dtype=str(jnp.dtype(out_dtype)),
+                                        uniforms=dict(uni))
+    sched = _resolve_schedule(policy, schedule)
+    if sched.cut_edges:
+        return _dag_partition_call(dag, nests, bodies, operands, sched,
+                                   mode=mode, out_dtype=out_dtype,
+                                   num_lanes=num_lanes, interpret=interpret,
+                                   uniforms=dict(uni))
+    if sched.cut_edges is not None:    # () — all-fused, same kernel as None
+        sched = dataclasses.replace(sched, cut_edges=None)
+    lowered = _lowered_chain_for(dag, sched)
+    flat = lowered.in_streams
+    missing = sorted({s.name for s in flat} - set(operands))
+    if missing:
+        raise ValueError(f"missing operands for streams {missing}")
+    arrays = [operands[s.name] for s in flat]
+
+    DISPATCH_STATS["calls"] += 1
+    key = ("dag", nests, sched, mode,
+           tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
+           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
+           _uniform_sig(uni), num_lanes, interpret)
+    fn = _kernel_cache_get(key)
+    if fn is None:
+        kernel = _build_dag_kernel(
+            lowered, bodies, mode, jnp.dtype(out_dtype), interpret,
+            uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                           for _, a in uni))
+
+        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
+            DISPATCH_STATS["traces"] += 1   # moves only while tracing
+            ns = len(_lowered.in_streams)
+            prepared = [s.prepare(a)
+                        for s, a in zip(_lowered.in_streams, arrs[:ns])]
+            out = _kernel(*prepared, *arrs[ns:])
+            return _trim_output(out, dag.bounds, mode, sched.policy)
+
+        fn = jax.jit(pipeline)
+        DISPATCH_STATS["builds"] += 1
+        _kernel_cache_put(key, fn)
+    return fn(*arrays, *[a for _, a in uni])

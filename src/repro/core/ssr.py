@@ -220,26 +220,30 @@ def _pipelined_call(
     out_streams: Sequence[BlockStream],
     out_shapes: Sequence[jax.ShapeDtypeStruct],
     scratch_shapes: Sequence[Any],
-    buffer_depth: int,
+    buffer_depth: Tuple[int, ...],
     interpret: bool,
     extra_kwargs: dict,
 ) -> Callable[..., Any]:
     """Emit the explicit N-deep HBM→VMEM rotation (pipelined emission).
 
-    Inputs move to the ANY memory space (no Pallas block pipeline); each
-    read stream gets ``depth`` rotating VMEM scratch buffers and a DMA
-    semaphore array.  At flat grid step ``s`` the kernel *starts* the
-    fetch of step ``s + depth − 1`` (into slot ``(s+depth−1) % depth``),
-    *waits* on slot ``s % depth``, and hands the body that slot's block —
-    so ``depth − 1`` fetches are in flight while one block computes, the
-    paper's "proactively performs memory reads" at configurable run-ahead.
-    Step 0 primes the first ``depth − 1`` fetches.  Loop-invariant streams
-    (the repeat register) are fetched ONCE at step 0 and re-read from slot
-    0 every step — no re-fetch traffic at all.  Other revisit patterns
-    (e.g. a GEMM A-panel reused across N-tiles) re-fetch each step: the
-    rotation trades the sync pipeline's unchanged-index elision for
-    run-ahead depth.  Outputs keep their normal BlockSpecs — only operand
-    *delivery* changes, so numerics are bit-identical to the sync path.
+    Inputs move to the ANY memory space (no Pallas block pipeline); read
+    stream ``i`` gets ``depths[i]`` rotating VMEM scratch buffers and a
+    DMA semaphore array — depths are *per stream* (``buffer_depth`` is a
+    tuple, one entry per input), so a strided operand that misses in HBM
+    can run deep while a unit-stride one stays shallow.  At flat grid step
+    ``s`` the kernel *starts* stream ``i``'s fetch of step
+    ``s + depths[i] − 1`` (into slot ``(s+depths[i]−1) % depths[i]``),
+    *waits* on slot ``s % depths[i]``, and hands the body that slot's
+    block — so ``depths[i] − 1`` fetches are in flight per stream while
+    one block computes, the paper's "proactively performs memory reads" at
+    configurable per-stream run-ahead.  Step 0 primes each stream's first
+    ``depths[i] − 1`` fetches.  Loop-invariant streams (the repeat
+    register) are fetched ONCE at step 0 and re-read from slot 0 every
+    step — no re-fetch traffic at all.  Other revisit patterns (e.g. a
+    GEMM A-panel reused across N-tiles) re-fetch each step: the rotation
+    trades the sync pipeline's unchanged-index elision for run-ahead
+    depth.  Outputs keep their normal BlockSpecs — only operand *delivery*
+    changes, so numerics are bit-identical to the sync path.
 
     The grid (and therefore ``pl.program_id``-based accumulator logic in
     bodies) is preserved; every axis is sequential (``arbitrary``) because
@@ -251,7 +255,7 @@ def _pipelined_call(
     n_out = len(out_streams)
     steps = math.prod(grid)
     strides = _flat_strides(grid)
-    depth = buffer_depth
+    depths = tuple(buffer_depth)
     invariant = tuple(_stream_is_invariant(s, grid) for s in in_streams)
     zeros = tuple(0 for _ in grid)
 
@@ -275,14 +279,11 @@ def _pipelined_call(
             # works for python ints (priming) and traced ints (run-ahead)
             return tuple((step // st) % g for st, g in zip(strides, grid))
 
-        def start(step, slot):
+        def start(i, step, slot):
             g = unflatten(step)
-            for i in range(n_in):
-                if invariant[i]:
-                    continue
-                pltpu.make_async_copy(
-                    hbm[i].at[_slices(in_streams[i], g)],
-                    bufs[i].at[slot], sems[i].at[slot]).start()
+            pltpu.make_async_copy(
+                hbm[i].at[_slices(in_streams[i], g)],
+                bufs[i].at[slot], sems[i].at[slot]).start()
 
         @pl.when(s == 0)
         def _prime():
@@ -293,21 +294,25 @@ def _pipelined_call(
                         bufs[i].at[0], sems[i].at[0])
                     copy.start()
                     copy.wait()
-            for j in range(min(depth - 1, steps)):
-                start(j, j)
+                    continue
+                for j in range(min(depths[i] - 1, steps)):
+                    start(i, j, j)
 
-        nxt = s + depth - 1
+        for i in range(n_in):          # per-stream run-ahead fetch
+            if invariant[i]:
+                continue
+            nxt = s + depths[i] - 1
 
-        @pl.when(nxt < steps)
-        def _prefetch():
-            start(nxt, nxt % depth)
+            @pl.when(nxt < steps)
+            def _prefetch(i=i, nxt=nxt):
+                start(i, nxt, nxt % depths[i])
 
-        slot = s % depth
         blocks = []
         for i in range(n_in):
             if invariant[i]:
                 blocks.append(bufs[i].at[0])
                 continue
+            slot = s % depths[i]
             pltpu.make_async_copy(
                 hbm[i].at[_slices(in_streams[i], ids)],
                 bufs[i].at[slot], sems[i].at[slot]).wait()
@@ -325,9 +330,9 @@ def _pipelined_call(
                     f"stream '{st.name}': operand rank {a.ndim} != block "
                     f"rank {len(st.block_shape)} — pipelined emission "
                     "slices the prepared layout directly")
-        rot = [pltpu.VMEM((depth, *st.block_shape), jnp.dtype(a.dtype))
-               for st, a in zip(in_streams, arrays)]
-        dma_sems = [pltpu.SemaphoreType.DMA((depth,)) for _ in in_streams]
+        rot = [pltpu.VMEM((d, *st.block_shape), jnp.dtype(a.dtype))
+               for d, st, a in zip(depths, in_streams, arrays)]
+        dma_sems = [pltpu.SemaphoreType.DMA((d,)) for d in depths]
         call = pl.pallas_call(
             wrapped,
             grid=grid,
@@ -358,7 +363,7 @@ def ssr_pallas(
     dimension_semantics: Optional[Tuple[str, ...]] = None,
     validate: bool = True,
     cost_estimate: Optional[pl.CostEstimate] = None,
-    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+    buffer_depth=DEFAULT_BUFFER_DEPTH,
 ) -> Callable[..., Any]:
     """Build a streamed Pallas kernel from SSR-style block streams.
 
@@ -366,15 +371,18 @@ def ssr_pallas(
     the "SSR region" of Fig. 4 ③.  Returns a jitted callable; the attached
     ``.report(*, dtypes)`` computes the :class:`StreamReport`.
 
-    ``buffer_depth`` sets the data mover's FIFO depth.  Depth 2 (default)
-    is Pallas's own double-buffered pipeline; depth > 2 emits the explicit
-    N-deep rotation (:func:`_pipelined_call`) when the platform supports
-    it (:func:`pipeline_supported`) and the grid has more than one step,
-    falling back to the synchronous path otherwise — numerics are
-    identical either way.  The attached ``fn.pipelined`` flag records
-    which emitter actually ran; the VMEM report always budgets at the
-    *requested* depth (:func:`stream_vmem_bytes`), so a schedule legal
-    here is legal on the deepest path it might take.
+    ``buffer_depth`` sets the data mover's FIFO depth — a uniform ``int``,
+    or a tuple with one depth per *input* stream (asymmetric run-ahead:
+    deep for the strided operand, shallow for the unit-stride one).
+    Depth 2 (default) is Pallas's own double-buffered pipeline; any depth
+    > 2 emits the explicit N-deep rotation (:func:`_pipelined_call`) when
+    the platform supports it (:func:`pipeline_supported`) and the grid has
+    more than one step, falling back to the synchronous path otherwise —
+    numerics are identical either way.  The attached ``fn.pipelined`` flag
+    records which emitter actually ran; the VMEM report always budgets at
+    the *requested* depths (:func:`stream_vmem_bytes`) — each input at its
+    own depth, outputs at the maximum — so a schedule legal here is legal
+    on the deepest path it might take.
     """
     for s in in_streams:
         if s.direction != Direction.READ:
@@ -384,12 +392,25 @@ def ssr_pallas(
             raise ValueError(f"output stream '{s.name}' must be a write stream")
     if len(out_streams) != len(out_shapes):
         raise ValueError("one out_shape per output stream")
-    if not DEFAULT_BUFFER_DEPTH <= buffer_depth <= MAX_BUFFER_DEPTH:
-        raise ValueError(
-            f"buffer_depth {buffer_depth} outside "
-            f"[{DEFAULT_BUFFER_DEPTH}, {MAX_BUFFER_DEPTH}] — depth < 2 "
-            "cannot overlap fetch with compute, deeper than "
-            f"{MAX_BUFFER_DEPTH} would eat the VMEM budget")
+    if isinstance(buffer_depth, (tuple, list)):
+        depths = tuple(int(d) for d in buffer_depth)
+        if len(depths) != len(in_streams):
+            raise ValueError(
+                f"buffer_depth tuple has {len(depths)} entries for "
+                f"{len(in_streams)} input streams; give one depth per "
+                "stream")
+        check = depths
+    else:
+        depths = (int(buffer_depth),) * len(in_streams)
+        check = (int(buffer_depth),)
+    for d in check:
+        if not DEFAULT_BUFFER_DEPTH <= d <= MAX_BUFFER_DEPTH:
+            raise ValueError(
+                f"buffer_depth {d} outside "
+                f"[{DEFAULT_BUFFER_DEPTH}, {MAX_BUFFER_DEPTH}] — depth < 2 "
+                "cannot overlap fetch with compute, deeper than "
+                f"{MAX_BUFFER_DEPTH} would eat the VMEM budget")
+    max_depth = max(depths) if depths else DEFAULT_BUFFER_DEPTH
     if validate:
         for s in (*in_streams, *out_streams):
             _validate_affine(s, grid)
@@ -397,7 +418,7 @@ def ssr_pallas(
     if interpret is None:
         interpret = not _on_tpu()
 
-    pipelined = (buffer_depth > DEFAULT_BUFFER_DEPTH
+    pipelined = (max_depth > DEFAULT_BUFFER_DEPTH
                  and pipeline_supported()
                  and len(grid) >= 1 and math.prod(grid) > 1)
 
@@ -417,7 +438,7 @@ def ssr_pallas(
         fn = _pipelined_call(
             body, grid=grid, in_streams=in_streams,
             out_streams=out_streams, out_shapes=out_shapes,
-            scratch_shapes=scratch_shapes, buffer_depth=buffer_depth,
+            scratch_shapes=scratch_shapes, buffer_depth=depths,
             interpret=interpret, extra_kwargs=kwargs)
     else:
         call = pl.pallas_call(
@@ -444,9 +465,11 @@ def ssr_pallas(
         vmem = 0
         streamed = 0
         unique = 0
-        for s, dt in zip(streams, dtypes):
+        for idx, (s, dt) in enumerate(zip(streams, dtypes)):
             bb = s.block_bytes(dt)
-            vmem += stream_vmem_bytes(bb, buffer_depth)  # FIFO-depth buffers
+            # inputs at their own FIFO depth; outputs at the deepest
+            d = depths[idx] if idx < len(in_streams) else max_depth
+            vmem += stream_vmem_bytes(bb, d)
             streamed += bb * steps
             unique += bb * _unique_blocks(s, grid)
         # Kernel-resident scratch (reduce accumulators, chained-intermediate

@@ -1,0 +1,367 @@
+"""Fused-DAG kernels — multi-consumer chaining over the registry.
+
+The linear chains in :mod:`repro.kernels.chained` fuse one producer into
+one consumer.  Real pre/post-processing blocks are *DAGs*: layernorm's
+centred input feeds both the variance pass and the final normalise, and
+an MLP's activation feeds both the second matmul and the residual add.
+:func:`repro.core.ssr_dag_call` fuses the whole graph into ONE Pallas
+kernel — every intermediate lives in a refcounted VMEM scratch slot and
+is freed after its last consumer — so a diamond costs two scratch blocks
+and zero HBM round-trips.
+
+Three kernels ride the path, each a three-stage diamond over rows of
+``DEFAULT_POLICY.lanes`` (= 128) elements:
+
+* ``layernorm``     — x → {centre, square} → normalise           (map)
+* ``softmax_xent``  — z → {shift, exp} → masked row loss         (reduce)
+* ``mlp_block``     — x → relu(xW₁+b₁) → {xW₂+b₂, residual add}  (map)
+
+Per-row reductions (mean, max, logsumexp) work because a streamed
+``(n,)`` vector with ``n`` a multiple of 128 lays out as rows of exactly
+one data row per block row — the bodies therefore assume the default
+128-lane block policy, which the DAG autotuner never changes (it searches
+*graph cuts*, not block geometry).
+
+Each registry entry exposes ``ssr`` = the fused DAG, ``baseline`` = the
+honest unfused composition (every intermediate through HBM, schedules
+pinned to the default so fusion is the only variable), and ``ref`` = the
+jnp oracle.  :func:`dag_cases` additionally hands the bench the raw
+``(nests, bodies, operands)`` spec so ``autotune_dag`` can search cuts
+and the HLO census can audit every intermediate at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Direction, LoopNest, MemRef, compiler, ssr_call,
+                        ssr_dag_call)
+from repro.core.lowering import DEFAULT_POLICY, DEFAULT_SCHEDULE
+
+from .frontend import BLOCK_ELEMS
+from .registry import KernelEntry, register_kernel
+
+LANES = DEFAULT_POLICY.lanes  # data-row width every body assumes
+EPS = 1e-5
+
+
+def _padded_blocks(n: int) -> Tuple[int, int]:
+    """Padded 2-D (rows, lanes) layout of an n-element streamed vector."""
+    steps = -(-n // BLOCK_ELEMS)
+    return (steps * DEFAULT_POLICY.rows, DEFAULT_POLICY.lanes)
+
+
+def _rows_of(x: jax.Array) -> int:
+    if x.ndim != 2 or x.shape[1] != LANES:
+        raise ValueError(
+            f"dag kernels stream rows of exactly {LANES} elements; got "
+            f"shape {x.shape}")
+    return x.shape[0]
+
+
+def _dag_nests(n: int,
+               stages: Tuple[Tuple[Tuple[str, ...], Tuple[str, ...], int],
+                             ...]) -> Tuple[LoopNest, ...]:
+    """Flat (n,)-bounds nests from ((reads, writes, compute), ...)."""
+    out = []
+    for reads, writes, cost in stages:
+        refs = tuple([MemRef(r, Direction.READ, (1,)) for r in reads]
+                     + [MemRef(w, Direction.WRITE, (1,)) for w in writes])
+        out.append(LoopNest(bounds=(n,), refs=refs,
+                            compute_per_level=(cost,)))
+    return tuple(out)
+
+
+def _map_nest(n: int, names: Tuple[str, ...], compute: int) -> LoopNest:
+    return compiler.elementwise_nest(n, names, compute)
+
+
+# --------------------------------------------------------------------------
+# layernorm: x → {C = x − μ, V = C²} → C·rsqrt(mean(V) + ε)
+# --------------------------------------------------------------------------
+
+
+def _ln_centre(xb):
+    return xb - jnp.mean(xb, axis=1, keepdims=True)
+
+
+def _ln_square(cb):
+    return cb * cb
+
+
+def _ln_normalise(cb, vb):
+    return cb * jax.lax.rsqrt(jnp.mean(vb, axis=1, keepdims=True) + EPS)
+
+
+_LN_STAGES = ((("X",), ("C",), 2), (("C",), ("V",), 1),
+              (("C", "V"), (), 3))
+_LN_BODIES = (_ln_centre, _ln_square, _ln_normalise)
+
+
+def layernorm_spec(x: jax.Array):
+    """(nests, bodies, operands, mode, uniforms) — raw ssr_dag_call args."""
+    n = _rows_of(x) * LANES
+    return (_dag_nests(n, _LN_STAGES), _LN_BODIES,
+            {"X": x.astype(jnp.float32).reshape(-1)}, "map", {})
+
+
+def fused_layernorm(x: jax.Array, *, interpret=None, schedule=None):
+    """Per-row layernorm as ONE kernel: C is consumed twice, all in VMEM.
+
+    ``schedule=None`` resolves through the DAG autotune cache (the best
+    committed graph cut); pass ``DEFAULT_SCHEDULE`` to pin all-fused.
+    """
+    m = _rows_of(x)
+    nests, bodies, operands, mode, _ = layernorm_spec(x)
+    out = ssr_dag_call(nests, bodies, operands, mode=mode,
+                       schedule=schedule, interpret=interpret)
+    return out.reshape(m, LANES)
+
+
+def unfused_layernorm(x: jax.Array, *, interpret=None):
+    """Three streamed kernels: C and V both round-trip through HBM."""
+    m = _rows_of(x)
+    n = m * LANES
+    xf = x.astype(jnp.float32).reshape(-1)
+    c = ssr_call(_map_nest(n, ("X",), 2), _ln_centre, {"X": xf},
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret)
+    v = ssr_call(_map_nest(n, ("C",), 1), _ln_square, {"C": c},
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret)
+    out = ssr_call(_map_nest(n, ("C", "V"), 3), _ln_normalise,
+                   {"C": c, "V": v}, mode="map",
+                   schedule=DEFAULT_SCHEDULE, interpret=interpret)
+    return out.reshape(m, LANES)
+
+
+# --------------------------------------------------------------------------
+# softmax cross-entropy: z → {C = z − max, E = exp C} → masked row loss
+# --------------------------------------------------------------------------
+
+
+def _sx_shift(zb):
+    return zb - jnp.max(zb, axis=1, keepdims=True)
+
+
+def _sx_exp(cb):
+    return jnp.exp(cb)
+
+
+def _sx_loss(cb, eb, pb):
+    # mask = Σp per row: 1 on real rows (targets sum to one), 0 on padding
+    # rows — exactly the padding-neutrality the reduce epilogue requires.
+    # Real rows have Σexp(C) ≥ exp(0) = 1 (the max logit shifts to 0), so
+    # the clamp only rescues padding rows — where E re-padded to zeros
+    # after an HBM round-trip would otherwise give mask·log(0) = NaN.
+    mask = jnp.sum(pb, axis=1, keepdims=True)
+    lse = jnp.log(jnp.maximum(jnp.sum(eb, axis=1, keepdims=True), 1e-30))
+    dot = jnp.sum(pb * cb, axis=1, keepdims=True)
+    return jnp.broadcast_to(mask * (lse - dot) / cb.shape[1], cb.shape)
+
+
+_SX_STAGES = ((("Z",), ("C",), 2), (("C",), ("E",), 1),
+              (("C", "E", "P"), (), 4))
+_SX_BODIES = (_sx_shift, _sx_exp, _sx_loss)
+
+
+def softmax_xent_spec(z: jax.Array, p: jax.Array):
+    n = _rows_of(z) * LANES
+    if p.shape != z.shape:
+        raise ValueError(f"targets shape {p.shape} != logits {z.shape}")
+    return (_dag_nests(n, _SX_STAGES), _SX_BODIES,
+            {"Z": z.astype(jnp.float32).reshape(-1),
+             "P": p.astype(jnp.float32).reshape(-1)}, "reduce", {})
+
+
+def fused_softmax_xent(z: jax.Array, p: jax.Array, *, interpret=None,
+                       schedule=None):
+    """Σ_rows [logΣexp(z) − Σ p·z] as one fused DAG (reduce epilogue).
+
+    The shifted logits C feed both the exp pass and the p·C dot — the
+    classic two-consumer pattern a linear chain cannot express.
+    """
+    nests, bodies, operands, mode, _ = softmax_xent_spec(z, p)
+    return ssr_dag_call(nests, bodies, operands, mode=mode,
+                        schedule=schedule, interpret=interpret)
+
+
+def unfused_softmax_xent(z: jax.Array, p: jax.Array, *, interpret=None):
+    n = _rows_of(z) * LANES
+    zf = z.astype(jnp.float32).reshape(-1)
+    pf = p.astype(jnp.float32).reshape(-1)
+    c = ssr_call(_map_nest(n, ("Z",), 2), _sx_shift, {"Z": zf},
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret)
+    e = ssr_call(_map_nest(n, ("C",), 1), _sx_exp, {"C": c},
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret)
+    return ssr_call(_map_nest(n, ("C", "E", "P"), 4), _sx_loss,
+                    {"C": c, "E": e, "P": pf}, mode="reduce",
+                    schedule=DEFAULT_SCHEDULE, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# 2-layer MLP block: x → H = relu(xW₁+b₁) → {Y = HW₂+b₂, Y + H}
+# --------------------------------------------------------------------------
+
+# The weights ride as *uniform operands* — whole arrays every grid step
+# needs in full, delivered to the kernel as one loop-invariant block each
+# and appended to EVERY stage body's arguments (Pallas forbids kernels
+# closing over array constants).  Uniform order is dict order: W1, B1,
+# W2, B2.
+
+
+def _mlp_hidden(xb, w1, b1, w2, b2):
+    return jax.nn.relu(
+        jnp.dot(xb, w1, preferred_element_type=jnp.float32) + b1)
+
+
+def _mlp_out(hb, w1, b1, w2, b2):
+    return jnp.dot(hb, w2, preferred_element_type=jnp.float32) + b2
+
+
+def _mlp_residual(hb, yb, *uniforms):
+    return yb + hb
+
+
+_MLP_STAGES = ((("X",), ("H",), 2 * LANES),
+               (("H",), ("Y",), 2 * LANES),
+               (("H", "Y"), (), 1))
+_MLP_BODIES = (_mlp_hidden, _mlp_out, _mlp_residual)
+
+
+def mlp_block_spec(x, w1, b1, w2, b2):
+    n = _rows_of(x) * LANES
+    for w in (w1, w2):
+        if w.shape != (LANES, LANES):
+            raise ValueError(
+                f"mlp_block weights must be ({LANES}, {LANES}); "
+                f"got {w.shape}")
+    uniforms = {"W1": jnp.asarray(w1, jnp.float32),
+                "B1": jnp.asarray(b1, jnp.float32),
+                "W2": jnp.asarray(w2, jnp.float32),
+                "B2": jnp.asarray(b2, jnp.float32)}
+    return (_dag_nests(n, _MLP_STAGES), _MLP_BODIES,
+            {"X": x.astype(jnp.float32).reshape(-1)}, "map", uniforms)
+
+
+def fused_mlp_block(x, w1, b1, w2, b2, *, interpret=None, schedule=None):
+    """relu(xW₁+b₁) → second matmul + residual add, H consumed twice."""
+    m = _rows_of(x)
+    nests, bodies, operands, mode, uniforms = mlp_block_spec(
+        x, w1, b1, w2, b2)
+    out = ssr_dag_call(nests, bodies, operands, mode=mode,
+                       schedule=schedule, interpret=interpret,
+                       uniforms=uniforms)
+    return out.reshape(m, LANES)
+
+
+def unfused_mlp_block(x, w1, b1, w2, b2, *, interpret=None):
+    m = _rows_of(x)
+    n = m * LANES
+    _, _, operands, _, uniforms = mlp_block_spec(x, w1, b1, w2, b2)
+    h = ssr_call(_map_nest(n, ("X",), 2 * LANES), _mlp_hidden, operands,
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret,
+                 uniforms=uniforms)
+    y = ssr_call(_map_nest(n, ("H",), 2 * LANES), _mlp_out, {"H": h},
+                 mode="map", schedule=DEFAULT_SCHEDULE, interpret=interpret,
+                 uniforms=uniforms)
+    out = ssr_call(_map_nest(n, ("H", "Y"), 1), _mlp_residual,
+                   {"H": h, "Y": y}, mode="map",
+                   schedule=DEFAULT_SCHEDULE, interpret=interpret,
+                   uniforms=uniforms)
+    return out.reshape(m, LANES)
+
+
+# --------------------------------------------------------------------------
+# DAG-case table: bench, HLO-elimination audit, and cut search iterate it.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DagCase:
+    """One fused-DAG variant plus everything needed to audit and tune it.
+
+    ``inters(*args)`` returns the (dtype, dims) of EVERY padded buffer the
+    unfused composition materialises (one per distinct intermediate — the
+    multi-consumer one appears once; its extra load is free to audit).
+    ``spec(*args)`` returns the raw ``(nests, bodies, operands, mode,
+    uniforms)`` quintuple so the bench can run
+    :func:`repro.core.autotune.autotune_dag` on exactly the graph the
+    fused kernel executes.
+    """
+
+    name: str
+    fused: Callable
+    unfused: Callable
+    ref: Callable
+    example: Callable
+    inters: Callable[..., Tuple[Tuple[str, Tuple[int, ...]], ...]]
+    spec: Callable
+    tol: Dict[str, float]
+
+
+def _two_vector_inters(x, *rest, **kw):
+    dims = _padded_blocks(x.shape[0] * LANES)
+    return (("f32", dims), ("f32", dims))
+
+
+def _mk_examples():
+    def ex_layernorm(rng, odd: bool = False):
+        m = 37 if odd else 32
+        return ((jnp.asarray(rng.standard_normal((m, LANES)),
+                             jnp.float32),), {})
+
+    def ex_softmax(rng, odd: bool = False):
+        m = 37 if odd else 32
+        z = jnp.asarray(rng.standard_normal((m, LANES)), jnp.float32)
+        p = jax.nn.one_hot(
+            jnp.asarray(rng.integers(0, LANES, m)), LANES,
+            dtype=jnp.float32)
+        return ((z, p), {})
+
+    def ex_mlp(rng, odd: bool = False):
+        m = 37 if odd else 32
+        x = jnp.asarray(rng.standard_normal((m, LANES)), jnp.float32)
+        w1 = jnp.asarray(rng.standard_normal((LANES, LANES)) * 0.1,
+                         jnp.float32)
+        b1 = jnp.asarray(rng.standard_normal(LANES) * 0.1, jnp.float32)
+        w2 = jnp.asarray(rng.standard_normal((LANES, LANES)) * 0.1,
+                         jnp.float32)
+        b2 = jnp.asarray(rng.standard_normal(LANES) * 0.1, jnp.float32)
+        return ((x, w1, b1, w2, b2), {})
+
+    return ex_layernorm, ex_softmax, ex_mlp
+
+
+def dag_cases() -> Tuple[DagCase, ...]:
+    from . import ref
+
+    ex_ln, ex_sx, ex_mlp = _mk_examples()
+    loose = {"rtol": 1e-3, "atol": 1e-3}
+    reduce_tol = {"rtol": 1e-2, "atol": 1e-2}
+    return (
+        DagCase("layernorm", fused_layernorm, unfused_layernorm,
+                ref.layernorm_ref, ex_ln, _two_vector_inters,
+                layernorm_spec, loose),
+        DagCase("softmax_xent", fused_softmax_xent, unfused_softmax_xent,
+                ref.softmax_xent_ref, ex_sx, _two_vector_inters,
+                softmax_xent_spec, reduce_tol),
+        DagCase("mlp_block", fused_mlp_block, unfused_mlp_block,
+                ref.mlp_block_ref, ex_mlp, _two_vector_inters,
+                mlp_block_spec, loose),
+    )
+
+
+def _register(case: DagCase) -> None:
+    @register_kernel(case.name)
+    def _entry() -> KernelEntry:
+        return KernelEntry(name=case.name, ssr=case.fused,
+                           baseline=case.unfused, ref=case.ref,
+                           example=case.example, tol=dict(case.tol),
+                           problem=f"fused DAG: {case.name}")
+
+
+for _case in dag_cases():
+    _register(_case)

@@ -99,6 +99,34 @@ def axpy_dot_ref(x: jax.Array, y: jax.Array, w: jax.Array, *,
     return jnp.sum(t * w.astype(jnp.float32))
 
 
+def layernorm_ref(x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """Per-row layernorm (no affine): (x − μ)·rsqrt(var + ε)."""
+    xf = x.astype(jnp.float32)
+    c = xf - jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(c * c, axis=-1, keepdims=True)
+    return c * jax.lax.rsqrt(var + eps)
+
+
+def softmax_xent_ref(z: jax.Array, p: jax.Array) -> jax.Array:
+    """Σ_rows softmax cross-entropy, targets ``p`` summing to 1 per row."""
+    zf = z.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(zf, axis=-1)
+    return jnp.sum(lse - jnp.sum(pf * zf, axis=-1))
+
+
+def mlp_block_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                  w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """2-layer MLP block with residual on the activation: HW₂+b₂+H."""
+    xf = x.astype(jnp.float32)
+    h = jnp.maximum(jnp.dot(xf, w1.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+                    + b1.astype(jnp.float32), 0.0)
+    y = jnp.dot(h, w2.astype(jnp.float32),
+                preferred_element_type=jnp.float32) + b2.astype(jnp.float32)
+    return y + h
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = False, window: int | None = None,
                   scale: float | None = None) -> jax.Array:

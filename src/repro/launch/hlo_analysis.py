@@ -405,3 +405,75 @@ def check_fusion(fused_fn, unfused_fn, args, kwargs,
         unfused_buffers=count_materialized(unfused_hlo, dtype, dims),
         fused_bytes_out=analyze_hlo(fused_hlo, world).bytes_out,
         unfused_bytes_out=analyze_hlo(unfused_hlo, world).bytes_out)
+
+
+# --------------------------------------------------------------------------
+# DAG fusion audit: every intermediate at once, multi-consumer included.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DagFusionCheck:
+    """Compiled-HLO evidence that a fused DAG's intermediates are gone.
+
+    A DAG has several intermediates (a diamond's multi-consumer value plus
+    the ordinary links); ``inters`` lists each one's padded (dtype, dims)
+    as the *unfused* composition materialises it.  The census counts every
+    distinct intermediate shape once per side (duplicate shapes in
+    ``inters`` dedupe — two f32 buffers of the same padded dims are
+    indistinguishable in HLO text, so their counts are summed under one
+    entry) and applies the :class:`FusionCheck` criterion in aggregate:
+    no more intermediate-shaped buffers, strictly fewer bytes moved.
+    """
+
+    inters: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    fused_buffers: int
+    unfused_buffers: int
+    fused_bytes_out: float
+    unfused_bytes_out: float
+    per_shape: Tuple[Tuple[str, Tuple[int, ...], int, int], ...] = ()
+
+    @property
+    def intermediates_eliminated(self) -> bool:
+        return (self.fused_buffers <= self.unfused_buffers
+                and self.fused_bytes_out < self.unfused_bytes_out)
+
+    @property
+    def bytes_saved(self) -> float:
+        return self.unfused_bytes_out - self.fused_bytes_out
+
+
+def check_dag_fusion(fused_fn, unfused_fn, args, kwargs,
+                     inters, world: int = 1) -> DagFusionCheck:
+    """Compile both variants and audit EVERY DAG intermediate's buffer.
+
+    ``inters`` is an iterable of ``(dtype, dims)`` pairs — one per
+    intermediate the unfused composition materialises (see
+    ``repro.kernels.dag.DagCase.inters``).  Both programs must run the
+    same pinned schedule so fusion is the only structural difference.
+    """
+    import jax  # deferred: this module is otherwise jax-free text analysis
+
+    def lower(fn):
+        wrapped = jax.jit(lambda *a: fn(*a, **kwargs))
+        return wrapped.lower(*args).compile().as_text()
+
+    fused_hlo = lower(fused_fn)
+    unfused_hlo = lower(unfused_fn)
+    shapes = []                       # distinct, first-seen order
+    for dtype, dims in inters:
+        key = (dtype, tuple(dims))
+        if key not in shapes:
+            shapes.append(key)
+    per_shape = tuple(
+        (dtype, dims,
+         count_materialized(fused_hlo, dtype, dims),
+         count_materialized(unfused_hlo, dtype, dims))
+        for dtype, dims in shapes)
+    return DagFusionCheck(
+        inters=tuple((d, tuple(s)) for d, s in inters),
+        fused_buffers=sum(f for _, _, f, _ in per_shape),
+        unfused_buffers=sum(u for _, _, _, u in per_shape),
+        fused_bytes_out=analyze_hlo(fused_hlo, world).bytes_out,
+        unfused_bytes_out=analyze_hlo(unfused_hlo, world).bytes_out,
+        per_shape=per_shape)

@@ -10,6 +10,8 @@ Three layers, mirroring the pipeline:
    the compiled-HLO audit that the intermediate buffer is actually gone.
 """
 
+import re
+
 import numpy as np
 import pytest
 
@@ -89,6 +91,73 @@ class TestChainCompiler:
                    force=True)
         assert len(cp.links) == 2
         assert cp.eliminated_accesses == 4 * n
+
+
+def _exact(msg: str) -> str:
+    """pytest.raises ``match`` pattern pinning the WHOLE message.
+
+    ``match`` is ``re.search`` under the hood; anchoring an escaped literal
+    turns it into an equality check, so a reworded diagnostic — the part of
+    the compiler users actually debug with — fails tests instead of
+    silently drifting.
+    """
+    return "^" + re.escape(msg) + "$"
+
+
+class TestChainErrorMessages:
+    """Every ``chain()`` ChainError path, message pinned verbatim."""
+
+    def test_too_few_nests(self):
+        with pytest.raises(ChainError,
+                           match=_exact("chaining needs at least two nests")):
+            chain((producer_nest(8),))
+
+    def test_iteration_space_mismatch(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stage 1 iteration space (2048,) != stage 0 (1024,); "
+                "chained nests must share one iteration space")):
+            chain((producer_nest(1024), consumer_nest(2048)))
+
+    def test_no_common_intermediate(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stages 0→1: need exactly one producer-write / "
+                "consumer-read ref in common, found none")):
+            chain((producer_nest(1024, inter="T"),
+                   consumer_nest(1024, inter="U")))
+
+    def test_multiple_common_intermediates(self):
+        n = 1024
+        prod = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("X", Direction.READ, (1,)),
+                  MemRef("T", Direction.WRITE, (1,)),
+                  MemRef("U", Direction.WRITE, (1,))),
+            compute_per_level=(1,))
+        cons = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("T", Direction.READ, (1,)),
+                  MemRef("U", Direction.READ, (1,))),
+            compute_per_level=(1,))
+        with pytest.raises(ChainError, match=_exact(
+                "stages 0→1: need exactly one producer-write / "
+                "consumer-read ref in common, found ['T', 'U']")):
+            chain((prod, cons))
+
+    def test_non_affine_intermediate(self):
+        gather = LoopNest(
+            bounds=(1024,),
+            refs=(MemRef("T", Direction.READ, None),),  # data-dependent
+            compute_per_level=(1,))
+        with pytest.raises(ChainError, match=_exact(
+                "intermediate 'T' is not affine on both sides")):
+            chain((producer_nest(1024), gather))
+
+    def test_walk_mismatch(self):
+        with pytest.raises(ChainError, match=_exact(
+                "intermediate 'T': producer walk (1,)+0 != consumer walk "
+                "(1,)+128; streams cannot be unified")):
+            chain((producer_nest(1024),
+                   consumer_nest(1024, offset=128)))
 
 
 class TestLowerChain:

@@ -1,0 +1,565 @@
+"""Chain DAGs: IR, refcounted scratch, fused lowering, cut search, uniforms.
+
+Five layers, mirroring the whole-program fusion pipeline:
+
+1. ``chain_dag()`` — dataflow discovery by name, multi-consumer edge
+   accounting, and every DAG-specific ChainError (messages pinned verbatim);
+2. ``_dag_slots()`` — refcounted VMEM slot assignment (a diamond takes 2
+   slots, a linear chain 1);
+3. ``ssr_dag_call()`` — fused execution vs the composition, every legal
+   graph cut, and the uniform-operand contract (whole-array loop-invariant
+   blocks);
+4. the fusion search — legality, Eq. (1)–(3) cut costs, ``autotune_dag``
+   commit → ``lookup_dag`` transparent resolution;
+5. the bench artifacts — schema-v4 dag rows and the BENCH_history.jsonl
+   appender/validator.
+"""
+
+import dataclasses
+import re
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (ChainError, Direction, LoopNest, LoweringError,
+                        MemRef, chain, chain_dag, ssr_call, ssr_chain_call,
+                        ssr_dag_call)
+from repro.core import autotune
+from repro.core import lowering as L
+from repro.core.autotune import ScheduleCache
+from repro.core.lowering import DEFAULT_SCHEDULE, Schedule
+
+RNG = np.random.default_rng(21)
+
+
+def arr(n):
+    return jnp.asarray(RNG.standard_normal(n), jnp.float32)
+
+
+def _exact(msg: str) -> str:
+    """Anchor an escaped literal so ``pytest.raises(match=...)`` pins the
+    whole diagnostic, not a substring."""
+    return "^" + re.escape(msg) + "$"
+
+
+def _nest(n, reads, writes, compute=1):
+    refs = tuple([MemRef(r, Direction.READ, (1,)) for r in reads]
+                 + [MemRef(w, Direction.WRITE, (1,)) for w in writes])
+    return LoopNest(bounds=(n,), refs=refs, compute_per_level=(compute,))
+
+
+def diamond_nests(n):
+    """X → T; T → U; (T, U) → out — the canonical multi-consumer shape."""
+    return (_nest(n, ("X",), ("T",)),
+            _nest(n, ("T",), ("U",)),
+            _nest(n, ("T", "U"), (), compute=2))
+
+
+DIAMOND_BODIES = (lambda xb: 2.0 * xb,
+                  lambda tb: tb + 1.0,
+                  lambda tb, ub: tb * ub)
+
+
+def diamond_want(x):
+    t = 2.0 * x
+    return t * (t + 1.0)
+
+
+# --------------------------------------------------------------------------
+# 1. IR: chain_dag structure and accounting
+# --------------------------------------------------------------------------
+
+
+class TestChainDagIR:
+    def test_diamond_edges(self):
+        dag = chain_dag(diamond_nests(4096), force=True)
+        assert [(e.name, e.producer_stage, e.consumer_stage)
+                for e in dag.edges] == [("T", 0, 1), ("T", 0, 2),
+                                        ("U", 1, 2)]
+        assert dag.intermediates == ("T", "U")
+        # body arg order of the join stage: (producer, name)-sorted
+        assert [(e.name, e.producer_stage)
+                for e in dag.in_edges(2)] == [("T", 0), ("U", 1)]
+        assert dag.last_consumer("T") == 2
+        assert dag.last_consumer("U") == 2
+
+    def test_multi_consumer_accounting(self):
+        n = 4096
+        dag = chain_dag(diamond_nests(n), force=True)
+        # T is written once but read twice: ONE eliminated store, TWO
+        # eliminated loads — the credit linear chaining cannot express
+        assert dag.eliminated_stores == 2 * n        # T, U
+        assert dag.eliminated_loads == 3 * n         # per edge
+        assert dag.eliminated_accesses == 5 * n
+        assert dag.n_dag < dag.n_unfused
+        assert dag.dag_speedup > 1.0
+        # edge refs are stripped from every stage plan
+        names = {a.ref.name for s in dag.stages for a in s.allocations}
+        assert names == {"X"}
+
+    def test_linear_chain_is_the_special_case(self):
+        n = 4096
+        nests = (_nest(n, ("X", "Y"), ("T",), compute=2),
+                 _nest(n, ("T",), ()))
+        cp = chain(nests, force=True)
+        dp = chain_dag(nests, force=True)
+        assert dp.eliminated_loads == cp.eliminated_loads
+        assert dp.eliminated_stores == cp.eliminated_stores
+        assert dp.n_dag == cp.n_chain
+        assert dp.n_unfused == cp.n_unfused
+        assert [(e.name, e.producer_stage, e.consumer_stage)
+                for e in dp.edges] == [("T", 0, 1)]
+
+
+class TestChainDagErrors:
+    """Every DAG-specific ChainError path, message pinned verbatim."""
+
+    def test_too_few_nests(self):
+        with pytest.raises(ChainError,
+                           match=_exact("chaining needs at least two nests")):
+            chain_dag((_nest(64, ("X",), ("T",)),))
+
+    def test_iteration_space_mismatch(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stage 1 iteration space (2048,) != stage 0 (1024,); "
+                "chained nests must share one iteration space")):
+            chain_dag((_nest(1024, ("X",), ("T",)),
+                       _nest(2048, ("T",), ())))
+
+    def test_duplicate_writer(self):
+        with pytest.raises(ChainError, match=_exact(
+                "intermediate 'T' is written by both stage 0 and stage 1; "
+                "each intermediate needs exactly one producer")):
+            chain_dag((_nest(1024, ("X",), ("T",)),
+                       _nest(1024, ("Y",), ("T",)),
+                       _nest(1024, ("T",), ())))
+
+    def test_read_before_write(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stage 0 reads 'T' which stage 1 has not produced yet; "
+                "stages must be listed in topological order (producers "
+                "before consumers)")):
+            chain_dag((_nest(1024, ("T",), ()),
+                       _nest(1024, ("X",), ("T",))))
+
+    def test_disconnected_stage(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stage 1 is disconnected from the dag: no produced value "
+                "links it to any other stage")):
+            chain_dag((_nest(1024, ("X",), ("T",)),
+                       _nest(1024, ("Y",), ()),
+                       _nest(1024, ("T",), ())))
+
+    def test_multiple_terminal_stages(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stages [1, 2] all terminate the dag; exactly one final "
+                "stage (the last) may produce the fused region's output")):
+            chain_dag((_nest(1024, ("X",), ("T",)),
+                       _nest(1024, ("T",), ()),
+                       _nest(1024, ("T",), ())))
+
+    def test_dead_intermediate(self):
+        with pytest.raises(ChainError, match=_exact(
+                "stage 0 writes 'D' but no later stage reads it; dead "
+                "intermediates cannot leave the fused region")):
+            chain_dag((_nest(1024, ("X",), ("T", "D")),
+                       _nest(1024, ("T",), ())))
+
+
+# --------------------------------------------------------------------------
+# 2. Refcounted scratch slots
+# --------------------------------------------------------------------------
+
+
+class TestDagSlots:
+    def test_diamond_needs_two_slots(self):
+        dag = chain_dag(diamond_nests(2048), force=True)
+        slot_of, n_slots = L._dag_slots(dag)
+        assert n_slots == 2
+        assert set(slot_of) == {"T", "U"}
+        assert slot_of["T"] != slot_of["U"]   # both live into stage 2
+
+    def test_linear_chain_reuses_one_slot(self):
+        n = 2048
+        nests = (_nest(n, ("X",), ("T",)),
+                 _nest(n, ("T",), ("U",)),
+                 _nest(n, ("U",), ("V",)),
+                 _nest(n, ("V",), ()))
+        dag = chain_dag(nests, force=True)
+        slot_of, n_slots = L._dag_slots(dag)
+        # each value dies at the stage that produces the next: one slot
+        # cycles through the whole chain
+        assert n_slots == 1
+        assert set(slot_of.values()) == {0}
+
+    def test_stage_writing_two_intermediates_rejected(self):
+        dag = chain_dag((_nest(1024, ("X",), ("T", "U")),
+                         _nest(1024, ("T", "U"), ())), force=True)
+        with pytest.raises(LoweringError, match=_exact(
+                "dag stage 0 produces intermediates ['T', 'U']; a stage "
+                "body returns one block, so each non-final stage must "
+                "write exactly one intermediate")):
+            L._dag_slots(dag)
+
+
+# --------------------------------------------------------------------------
+# 3. Fused execution: numerics, cuts, linear equivalence, uniforms
+# --------------------------------------------------------------------------
+
+
+class TestSsrDagCall:
+    @pytest.mark.parametrize("n", [1024, 5000])
+    def test_diamond_map(self, n):
+        x = arr(n)
+        got = ssr_dag_call(diamond_nests(n), DIAMOND_BODIES, {"X": x},
+                           mode="map")
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(diamond_want(x)),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [1024, 5000])
+    def test_diamond_reduce(self, n):
+        # padding-neutral by construction: x=0 → t=0 → t·(t+1)=0
+        x = arr(n)
+        got = ssr_dag_call(diamond_nests(n), DIAMOND_BODIES, {"X": x},
+                           mode="reduce")
+        want = float(jnp.sum(diamond_want(x)))
+        np.testing.assert_allclose(float(got), want, rtol=1e-4, atol=1e-2)
+
+    def test_every_legal_cut_matches_fused(self):
+        n = 4096
+        x = arr(n)
+        nests = diamond_nests(n)
+        dag = L._dag_for(nests, None)
+        want = np.asarray(ssr_dag_call(nests, DIAMOND_BODIES, {"X": x},
+                                       mode="map"))
+        ran = 0
+        for cut in autotune.enumerate_cuts(dag):
+            if not autotune.dag_cut_is_legal(dag, cut)[0]:
+                continue
+            sched = dataclasses.replace(DEFAULT_SCHEDULE, cut_edges=cut)
+            got = ssr_dag_call(nests, DIAMOND_BODIES, {"X": x},
+                               mode="map", schedule=sched)
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       rtol=1e-5, atol=1e-5)
+            ran += 1
+        assert ran >= 3   # (), the diamond split, and the full cut
+
+    def test_linear_chain_matches_ssr_chain_call(self):
+        n = 3000
+        x, y = arr(n), arr(n)
+        nests = (_nest(n, ("X", "Y"), ("T",), compute=2),
+                 _nest(n, ("T",), ()))
+        bodies = (lambda a, b: a - b, lambda t: jnp.maximum(t, 0.0))
+        via_chain = ssr_chain_call(nests, bodies, {"X": x, "Y": y},
+                                   mode="map")
+        via_dag = ssr_dag_call(nests, bodies, {"X": x, "Y": y}, mode="map")
+        # the DAG path lowers a 2-stage line to the same fused kernel the
+        # linear path builds: identical blocks, identical op order —
+        # bit-identical output, not merely close
+        np.testing.assert_array_equal(np.asarray(via_dag),
+                                      np.asarray(via_chain))
+
+
+class TestUniformOperands:
+    def test_whole_array_delivery_and_1d_reshape(self):
+        n = 2048
+        x, w = arr(n), arr(16)
+        nest = _nest(n, ("X",), ())
+        seen = []
+
+        def body(xb, wb):
+            seen.append(wb.shape)
+            return xb * jnp.sum(wb)
+
+        got = ssr_call(nest, body, {"X": x}, mode="map",
+                       uniforms={"W": w})
+        # 1-D uniforms gain a leading singleton (Pallas blocks are ≥ 2-D)
+        assert all(s == (1, 16) for s in seen)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(x * jnp.sum(w)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_scalar_uniform_rejected(self):
+        nest = _nest(1024, ("X",), ())
+        with pytest.raises(ValueError, match=_exact(
+                "uniform 's' is a scalar; close over the Python value "
+                "instead — scalar closures hash and cache fine")):
+            ssr_call(nest, lambda xb, s: xb * s, {"X": arr(1024)},
+                     mode="map", uniforms={"s": jnp.float32(2.0)})
+
+    def test_level_mapped_path_rejected(self):
+        nest = _nest(1024, ("X", "Y"), ("T",), compute=2)
+        with pytest.raises(LoweringError, match=_exact(
+                "uniform operands are not supported on the level-mapped "
+                "(explicit WRITE ref) path; use a map/reduce nest")):
+            ssr_call(nest, lambda a, b, w: a - b,
+                     {"X": arr(1024), "Y": arr(1024)},
+                     uniforms={"W": arr(128).reshape(1, -1)})
+
+    def test_uniform_name_clash_rejected(self):
+        with pytest.raises(ValueError, match=_exact(
+                "uniform names ['X'] collide with streamed operands; "
+                "uniforms are a separate argument namespace")):
+            ssr_dag_call(diamond_nests(1024), DIAMOND_BODIES,
+                         {"X": arr(1024)}, mode="map",
+                         uniforms={"X": arr(16)})
+
+
+# --------------------------------------------------------------------------
+# 4. Schedule plumbing: asymmetric depths, JSON round-trip
+# --------------------------------------------------------------------------
+
+
+class TestStreamDepths:
+    def test_asymmetric_depths_change_nothing_numerically(self):
+        n = 4096
+        x, y = arr(n), arr(n)
+        nest = _nest(n, ("X", "Y"), (), compute=2)
+        want = ssr_call(nest, lambda a, b: a * b, {"X": x, "Y": y},
+                        mode="reduce")
+        got = ssr_call(nest, lambda a, b: a * b, {"X": x, "Y": y},
+                       mode="reduce",
+                       schedule=Schedule(stream_depths=(4, 2)))
+        np.testing.assert_allclose(float(got), float(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_wrong_depth_count_rejected(self):
+        nest = _nest(1024, ("X", "Y"), (), compute=2)
+        with pytest.raises(LoweringError, match=_exact(
+                "schedule.stream_depths has 3 entries for 2 read streams; "
+                "give one depth per stream (allocation order)")):
+            ssr_call(nest, lambda a, b: a * b,
+                     {"X": arr(1024), "Y": arr(1024)}, mode="reduce",
+                     schedule=Schedule(stream_depths=(4, 2, 2)))
+
+    def test_wrong_depth_count_is_illegal_schedule(self):
+        nest = _nest(1024, ("X", "Y"), (), compute=2)
+        legal, reason = autotune.schedule_is_legal(
+            nest, Schedule(stream_depths=(2, 2, 2)))
+        assert not legal
+        assert "3 entries for 2 read streams" in reason
+
+    def test_full_search_proposes_asymmetric_depths(self):
+        nest = _nest(4096, ("X", "Y"), (), compute=2)
+        full = autotune.candidate_schedules(nest, quick=False)
+        asym = {s.stream_depths for s in full if s.stream_depths}
+        assert {(4, 2), (2, 4), (3, 2), (2, 3)} <= asym
+        # quick runs skip the per-stream sweep
+        quick = autotune.candidate_schedules(nest, quick=True)
+        assert not any(s.stream_depths for s in quick)
+
+    def test_schedule_json_round_trip(self):
+        for sched in (Schedule(stream_depths=(4, 2), cut_edges=()),
+                      Schedule(cut_edges=(0, 2)),
+                      Schedule(buffer_depth=3),
+                      DEFAULT_SCHEDULE):
+            assert Schedule.from_json(sched.to_json()) == sched
+        # the () cut (all-fused, explicitly committed) must survive the
+        # round trip distinct from None (never searched)
+        assert Schedule.from_json(
+            Schedule(cut_edges=()).to_json()).cut_edges == ()
+        assert Schedule.from_json(
+            DEFAULT_SCHEDULE.to_json()).cut_edges is None
+
+
+# --------------------------------------------------------------------------
+# 5. The fusion search
+# --------------------------------------------------------------------------
+
+
+class TestCutSearch:
+    def test_enumerate_cuts_order(self):
+        dag = L._dag_for(diamond_nests(1024), None)
+        cuts = autotune.enumerate_cuts(dag)
+        assert len(cuts) == 2 ** len(dag.edges)
+        assert cuts[0] == ()
+        assert cuts[-1] == tuple(range(len(dag.edges)))
+
+    def test_diamond_legality(self):
+        dag = L._dag_for(diamond_nests(1024), None)
+        legal = [c for c in autotune.enumerate_cuts(dag)
+                 if autotune.dag_cut_is_legal(dag, c)[0]]
+        # a single severed edge leaves a component with two exit stages —
+        # only the endpoints and the both-T-edges split survive
+        assert legal == [(), (0, 1), (0, 1, 2)]
+
+    def test_out_of_range_cut_index(self):
+        dag = L._dag_for(diamond_nests(1024), None)
+        legal, reason = autotune.dag_cut_is_legal(dag, (7,))
+        assert not legal
+        assert "out of range" in reason
+
+    def test_model_cost_monotone_in_materialisation(self):
+        dag = L._dag_for(diamond_nests(1024), None)
+        fused = autotune.dag_model_cost(dag, ())
+        split = autotune.dag_model_cost(dag, (0, 1))
+        full = autotune.dag_model_cost(dag, (0, 1, 2))
+        assert fused < split < full
+
+    def test_autotune_commits_and_lookup_resolves(self, tmp_path):
+        n = 2048
+        x = arr(n)
+        nests = diamond_nests(n)
+        cache = ScheduleCache(path=str(tmp_path / "sched"))
+        res = autotune.autotune_dag(nests, DIAMOND_BODIES, {"X": x},
+                                    mode="map", cache=cache,
+                                    warmup=0, iters=1, force=True)
+        assert res.candidates == 3            # the legal diamond cuts
+        assert res.measured == 3              # endpoints always race
+        committed = cache.get(res.key)
+        assert committed is not None
+        assert committed.cut_edges == res.schedule.cut_edges
+        # transparent dispatch: a later plain call resolves the same key
+        assert autotune.lookup_dag(nests, {"X": x}, mode="map",
+                                   cache=cache) == committed
+        # and an un-tuned problem falls back to the default
+        other = (_nest(n, ("X",), ("T",)), _nest(n, ("T",), ()))
+        assert autotune.lookup_dag(other, {"X": x}, mode="map",
+                                   cache=cache) == DEFAULT_SCHEDULE
+
+    def test_cache_key_separates_uniforms(self):
+        nests = diamond_nests(1024)
+        x, w = arr(1024), arr(16).reshape(1, -1)
+        k_plain = autotune.dag_cache_key(nests, {"X": x})
+        k_uni = autotune.dag_cache_key(nests, {"X": x},
+                                       uniforms={"W": w})
+        assert k_plain != k_uni
+
+
+# --------------------------------------------------------------------------
+# 6. Registry DagCases: cut-path equivalence + HLO audit
+# --------------------------------------------------------------------------
+
+
+class TestDagRegistryKernels:
+    def test_registered(self):
+        from repro.kernels import registry
+        for name in ("layernorm", "softmax_xent", "mlp_block"):
+            entry = registry.get(name)
+            assert entry.problem == f"fused DAG: {name}"
+            assert entry.baseline is not None    # the unfused composition
+
+    def test_layernorm_every_legal_cut(self):
+        from repro.kernels.dag import dag_cases
+        case = dag_cases()[0]
+        args, kwargs = case.example(np.random.default_rng(3), odd=True)
+        nests, bodies, operands, mode, uniforms = case.spec(*args, **kwargs)
+        dag = L._dag_for(tuple(nests), None)
+        want = np.asarray(case.ref(*args, **kwargs))
+        for cut in autotune.enumerate_cuts(dag):
+            if not autotune.dag_cut_is_legal(dag, cut)[0]:
+                continue
+            sched = dataclasses.replace(DEFAULT_SCHEDULE, cut_edges=cut)
+            got = case.fused(*args, schedule=sched, **kwargs)
+            np.testing.assert_allclose(np.asarray(got), want, **case.tol)
+
+    def test_layernorm_hlo_audit(self):
+        from repro.kernels.dag import dag_cases
+        from repro.launch.hlo_analysis import check_dag_fusion
+        case = dag_cases()[0]
+        args, kwargs = case.example(np.random.default_rng(3))
+        chk = check_dag_fusion(
+            lambda *a, **k: case.fused(*a, schedule=DEFAULT_SCHEDULE, **k),
+            case.unfused, args, kwargs, case.inters(*args, **kwargs))
+        assert chk.intermediates_eliminated
+        assert chk.bytes_saved > 0
+        assert chk.fused_buffers <= chk.unfused_buffers
+
+
+# --------------------------------------------------------------------------
+# 7. Bench artifacts: schema-v4 dag rows + the run-history JSONL
+# --------------------------------------------------------------------------
+
+
+def _dag_row(kern, variant, value, cut, stages, **extra):
+    from benchmarks.kernel_bench import _row
+    return _row(f"dag/{kern}", "dag", variant, value, "us/call",
+                cut_edges=list(cut), fused_stages=stages, **extra)
+
+
+def _dag_trio(kern, cut_us, fused_us, unfused_us):
+    return [_dag_row(kern, "cut", cut_us, (), 3, speedup=unfused_us / cut_us),
+            _dag_row(kern, "fused", fused_us, (), 3),
+            _dag_row(kern, "unfused", unfused_us, (0, 1, 2), 1)]
+
+
+class TestBenchArtifacts:
+    def test_schema_is_v4(self):
+        from benchmarks import kernel_bench as kb
+        assert kb.BENCH_SCHEMA == 4
+
+    def test_validate_dag_rows_accepts_good_trios(self):
+        from benchmarks import kernel_bench as kb
+        rows = sum((_dag_trio(k, 10.0, 10.0, 20.0)
+                    for k in kb.DAG_GATED), [])
+        kb.validate_dag_rows(rows)
+
+    def test_validate_dag_rows_rejects_slow_cut(self):
+        from benchmarks import kernel_bench as kb
+        rows = sum((_dag_trio(k, 10.0, 10.0, 20.0)
+                    for k in kb.DAG_GATED[1:]), [])
+        rows += _dag_trio(kb.DAG_GATED[0], 50.0, 10.0, 20.0)
+        with pytest.raises(ValueError, match="slower than best endpoint"):
+            kb.validate_dag_rows(rows)
+
+    def test_validate_dag_rows_requires_partition_provenance(self):
+        from benchmarks import kernel_bench as kb
+        rows = sum((_dag_trio(k, 10.0, 10.0, 20.0)
+                    for k in kb.DAG_GATED), [])
+        del rows[0]["cut_edges"]
+        with pytest.raises(ValueError, match="missing cut_edges"):
+            kb.validate_dag_rows(rows)
+
+    def test_validate_dag_rows_requires_all_kernels(self):
+        from benchmarks import kernel_bench as kb
+        rows = _dag_trio(kb.DAG_GATED[0], 10.0, 10.0, 20.0)
+        with pytest.raises(ValueError, match="no complete dag rows"):
+            kb.validate_dag_rows(rows)
+
+    def test_history_round_trip(self, tmp_path):
+        from benchmarks import kernel_bench as kb
+        rows = sum((_dag_trio(k, 10.0, 10.0, 20.0)
+                    for k in kb.DAG_GATED), [])
+        path = str(tmp_path / "hist.jsonl")
+        entry = kb.append_bench_history(rows, path, quick=True)
+        assert entry["schema"] == kb.BENCH_SCHEMA
+        assert entry["dag_cuts"] == {k: [] for k in kb.DAG_GATED}
+        assert all(v == 2.0 for v in entry["speedups"].values())
+        assert kb.validate_bench_history(path) == 1
+        kb.append_bench_history(rows, path, quick=False)
+        assert kb.validate_bench_history(path) == 2
+
+    def test_history_rejects_corrupt_line(self, tmp_path):
+        from benchmarks import kernel_bench as kb
+        path = str(tmp_path / "hist.jsonl")
+        kb.append_bench_history(_dag_trio("layernorm", 1.0, 1.0, 2.0),
+                                path, quick=True)
+        with open(path, "a") as f:
+            f.write("{truncated\n")
+        with pytest.raises(ValueError, match="not valid JSON"):
+            kb.validate_bench_history(path)
+
+    def test_history_rejects_missing_field(self, tmp_path):
+        import json
+
+        from benchmarks import kernel_bench as kb
+        path = str(tmp_path / "hist.jsonl")
+        kb.append_bench_history(_dag_trio("layernorm", 1.0, 1.0, 2.0),
+                                path, quick=True)
+        with open(path) as f:
+            entry = json.loads(f.readline())
+        del entry["git_sha"]
+        with open(path, "a") as f:
+            f.write(json.dumps(entry) + "\n")
+        with pytest.raises(ValueError, match="missing/mistyped 'git_sha'"):
+            kb.validate_bench_history(path)
+
+    def test_history_rejects_empty(self, tmp_path):
+        from benchmarks import kernel_bench as kb
+        path = tmp_path / "hist.jsonl"
+        path.write_text("\n")
+        with pytest.raises(ValueError, match="empty history"):
+            kb.validate_bench_history(str(path))

@@ -4,10 +4,12 @@ Four checks, all hard failures:
 
 1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
    files resolves to an existing file (http/mailto/anchor links skipped);
-2. the schedule autotuner and the pipelined emitter stay documented:
-   DESIGN.md keeps its ``## 9`` (autotuner) and ``## 10`` (pipelined
-   emission / ``buffer_depth``) sections + their §2 correspondence rows,
-   the README its autotune quickstart;
+2. the schedule autotuner, the pipelined emitter, and the chain-DAG
+   fusion layer stay documented: DESIGN.md keeps its ``## 9``
+   (autotuner), ``## 10`` (pipelined emission / ``buffer_depth``), and
+   ``## 11`` (chain DAGs / ``cut_edges``) sections + their §2
+   correspondence rows, the README its autotune quickstart and fused-DAG
+   coverage;
 3. the committed ``EXPERIMENTS.md`` matches a fresh render from
    ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
    models without regenerating it, fails the build;
@@ -135,6 +137,33 @@ def check_pipeline_docs() -> List[str]:
     return problems
 
 
+def check_dag_docs() -> List[str]:
+    """Whole-program DAG fusion must stay documented: DESIGN.md §11 + its
+    §2 correspondence row, and the README's fused-DAG coverage (pure-text
+    check, no jax import)."""
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 11\..*DAG", design, re.MULTILINE):
+        problems.append("DESIGN.md: missing '## 11.' chain-DAG fusion "
+                        "section")
+    for needle, where in (("chain_dag", "DESIGN.md"),
+                          ("ssr_dag_call", "DESIGN.md"),
+                          ("Schedule.cut_edges", "DESIGN.md")):
+        if needle not in design:
+            problems.append(f"{where}: §2 correspondence / §11 does not "
+                            f"mention {needle}")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    if "cut_edges" not in readme:
+        problems.append("README.md: no mention of the committed cut_edges "
+                        "partition provenance")
+    if "autotune_dag" not in readme:
+        problems.append("README.md: no mention of the autotune_dag fusion "
+                        "search")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -179,6 +208,15 @@ def main(argv=None) -> int:
     else:
         print("pipelined-emission docs present (DESIGN.md §10 + "
               "buffer_depth rows)")
+
+    dag_problems = check_dag_docs()
+    if dag_problems:
+        ok = False
+        print("\nchain-DAG docs gate:")
+        for p in dag_problems:
+            print(f"  {p}")
+    else:
+        print("chain-DAG docs present (DESIGN.md §11 + cut_edges rows)")
 
     if not args.skip_experiments:
         diff = check_experiments()
