@@ -38,7 +38,12 @@ autotuned pipelined schedule races the synchronous depth-2 default under a
 softmax_xent, mlp_block) and races the committed graph cut against both
 endpoints — all-fused and all-unfused; dag rows additionally carry
 ``cut_edges`` (the materialised edge indices) and ``fused_stages`` (the
-largest fused component's stage count).
+largest fused component's stage count).  The ``sparse`` group (v5) gates
+the CSR indirection-stream kernels (spmv, spmm): streamed-vs-baseline
+agreement ≤ 1e-5, Eq. (1)–(3) model speedup > 1, and a non-zero count of
+eliminated index-handling instructions; sparse rows carry problem
+provenance — ``nnz`` and ``density`` of the CSR operand — alongside
+``eliminated_idx_instrs``.
 
 Each run also appends one summary line to ``BENCH_history.jsonl`` (date,
 git sha, per-kernel speedups, committed dag cuts) — the cheap
@@ -76,7 +81,11 @@ RNG = np.random.default_rng(0)
 #: rows carry ``cut_edges`` (materialised edge indices of the committed
 #: partition) and ``fused_stages`` (largest fused component's stage
 #: count) alongside the schedule provenance fields.
-BENCH_SCHEMA = 4
+#: v5: adds the gated ``sparse`` group (CSR indirection streams); sparse
+#: rows carry ``nnz``/``density`` problem provenance and the model rows
+#: additionally ``eliminated_idx_instrs`` — the per-nnz index loads +
+#: pointer arithmetic the indirect AGU removes from the hot loop.
+BENCH_SCHEMA = 5
 
 
 def _row(name: str, group: str, variant: str, value: float, units: str,
@@ -120,7 +129,12 @@ def bench_reference_paths(iters: int = 5) -> List[Dict]:
         if entry.example is None:
             continue
         args, kwargs = entry.example(RNG)
-        fn = jax.jit(lambda *a, _e=entry, _kw=kwargs: _e.ref(*a, **_kw))
+        if entry.name in SPARSE_GATED:
+            # CSR refs validate + densify host-side (the ELL width is
+            # data-dependent), so they cannot be traced — time them eagerly.
+            fn = lambda *a, _e=entry, _kw=kwargs: _e.ref(*a, **_kw)
+        else:
+            fn = jax.jit(lambda *a, _e=entry, _kw=kwargs: _e.ref(*a, **_kw))
         us = _time(fn, *args, iters=iters)
         print(f"{entry.name:16s} {entry.problem:26s} {us:10.1f} μs")
         rows.append(_row(f"kernel_ref/{entry.name}", "kernel_ref", "ref",
@@ -247,6 +261,128 @@ def bench_nest_gate() -> List[Dict]:
                          "model_speedup", n_base=stats.n_base,
                          n_ssr=stats.n_ssr))
     return rows
+
+
+# --------------------------------------------------------------------------
+# CSR indirection streams: sparse gate (agreement + eliminated-instr model)
+# --------------------------------------------------------------------------
+
+#: The CSR kernels the sparse gate covers — the indirection-stream path
+#: (Indirection-SSR / Sparse-SSR follow-ups to the base paper).
+SPARSE_GATED = ("spmv", "spmm")
+
+
+def _sparse_cases(quick: bool):
+    """(name, args, nest, nnz, density) per gated sparse kernel."""
+    from repro.core import compiler
+    from repro.kernels import sparse as sp
+
+    cases = []
+    m, n, c = (32, 48, 16) if quick else (96, 128, 32)
+    for name, density in (("spmv", 0.15), ("spmm", 0.15)):
+        data, indices, indptr = sp.random_csr(RNG, m, n, density)
+        if name == "spmv":
+            x = RNG.standard_normal(n).astype(np.float32)
+            args = (data, indices, indptr, x)
+        else:
+            x = RNG.standard_normal((n, c)).astype(np.float32)
+            args = (data, indices, indptr, x)
+        vals, cidx, rows_m, k = sp.csr_to_ell(data, indices, indptr, n)
+        if name == "spmv":
+            nest = compiler.spmv_nest(rows_m, k)
+        else:
+            pitch = -(-c // sp._TABLE_PITCH) * sp._TABLE_PITCH
+            nest = compiler.spmm_nest(rows_m, c, k, pitch)
+        cases.append((name, args, nest, int(data.size),
+                      float(data.size) / float(m * n)))
+    return cases
+
+
+def bench_sparse(quick: bool = False) -> List[Dict]:
+    """Gate the CSR indirection-stream kernels (spmv, spmm).
+
+    Hard failures (exit 1), mirrored in ``validate_sparse_rows``:
+
+    * the streamed gather engine disagrees with the explicit-``jnp.take``
+      baseline beyond ``NEST_AGREEMENT_TOL`` (a fast wrong gather is not
+      a win);
+    * the Eq. (1)–(3) model — extended with the per-nnz index loads +
+      pointer arithmetic the indirect AGU eliminates — predicts speedup
+      ≤ 1, or eliminates zero index-handling instructions (then the
+      indirect ref never reached the streamer and the lowering is wrong).
+    """
+    from repro.core.lowering import plan_stats
+    from repro.core.nest_analysis import auto_lanes
+
+    rows: List[Dict] = []
+    print("\n== CSR sparse gate: ssr vs baseline + indirection model ==")
+    for name, args, nest, nnz, density in _sparse_cases(quick):
+        entry = registry.get(name)
+        ssr_out = np.asarray(entry.ssr(*args))
+        base_out = np.asarray(entry.baseline(*args))
+        diff = float(np.max(np.abs(ssr_out - base_out))) if ssr_out.size \
+            else 0.0
+        if diff > NEST_AGREEMENT_TOL:
+            print(f"FAIL {name}: ssr disagrees with baseline by {diff:.2e} "
+                  f"> {NEST_AGREEMENT_TOL}", file=sys.stderr)
+            raise SystemExit(1)
+        stats = plan_stats(nest, num_lanes=auto_lanes(nest))
+        speedup = stats.n_base / stats.n_ssr
+        if not (stats.ssrified and speedup > 1.0):
+            print(f"FAIL {name}: Eq. (3) model speedup {speedup:.2f} <= 1",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        if stats.eliminated_idx_instrs <= 0:
+            print(f"FAIL {name}: indirect ref eliminated no index-handling "
+                  "instructions — the gather never reached the streamer",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"{name:12s} nnz {nnz:6d} (density {density:5.3f})  "
+              f"agreement {diff:.1e}  model speedup {speedup:4.2f}x  "
+              f"idx instrs eliminated {stats.eliminated_idx_instrs}")
+        rows.append(_row(f"sparse/{name}", "sparse", "agreement", diff,
+                         "max_abs_diff", nnz=nnz, density=density))
+        rows.append(_row(f"sparse/{name}", "sparse", "model", speedup,
+                         "model_speedup", nnz=nnz, density=density,
+                         n_base=stats.n_base, n_ssr=stats.n_ssr,
+                         eliminated_idx_instrs=stats.eliminated_idx_instrs))
+    return rows
+
+
+def validate_sparse_rows(results: Sequence[Dict]) -> None:
+    """The sparse acceptance gate, re-applied to persisted rows.
+
+    Every gated CSR kernel must have agreement + model rows; every sparse
+    row must carry the v5 problem provenance (integer ``nnz``, ``density``
+    in [0, 1]); agreement must hold to ``NEST_AGREEMENT_TOL``; and the
+    model row must record a speedup > 1 with a positive
+    ``eliminated_idx_instrs`` count.
+    """
+    by_kernel: Dict[str, Dict[str, Dict]] = {}
+    for r in results:
+        if r.get("group") == "sparse":
+            if not isinstance(r.get("nnz"), int) or r["nnz"] < 0:
+                raise ValueError(f"sparse row missing integer nnz: {r}")
+            d = r.get("density")
+            if not isinstance(d, (int, float)) or not 0.0 <= d <= 1.0:
+                raise ValueError(f"sparse row density outside [0, 1]: {r}")
+            by_kernel.setdefault(r["name"].split("/")[1], {})[r["variant"]] = r
+    for kern in SPARSE_GATED:
+        pair = by_kernel.get(kern)
+        if not pair or "agreement" not in pair or "model" not in pair:
+            raise ValueError(f"no sparse gate rows for {kern!r}")
+        if pair["agreement"]["value"] > NEST_AGREEMENT_TOL:
+            raise ValueError(
+                f"{kern}: ssr-vs-baseline disagreement "
+                f"{pair['agreement']['value']} > {NEST_AGREEMENT_TOL}")
+        model = pair["model"]
+        if model["value"] <= 1.0:
+            raise ValueError(f"{kern}: model speedup {model['value']} <= 1")
+        if not isinstance(model.get("eliminated_idx_instrs"), int) \
+                or model["eliminated_idx_instrs"] <= 0:
+            raise ValueError(
+                f"{kern}: model row must record a positive "
+                "eliminated_idx_instrs count")
 
 
 # --------------------------------------------------------------------------
@@ -956,9 +1092,12 @@ def validate_bench_json(path: str) -> None:
         raise ValueError(f"no pipeline results recorded (groups: {groups})")
     if "dag" not in groups:
         raise ValueError(f"no dag results recorded (groups: {groups})")
+    if "sparse" not in groups:
+        raise ValueError(f"no sparse results recorded (groups: {groups})")
     validate_autotune_rows(results, require_nondefault=not doc.get("quick"))
     validate_pipeline_rows(results, require_deep=not doc.get("quick"))
     validate_dag_rows(results)
+    validate_sparse_rows(results)
     # compiled-nest gate: gemm/stencil1d must be present, numerically in
     # agreement, and model-profitable
     nest_rows = {(r["name"].split("/")[1], r["variant"]): r
@@ -1029,6 +1168,11 @@ def append_bench_history(rows: Sequence[Dict], path: str,
     dag_cuts = {r["name"].split("/")[1]: r["cut_edges"]
                 for r in rows
                 if r.get("group") == "dag" and r.get("variant") == "cut"}
+    sparse = {r["name"].split("/")[1]: {
+                  "nnz": r["nnz"], "density": r["density"],
+                  "eliminated_idx_instrs": r["eliminated_idx_instrs"]}
+              for r in rows
+              if r.get("group") == "sparse" and r.get("variant") == "model"}
     entry = {
         "schema": BENCH_SCHEMA,
         "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -1038,11 +1182,12 @@ def append_bench_history(rows: Sequence[Dict], path: str,
         "groups": sorted({r["group"] for r in rows}),
         "speedups": speedups,
         "dag_cuts": dag_cuts,
+        "sparse": sparse,
     }
     with open(path, "a") as f:
         f.write(json.dumps(entry, sort_keys=True) + "\n")
     print(f"appended run summary to {path} ({len(speedups)} speedups, "
-          f"{len(dag_cuts)} dag cuts)")
+          f"{len(dag_cuts)} dag cuts, {len(sparse)} sparse gates)")
     return entry
 
 
@@ -1084,6 +1229,18 @@ def validate_bench_history(path: str) -> int:
                     raise ValueError(
                         f"{path}:{lineno}: dag cut for {kern!r} is not a "
                         "list")
+            # v5 lines carry the sparse-gate summary; older lines (1–4)
+            # legitimately lack it, so the field is optional-but-typed
+            if "sparse" in entry:
+                if not isinstance(entry["sparse"], dict):
+                    raise ValueError(
+                        f"{path}:{lineno}: sparse summary is not a dict")
+                for kern, info in entry["sparse"].items():
+                    if not isinstance(info, dict) or not isinstance(
+                            info.get("nnz"), int):
+                        raise ValueError(
+                            f"{path}:{lineno}: sparse summary for {kern!r} "
+                            "missing integer nnz")
             count += 1
     if count == 0:
         raise ValueError(f"{path}: empty history")
@@ -1151,6 +1308,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rows += smoke_ssr_paths()
     rows += bench_stream_reports()
     rows += bench_nest_gate()
+    rows += bench_sparse(quick=args.quick)
     rows += bench_autotune(quick=args.quick)
     rows += bench_pipeline(quick=args.quick)
     rows += bench_fused(quick=args.quick, check_hlo=not args.no_hlo)

@@ -72,6 +72,8 @@ from .compiler import (  # noqa: F401
     elementwise_nest,
     gemm_nest,
     iso_performance_cores,
+    spmm_nest,
+    spmv_nest,
     ssrify,
     stencil_nest,
 )

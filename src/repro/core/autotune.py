@@ -47,6 +47,8 @@ import math
 import os
 import tempfile
 import time
+
+import numpy as np
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import nest_analysis
@@ -98,12 +100,19 @@ def default_cache_dir() -> str:
 def nest_signature(nest: LoopNest) -> str:
     """Canonical text form of a nest — the schedule cache's identity.
 
-    Any change to bounds, refs (name/kind/coeffs/offset) or per-level
-    compute yields a different signature, so editing a kernel's nest
-    invalidates its cached schedules by construction.
+    Any change to bounds, refs (name/kind/coeffs/offset, plus the index
+    stream + scale of an indirect ref) or per-level compute yields a
+    different signature, so editing a kernel's nest invalidates its cached
+    schedules by construction.  Affine refs keep their pre-indirection
+    text form, so existing cached schedules stay addressable.
     """
-    refs = ";".join(
-        f"{r.name}:{r.kind.name}:{r.coeffs}:{r.offset}" for r in nest.refs)
+    def _ref_sig(r) -> str:
+        sig = f"{r.name}:{r.kind.name}:{r.coeffs}:{r.offset}"
+        if r.is_indirect():
+            sig += f":ix={r.index_of}*{r.index_scale}"
+        return sig
+
+    refs = ";".join(_ref_sig(r) for r in nest.refs)
     return f"b={nest.bounds}|refs={refs}|c={nest.compute_per_level}"
 
 
@@ -357,6 +366,40 @@ def _max_depth(sched: Schedule) -> int:
     return sched.buffer_depth
 
 
+def _operand_bytes(v: Any, itemsize: int = 4) -> int:
+    """Whole-operand VMEM footprint; accepts arrays or (shape, dtype)."""
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        shape, dtype = tuple(v.shape), v.dtype
+    else:
+        shape, dtype = v
+    try:
+        size = np.dtype(dtype).itemsize
+    except TypeError:
+        size = itemsize
+    return math.prod(tuple(shape)) * size
+
+
+def _gather_table_bytes(lowered, operands: Optional[Dict[str, Any]],
+                        itemsize: int = 4) -> int:
+    """VMEM charge for indirect refs: the whole gather table is resident.
+
+    This is the indirect-ref legality rule — index blocks stream like any
+    other lane (charged above), but the indirectly addressed operand rides
+    double-buffered as an invariant block, so its *full* extent counts
+    against the budget.  Without operands the geometry-only charge is 0
+    (table sizes are operand facts, not nest facts).
+    """
+    gathers = getattr(lowered, "gathers", ())
+    if not gathers or not operands:
+        return 0
+    total = 0
+    for g in gathers:
+        if g.name in operands:
+            total += stream_vmem_bytes(
+                _operand_bytes(operands[g.name], itemsize), 2)
+    return total
+
+
 def _stream_block_bytes(lowered, itemsize: int = 4) -> int:
     """Depth-buffered stream blocks + kernel-resident scratch, in bytes.
 
@@ -416,8 +459,15 @@ def _stream_block_bytes(lowered, itemsize: int = 4) -> int:
 
 
 def schedule_is_legal(nest: LoopNest, sched: Schedule, *,
-                      itemsize: int = 4) -> Tuple[bool, str]:
-    """(legal, reason).  Lowering + lane divisibility + VMEM budget."""
+                      itemsize: int = 4,
+                      operands: Optional[Dict[str, Any]] = None
+                      ) -> Tuple[bool, str]:
+    """(legal, reason).  Lowering + lane divisibility + VMEM budget.
+
+    ``operands`` (when given) enables the indirect-ref rule: each gather
+    table's full footprint joins the depth-buffered stream blocks against
+    the VMEM budget — see :func:`_gather_table_bytes`.
+    """
     if sched.lanes % 128 != 0 or sched.lanes < 128:
         return False, f"lanes {sched.lanes} not a multiple of the 128-wide " \
                       "hardware lane"
@@ -446,6 +496,7 @@ def schedule_is_legal(nest: LoopNest, sched: Schedule, *,
                        f"entries for {len(lowered.in_streams)} read "
                        "streams")
     vmem = _stream_block_bytes(lowered, itemsize)
+    vmem += _gather_table_bytes(lowered, operands, itemsize)
     if vmem > VMEM_BUDGET_BYTES:
         return False, (f"VMEM working set {vmem / 2**20:.1f} MiB exceeds "
                        f"budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB")
@@ -477,14 +528,16 @@ def _axis_orders(nest: LoopNest) -> List[Tuple[int, ...]]:
 
 
 def candidate_schedules(nest: LoopNest, *, quick: bool = False,
-                        max_candidates: Optional[int] = None
+                        max_candidates: Optional[int] = None,
+                        operands: Optional[Dict[str, Any]] = None
                         ) -> List[Schedule]:
     """Legal candidates for a nest, default schedule always first.
 
     Enumerates block geometries (rows × lanes) and — for level-mapped
     nests — tile-factor and grid-axis-order variants, filtered through
-    :func:`schedule_is_legal`.  Deterministic order (the generator is pure
-    enumeration), so ranking + tie-breaks reproduce run to run.
+    :func:`schedule_is_legal` (with ``operands``, gather tables count
+    against the VMEM budget too).  Deterministic order (the generator is
+    pure enumeration), so ranking + tie-breaks reproduce run to run.
     """
     rowses = _QUICK_ROWS if quick else _ROWS_CHOICES
     laneses = _QUICK_LANES if quick else _LANES_CHOICES
@@ -523,7 +576,7 @@ def candidate_schedules(nest: LoopNest, *, quick: bool = False,
         if s in seen:
             continue
         seen.add(s)
-        if schedule_is_legal(nest, s)[0]:
+        if schedule_is_legal(nest, s, operands=operands)[0]:
             out.append(s)
     if max_candidates is not None:
         out = out[:max_candidates]
@@ -719,7 +772,7 @@ def autotune(nest: LoopNest, body: Callable, operands: Dict[str, Any], *,
                             num_lanes=num_lanes, interpret=interpret)
 
     cands = list(candidates) if candidates is not None \
-        else candidate_schedules(nest)
+        else candidate_schedules(nest, operands=operands)
     if DEFAULT_SCHEDULE not in cands:
         cands.insert(0, DEFAULT_SCHEDULE)
     survivors = rank_candidates(nest, cands, top_k=top_k)

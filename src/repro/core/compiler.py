@@ -46,6 +46,11 @@ class StreamPlan:
     ssrified: bool                 # Eq. (3) verdict (False => emit baseline)
     n_ssr: int
     n_base: int
+    # Index-handling instructions (index load + per-element pointer
+    # arithmetic) the baseline pays for each *allocated* indirect ref and
+    # the indirection extension elides — the quantity Indirection-SSR
+    # (arXiv 2011.08070) / Sparse SSR (arXiv 2305.05559) report per nnz.
+    eliminated_idx_instrs: int = 0
 
     @property
     def speedup(self) -> float:
@@ -63,8 +68,17 @@ def _to_spec(ref: MemRef, nest: LoopNest) -> StreamSpec:
     Loop levels whose coefficient is zero become ``repeat`` (read streams:
     the same datum re-emitted — the paper's repeat register) when they are
     innermost, or bound-1 dims otherwise.
+
+    An *indirect* ref has no static walk of its own — its AGU is slaved to
+    the index stream's (arXiv 2011.08070: the index FIFO feeds the address
+    stage), so its spec is the index stream's walk rebased at the gather
+    table.
     """
     assert ref.coeffs is not None
+    if ref.is_indirect():
+        idx_spec = _to_spec(nest_analysis.index_stream_of(ref, nest), nest)
+        return dataclasses.replace(idx_spec, base=ref.offset,
+                                   direction=ref.kind)
     bounds: List[int] = []
     strides: List[int] = []
     repeat = 1
@@ -97,8 +111,9 @@ def ssrify(nest: LoopNest, *, num_lanes: int = DEFAULT_NUM_LANES,
     ``force=True`` skips the profitability test (the paper's "runtime
     decision" path where both variants exist and the caller knows N).
     """
-    candidates = [r for r in nest.refs if r.is_affine()]
-    residual = [r for r in nest.refs if not r.is_affine()]
+    candidates = [r for r in nest.refs if r.is_affine() or r.is_indirect()]
+    residual = [r for r in nest.refs
+                if not (r.is_affine() or r.is_indirect())]
     # §3.2 step 3: deepest-first — a simple heuristic for iteration count.
     candidates.sort(key=lambda r: _ref_depth(r, nest), reverse=True)
     allocations: List[Allocation] = []
@@ -116,10 +131,28 @@ def ssrify(nest: LoopNest, *, num_lanes: int = DEFAULT_NUM_LANES,
     # Residual explicit memory ops stay in the body at their depth: fold
     # them into per-level instruction counts for the cost model.  Streamed
     # and baseline bodies carry the same residual ops — only the allocated
-    # lanes differ — so one count serves both Eq. (1) and Eq. (2).
+    # lanes differ — so one count serves both Eq. (1) and Eq. (2)...
     I = nest_analysis.instr_counts(nest, residual)
+    # ...except for allocated *indirect* refs: Eq. (2)'s s-term charges one
+    # explicit memory instruction per lane per iteration, but a gather also
+    # pays the index→pointer arithmetic in the baseline body.  The
+    # indirection extension folds that into the AGU, so the extra charge
+    # lands on the baseline count only (arXiv 2011.08070 §III).
+    I_base = list(I)
+    eliminated = 0
+    for a in allocations:
+        if not a.ref.is_indirect():
+            continue
+        depth = max(0, _ref_depth(a.ref, nest))
+        I_base[depth] += 1
+        iters = 1
+        for lvl in range(depth + 1):
+            iters *= nest.bounds[lvl]
+        # Per executed element the baseline issues an index load plus the
+        # pointer arithmetic; both vanish once the lane gathers directly.
+        eliminated += 2 * iters
     n_with = isa.n_ssr(L, I, max(s, 1)) if s else isa.n_base(L, I, 0)
-    n_without = isa.n_base(L, I, s)
+    n_without = isa.n_base(L, I_base, s)
     # force=True is the paper's "runtime decision" path: both variants are
     # compiled and the caller elects SSR regardless of the static verdict.
     profitable = bool(s) and (
@@ -129,7 +162,8 @@ def ssrify(nest: LoopNest, *, num_lanes: int = DEFAULT_NUM_LANES,
                           ssrified=False, n_ssr=n_without, n_base=n_without)
     return StreamPlan(nest=nest, allocations=tuple(allocations),
                       residual=tuple(residual), ssrified=True,
-                      n_ssr=n_with, n_base=n_without)
+                      n_ssr=n_with, n_base=n_without,
+                      eliminated_idx_instrs=eliminated)
 
 
 # --------------------------------------------------------------------------
@@ -842,5 +876,50 @@ def gemm_nest(m: int, n: int, k: int) -> LoopNest:
         ),
         # fmadd inner only: C's writeback is the explicit WRITE ref above —
         # charged as a residual store when it has no lane, free when streamed
+        compute_per_level=(0, 0, 1),
+    )
+
+
+def spmv_nest(m: int, k: int) -> LoopNest:
+    """y[m] = Σ_j vals[i,j] · x[cidx[i,j]] over an ELL-packed CSR matrix.
+
+    ``k`` is the row capacity (max nnz per row after ELL padding): vals and
+    cidx walk the packed (m, k) arrays dense, x is the *gather* — an
+    indirect ref whose addresses are the column indices streaming out of
+    cidx (arXiv 2011.08070's index stream feeding the address stage).  y is
+    revisited across j, so the lowering accumulates.  This is also the
+    sparse-row generalisation of :func:`gemv_nest`: set cidx = iota and it
+    degenerates to the dense row walk.
+    """
+    return LoopNest(
+        bounds=(m, k),
+        refs=(
+            MemRef("vals", Direction.READ, (k, 1)),
+            MemRef("cidx", Direction.READ, (k, 1)),
+            MemRef("x", Direction.READ, (0, 0), index_of="cidx"),
+            MemRef("y", Direction.WRITE, (1, 0)),     # revisited across j
+        ),
+        compute_per_level=(0, 1),
+    )
+
+
+def spmm_nest(m: int, c: int, k: int, pitch: int) -> LoopNest:
+    """Y[m,c] = Σ_j vals[i,j] · X[cidx[i,j], c] — CSR × dense (SpMM).
+
+    Loop order (i, c, j) keeps the contraction innermost so the lowering's
+    accumulator rule applies.  vals/cidx repeat across the dense column
+    loop c (coefficient 0 — the §2.3 repeat register); X is the indirect
+    ref: its base address is ``pitch·cidx[i,j]`` (``pitch`` = padded row
+    pitch of the flattened X table) plus the affine column walk ``c``.
+    """
+    return LoopNest(
+        bounds=(m, c, k),
+        refs=(
+            MemRef("vals", Direction.READ, (k, 0, 1)),
+            MemRef("cidx", Direction.READ, (k, 0, 1)),
+            MemRef("X", Direction.READ, (0, 1, 0),
+                   index_of="cidx", index_scale=pitch),
+            MemRef("Y", Direction.WRITE, (c, 1, 0)),  # revisited across j
+        ),
         compute_per_level=(0, 0, 1),
     )

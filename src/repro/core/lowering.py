@@ -411,6 +411,12 @@ def lower_plan(plan: StreamPlan,
             "baseline'); lower the force=True plan for the runtime-decision "
             "path")
     nest = plan.nest
+    for r in nest.refs:
+        if r.is_indirect():
+            raise LoweringError(
+                f"indirect ref '{r.name}': gathers take the level-mapped "
+                "nest path (lower_nest); give the nest an explicit WRITE "
+                "ref so ssr_call routes it there")
     grid = _canonical_grid(nest.bounds, policy)
 
     lowered = [_lower_allocation(a, nest, policy) for a in plan.allocations]
@@ -502,6 +508,34 @@ class NestStream:
 
 
 @dataclasses.dataclass(frozen=True)
+class IndirectGather:
+    """One indirect ref lowered to an in-kernel gather (arXiv 2011.08070).
+
+    The index stream arrives as a normal dense block (``index_pos`` names
+    its position in ``in_streams``); the gather *table* (the indirectly
+    addressed operand) rides along whole in VMEM as a trailing invariant
+    block.  The kernel body computes, per index-block element::
+
+        addr = scale · index_value + Σ_l coeffs[l]·(program_id(grid_pos[l])
+                                                    ·tiles[l] + intra_l)
+               + offset
+
+    and serves the body a ``jnp.take`` gather of the flattened table —
+    each affine additive level prepends one block dimension.
+    """
+
+    name: str
+    index_of: str
+    index_pos: int               # index stream's slot in in_streams
+    scale: int
+    offset: int
+    levels: Tuple[int, ...]      # affine additive levels (outermost first)
+    grid_pos: Tuple[int, ...]    # grid-axis position per level
+    tiles: Tuple[int, ...]       # tile extent per level
+    coeffs: Tuple[int, ...]      # address coefficient per level
+
+
+@dataclasses.dataclass(frozen=True)
 class LoweredNest:
     """A StreamPlan with an output ref, lowered level-by-level.
 
@@ -510,7 +544,9 @@ class LoweredNest:
     ``tiles``/``padded_bounds`` stay in *loop-level* order.
     ``contraction_axes`` are the output's revisited levels as **grid-axis
     positions** — declared ``arbitrary`` (sequential) so the accumulator
-    carries, every other axis ``parallel``.
+    carries, every other axis ``parallel``.  ``gathers`` are the plan's
+    indirect refs: the body receives their gathered blocks *after* the
+    ``in_streams`` blocks, in declaration order.
     """
 
     plan: StreamPlan
@@ -523,6 +559,7 @@ class LoweredNest:
     schedule: Schedule = DEFAULT_SCHEDULE
     axis_order: Tuple[int, ...] = ()
     padded_bounds: Tuple[int, ...] = ()
+    gathers: Tuple[IndirectGather, ...] = ()
 
     @property
     def semantics(self) -> Tuple[str, ...]:
@@ -704,22 +741,60 @@ def lower_nest(plan: StreamPlan,
             f"the innermost levels (output varies with {out_varying}); the "
             "accumulator would be drained and re-initialised mid-reduction")
 
+    for r in plan.residual:
+        if r.is_indirect():
+            raise LoweringError(
+                f"indirect ref '{r.name}' was not allocated a lane; a "
+                "gather cannot stay residual on the block path — raise "
+                "num_lanes so every indirect ref gets a data mover")
+    ind_allocs = [a for a in plan.allocations if a.ref.is_indirect()]
+    dense_allocs = [a for a in plan.allocations if not a.ref.is_indirect()]
+
     orders = {a.ref.name: _storage_order_or_raise(a.ref, nest)
-              for a in plan.allocations}
+              for a in dense_allocs}
     tiles, padded = _nest_tiles(nest, orders, sched)
     axis_order = _grid_axis_order(sched, len(nest.bounds), zaxes)
     pos = {lvl: k for k, lvl in enumerate(axis_order)}
     grid = tuple(padded[l] // tiles[l] for l in axis_order)
 
     lowered = [_lower_nest_stream(a, nest, tiles, padded, policy, pos)
-               for a in plan.allocations]
+               for a in dense_allocs]
     ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
     outs = [s for s in lowered if s.stream.direction == Direction.WRITE]
+    in_slot = {s.name: k for k, s in enumerate(ins)}
+
+    gathers = []
+    for a in ind_allocs:
+        ref = a.ref
+        if ref.index_of not in in_slot:
+            raise LoweringError(
+                f"indirect ref '{ref.name}': its index stream "
+                f"'{ref.index_of}' must itself be an allocated read "
+                "stream — the gather addresses come off that lane")
+        idx_ref = nest_analysis.index_stream_of(ref, nest)
+        affine_lvls = tuple(k for k, c in enumerate(ref.coeffs) if c != 0)
+        overlap = set(affine_lvls) & set(
+            nest_analysis.varying_levels(idx_ref))
+        if overlap:
+            raise LoweringError(
+                f"indirect ref '{ref.name}': affine additive levels "
+                f"{sorted(overlap)} coincide with the index stream's "
+                "varying levels; the gather address would double-count "
+                "those loop indices")
+        gathers.append(IndirectGather(
+            name=ref.name, index_of=ref.index_of,
+            index_pos=in_slot[ref.index_of],
+            scale=ref.index_scale, offset=ref.offset,
+            levels=affine_lvls,
+            grid_pos=tuple(pos[l] for l in affine_lvls),
+            tiles=tuple(tiles[l] for l in affine_lvls),
+            coeffs=tuple(ref.coeffs[l] for l in affine_lvls)))
+
     return LoweredNest(plan=plan, policy=policy, grid=grid, tiles=tiles,
                        in_streams=ins, out_stream=outs[0],
                        contraction_axes=tuple(sorted(pos[z] for z in zaxes)),
                        schedule=sched, axis_order=axis_order,
-                       padded_bounds=tuple(padded))
+                       padded_bounds=tuple(padded), gathers=tuple(gathers))
 
 
 # --------------------------------------------------------------------------
@@ -1100,8 +1175,35 @@ def _build_kernel(lowered: LoweredPlan, body: Callable, mode: str,
                             uniforms=uniforms)
 
 
+def _table_view_shape(shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """The ≥2-D view a gather table occupies in VMEM (rank-1 gains a row)."""
+    return shape if len(shape) >= 2 else (1,) + tuple(shape)
+
+
+def _gather_block(pl, gather: IndirectGather, idx_block, table_ref):
+    """Materialise one indirect ref's block from its VMEM-resident table.
+
+    ``idx_block`` is the index stream's dense block for this grid step; each
+    affine additive level of the gather prepends one block dimension (the
+    level's tile extent), so the body sees a
+    ``(tile_l0, ..., *idx_block.shape)`` gather result.
+    """
+    addr = idx_block.astype(jnp.int32) * gather.scale + gather.offset
+    for p, tile, coeff in zip(reversed(gather.grid_pos),
+                              reversed(gather.tiles),
+                              reversed(gather.coeffs)):
+        intra = jax.lax.broadcasted_iota(jnp.int32, (tile,) + addr.shape, 0)
+        addr = addr[None] + coeff * (pl.program_id(p) * tile + intra)
+    table = table_ref[...].reshape(-1)
+    # Padded grid steps can address past the table; clip keeps them in
+    # range — their products land only in trimmed output padding.
+    return jnp.take(table, addr.reshape(-1), mode="clip").reshape(addr.shape)
+
+
 def _build_nest_kernel(lowered: LoweredNest, body: Callable,
-                       out_dtype, interpret: Optional[bool]) -> Callable:
+                       out_dtype, interpret: Optional[bool],
+                       tables: Sequence[jax.ShapeDtypeStruct] = ()
+                       ) -> Callable:
     """Wrap a block-level ``body`` into a level-mapped ssr_pallas kernel.
 
     ``body(*read_blocks)`` returns the output block's partial for one grid
@@ -1110,13 +1212,26 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
     drained to the write stream on the last — the paper's accumulator
     register at block granularity (GEMM's ``C += A·B`` k-walk).  Without
     contraction axes every step owns its output block and writes directly.
+
+    With ``lowered.gathers``, ``tables`` carries one ShapeDtypeStruct per
+    gather (the whole indirectly addressed operand, normalised to ≥2-D);
+    each rides as a revisited invariant block and the body receives the
+    gathered blocks appended after the streamed ones.
     """
     from jax.experimental import pallas as pl
     from jax.experimental.pallas import tpu as pltpu
 
     n_in = len(lowered.in_streams)
+    gathers = lowered.gathers
+    assert len(tables) == len(gathers), "one table operand per gather"
     zaxes = lowered.contraction_axes
     acc_shape = lowered.out_stream.stream.block_shape
+
+    def _blocks(in_refs, tab_refs):
+        blocks = [r[...] for r in in_refs]
+        blocks += [_gather_block(pl, g, blocks[g.index_pos], t)
+                   for g, t in zip(gathers, tab_refs)]
+        return blocks
 
     # The accumulator defaults to the f32 compute width (the MXU/VPU
     # accumulation dtype — the repo-wide policy), regardless of the storage
@@ -1128,8 +1243,10 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
 
     if zaxes:
         def kernel(*refs):
-            in_refs, o_ref = refs[:n_in], refs[n_in]
-            acc_ref = refs[n_in + 1]
+            in_refs = refs[:n_in]
+            tab_refs = refs[n_in:n_in + len(gathers)]
+            o_ref = refs[n_in + len(gathers)]
+            acc_ref = refs[n_in + len(gathers) + 1]
             first = pl.program_id(zaxes[0]) == 0
             last = pl.program_id(zaxes[0]) == pl.num_programs(zaxes[0]) - 1
             for z in zaxes[1:]:
@@ -1141,7 +1258,7 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
             def _init():
                 acc_ref[...] = jnp.zeros_like(acc_ref)
 
-            part = jnp.asarray(body(*[r[...] for r in in_refs]), acc_dtype)
+            part = jnp.asarray(body(*_blocks(in_refs, tab_refs)), acc_dtype)
             acc_ref[...] += part.reshape(acc_shape)
 
             @pl.when(last)
@@ -1151,23 +1268,39 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
         scratch = [pltpu.VMEM(acc_shape, acc_dtype)]
     else:
         def kernel(*refs):
-            in_refs, o_ref = refs[:n_in], refs[n_in]
+            in_refs = refs[:n_in]
+            tab_refs = refs[n_in:n_in + len(gathers)]
+            o_ref = refs[n_in + len(gathers)]
             o_ref[...] = jnp.asarray(
-                body(*[r[...] for r in in_refs]), out_dtype
+                body(*_blocks(in_refs, tab_refs)), out_dtype
             ).reshape(acc_shape)
 
         scratch = []
 
+    # Gather tables ride whole as revisited invariant blocks: every grid
+    # step sees the same (full) table, exactly like the flat path's
+    # uniforms — the "dense index block in VMEM" of the indirection papers.
+    table_streams = [
+        BlockStream(tuple(t.shape), lambda *_g, _nd=len(t.shape): (0,) * _nd,
+                    direction=Direction.READ, name=g.name)
+        for g, t in zip(gathers, tables)]
+
+    depths = _depths_for(lowered.schedule, len(lowered.in_streams))
+    if gathers:
+        if isinstance(depths, int):
+            depths = (depths,) * len(lowered.in_streams)
+        depths = tuple(depths) + (2,) * len(gathers)
+
     return ssr_pallas(
         kernel, grid=lowered.grid,
-        in_streams=[s.stream for s in lowered.in_streams],
+        in_streams=[s.stream for s in lowered.in_streams] + table_streams,
         out_streams=[lowered.out_stream.stream],
         out_shapes=[jax.ShapeDtypeStruct(lowered.out_stream.layout_shape,
                                          out_dtype)],
         scratch_shapes=scratch,
         interpret=interpret,
         dimension_semantics=lowered.semantics,
-        buffer_depth=_depths_for(lowered.schedule, len(lowered.in_streams)),
+        buffer_depth=depths,
     )
 
 
@@ -1467,20 +1600,29 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
             "uniform operands are not supported on the level-mapped "
             "(explicit WRITE ref) path; use a map/reduce nest")
     lowered = _lowered_for(plan, sched, has_output)
+    gathers = lowered.gathers if has_output else ()
     missing = [s.name for s in lowered.in_streams if s.name not in operands]
+    missing += [g.name for g in gathers if g.name not in operands]
     if missing:
         raise ValueError(f"missing operands for streams {missing}")
     arrays = [operands[s.name] for s in lowered.in_streams]
+    # Gather tables travel after the streamed operands, normalised to the
+    # ≥2-D VMEM view their invariant block addresses.
+    tables = [jnp.reshape(operands[g.name],
+                          _table_view_shape(tuple(operands[g.name].shape)))
+              for g in gathers]
 
     DISPATCH_STATS["calls"] += 1
     key = (nest, sched, mode, _body_key(body), str(jnp.dtype(out_dtype)),
-           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
+           tuple((tuple(a.shape), str(a.dtype)) for a in arrays + tables),
            _uniform_sig(uni), num_lanes, interpret)
     fn = _kernel_cache_get(key)
     if fn is None:
         if has_output:
-            kernel = _build_nest_kernel(lowered, body, jnp.dtype(out_dtype),
-                                        interpret)
+            kernel = _build_nest_kernel(
+                lowered, body, jnp.dtype(out_dtype), interpret,
+                tables=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                             for a in tables))
         else:
             kernel = _build_kernel(
                 lowered, body, mode, jnp.dtype(out_dtype), interpret,
@@ -1500,7 +1642,7 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
         fn = jax.jit(pipeline)
         DISPATCH_STATS["builds"] += 1
         _kernel_cache_put(key, fn)
-    return fn(*arrays, *[a for _, a in uni])
+    return fn(*arrays, *tables, *[a for _, a in uni])
 
 
 def _trim_output(out: jax.Array, bounds: Tuple[int, ...], mode: str,

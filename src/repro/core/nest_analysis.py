@@ -41,6 +41,20 @@ class MemRef:
     ``coeffs[k]`` multiplies loop index ``k`` (outermost first); accesses with
     a non-affine address are represented by ``coeffs=None`` and are never
     SSR-ified (the MIR pattern-match fails — §3.2 step 2).
+
+    **Indirect refs** (Indirection-SSR, arXiv 2011.08070 / Sparse SSR,
+    arXiv 2305.05559): when ``index_of`` names another READ ref in the same
+    nest, this ref's address is *data-dependent* — the value produced by the
+    index stream at each step drives the address::
+
+        addr = index_scale * value(index_of) + Σ_k coeffs[k]·i_k + offset
+
+    ``coeffs`` then holds only the affine *additive* part (e.g. the dense
+    column walk of SpMM's B operand); the gather base walks wherever the
+    index stream points.  Indirect refs are not affine (:meth:`is_affine` is
+    False — no static storage order exists), but they *are* streamable: the
+    compiler allocates them a lane and the lowering serves them with an
+    in-kernel gather from a VMEM-resident table.
     """
 
     name: str
@@ -48,9 +62,14 @@ class MemRef:
     coeffs: Optional[Tuple[int, ...]]  # None => not affine
     offset: int = 0
     depth: Optional[int] = None  # innermost loop level the access lives in
+    index_of: Optional[str] = None  # name of the index stream driving addrs
+    index_scale: int = 1  # elements per index step (row pitch of the table)
+
+    def is_indirect(self) -> bool:
+        return self.index_of is not None
 
     def is_affine(self) -> bool:
-        return self.coeffs is not None
+        return self.coeffs is not None and self.index_of is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +88,30 @@ class LoopNest:
             )
         if len(self.compute_per_level) != len(self.bounds):
             raise ValueError("compute_per_level must match nest depth")
+        by_name = {r.name: r for r in self.refs}
+        for r in self.refs:
+            if not r.is_indirect():
+                continue
+            idx = by_name.get(r.index_of)
+            if idx is None:
+                raise ValueError(
+                    f"indirect ref {r.name!r} names index stream "
+                    f"{r.index_of!r}, which is not a ref of this nest")
+            if not idx.is_affine() or idx.kind != Direction.READ:
+                raise ValueError(
+                    f"indirect ref {r.name!r}: its index stream "
+                    f"{r.index_of!r} must be an affine READ ref")
+            if r.coeffs is None:
+                raise ValueError(
+                    f"indirect ref {r.name!r} needs coeffs for the affine "
+                    "additive part of its address (all-zero for pure gather)")
+            if r.kind != Direction.READ:
+                raise ValueError(
+                    f"indirect ref {r.name!r}: indirect WRITE (scatter) is "
+                    "not supported — only gather streams are lowered")
+            if r.index_scale < 1:
+                raise ValueError(
+                    f"indirect ref {r.name!r}: index_scale must be >= 1")
 
     @property
     def depth(self) -> int:
@@ -90,6 +133,22 @@ def affine_refs(nest: LoopNest) -> Tuple[MemRef, ...]:
     return tuple(r for r in nest.refs if r.is_affine())
 
 
+def indirect_refs(nest: LoopNest) -> Tuple[MemRef, ...]:
+    """Refs whose addresses are driven by an index stream (gathers)."""
+    return tuple(r for r in nest.refs if r.is_indirect())
+
+
+def streamable_refs(nest: LoopNest) -> Tuple[MemRef, ...]:
+    """Every ref a data-mover lane can serve: affine walks plus gathers."""
+    return tuple(r for r in nest.refs if r.is_affine() or r.is_indirect())
+
+
+def index_stream_of(ref: MemRef, nest: LoopNest) -> MemRef:
+    """The affine READ ref whose values drive ``ref``'s addresses."""
+    assert ref.is_indirect(), f"ref {ref.name!r} is not indirect"
+    return next(r for r in nest.refs if r.name == ref.index_of)
+
+
 def output_ref(nest: LoopNest) -> Optional[MemRef]:
     """The nest's single output WRITE ref, or ``None`` for read-only nests.
 
@@ -108,9 +167,20 @@ def output_ref(nest: LoopNest) -> Optional[MemRef]:
 
 
 def ref_depth(ref: MemRef, nest: LoopNest) -> int:
-    """Deepest loop level whose index the address actually varies with."""
+    """Deepest loop level whose index the address actually varies with.
+
+    An indirect ref's address changes whenever its *index stream* advances
+    or its own affine additive part varies, so its depth is the max of the
+    two.
+    """
     if ref.depth is not None:
         return ref.depth
+    if ref.is_indirect():
+        depth = ref_depth(index_stream_of(ref, nest), nest)
+        for k, c in enumerate(ref.coeffs):
+            if c != 0:
+                depth = max(depth, k)
+        return depth
     if not ref.is_affine():
         return -1
     depth = 0
@@ -152,7 +222,7 @@ def auto_lanes(nest: LoopNest, num_lanes: Optional[int] = None) -> int:
     """
     if num_lanes is not None:
         return num_lanes
-    return max(1, len(affine_refs(nest)))
+    return max(1, len(streamable_refs(nest)))
 
 
 # -- cost-model helpers ------------------------------------------------------
@@ -163,11 +233,15 @@ def instr_counts(nest: LoopNest,
     """Per-level body instruction counts with residual accesses folded in.
 
     Residual (non-streamed) loads/stores stay in the body at their depth —
-    the Eq. (1)/(2) accounting both ``ssrify`` and ``chain`` apply.
+    the Eq. (1)/(2) accounting both ``ssrify`` and ``chain`` apply.  A
+    residual *indirect* access costs two body instructions, not one: the
+    address computation from the index value (pointer arithmetic) plus the
+    data load itself — the index-handling overhead the indirection
+    extensions (arXiv 2011.08070 / 2305.05559) exist to eliminate.
     """
     counts = list(nest.compute_per_level)
     for ref in residual:
-        counts[max(0, ref_depth(ref, nest))] += 1
+        counts[max(0, ref_depth(ref, nest))] += 2 if ref.is_indirect() else 1
     return counts
 
 

@@ -55,6 +55,21 @@ def matmul(a, b, *, ssr: Optional[bool] = None, **kw):
     return registry.dispatch("gemm", a, b, ssr=ssr, **kw)
 
 
+def spmv(data, indices, indptr, x, *, ssr: Optional[bool] = None):
+    """CSR sparse-matrix × dense-vector via the indirection-stream path."""
+    return registry.dispatch("spmv", data, indices, indptr, x, ssr=ssr)
+
+
+def spmm(data, indices, indptr, x, *, ssr: Optional[bool] = None):
+    """CSR sparse-matrix × dense-matrix via the indirection-stream path."""
+    return registry.dispatch("spmm", data, indices, indptr, x, ssr=ssr)
+
+
+def sparse_gemv(data, indices, indptr, x, *, ssr: Optional[bool] = None):
+    """The sparse-row generalisation of :func:`gemv` (alias of spmv)."""
+    return registry.dispatch("spmv", data, indices, indptr, x, ssr=ssr)
+
+
 def fft(re, im, *, ssr: Optional[bool] = None):
     return registry.dispatch("fft", re, im, ssr=ssr)
 

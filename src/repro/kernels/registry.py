@@ -36,7 +36,7 @@ from repro.core.region import ssr_enabled
 # is the single place the suite is enumerated; consumers iterate the
 # registry, never this tuple.
 _KERNEL_MODULES = ("reduction", "scan", "relu", "stencil", "gemv", "gemm",
-                   "fft", "bitonic", "attention", "chained", "dag")
+                   "fft", "bitonic", "attention", "chained", "dag", "sparse")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -2,7 +2,10 @@
 
 The property tests in this suite use a small slice of the hypothesis API:
 ``given``/``settings`` plus the ``integers``/``floats``/``lists``/``tuples``/
-``composite``/``data`` strategies.  This shim implements exactly that slice
+``sampled_from``/``booleans``/``composite``/``data`` strategies, including
+``lists(..., unique=True)``/``unique_by`` (uniqueness via bounded redraw —
+the sparse CSR strategies draw unique sorted column indices per row).  This
+shim implements exactly that slice
 with a seeded PRNG so the tests still sweep many pseudo-random cases — just
 without shrinking, replay databases, or health checks.  ``tests/conftest.py``
 installs it as ``sys.modules["hypothesis"]`` only when the real package is
@@ -39,10 +42,31 @@ def _floats(min_value, max_value):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
-def _lists(elements, min_size=0, max_size=10):
+def _lists(elements, min_size=0, max_size=10, unique=False, unique_by=None):
+    key = unique_by if unique_by is not None else (
+        (lambda v: v) if unique else None)
+
     def sample(rng):
         k = rng.randint(min_size, max_size)
-        return [elements.sample(rng) for _ in range(k)]
+        if key is None:
+            return [elements.sample(rng) for _ in range(k)]
+        # uniqueness via bounded redraw — mirrors hypothesis semantics for
+        # the small discrete element spaces this suite draws (e.g. CSR
+        # column indices); an exhausted budget rejects the sample like a
+        # failed assume() rather than looping forever
+        out, seen = [], set()
+        budget = 200 * max(1, k)
+        while len(out) < k and budget:
+            budget -= 1
+            v = elements.sample(rng)
+            kv = key(v)
+            if kv in seen:
+                continue
+            seen.add(kv)
+            out.append(v)
+        if len(out) < min_size:
+            raise _Assumption()
+        return out
 
     return _Strategy(sample)
 

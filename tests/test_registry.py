@@ -15,7 +15,24 @@ EXPECTED = {"reduction", "scan", "relu", "stencil1d", "stencil2d", "gemv",
             "gemm", "fft", "bitonic", "attention",
             # fused (stream-chained) variants: ssr = fused single kernel,
             # baseline = unfused two-kernel composition
-            "gemv_relu", "stencil1d_relu", "sum_sq_diff", "axpy_dot"}
+            "gemv_relu", "stencil1d_relu", "sum_sq_diff", "axpy_dot",
+            # CSR indirection streams: ssr = compiled gather path,
+            # baseline = monolithic explicit-take kernel
+            "spmv", "spmm"}
+
+#: The waiver ratchet's pinned holdout set: the kernels allowed to stay on
+#: hand-scheduled ``Launch`` paths, each with a ``lowering_waiver`` stating
+#: why the block-granular AGU model cannot express them.  This set may only
+#: ever SHRINK — migrating a kernel to ``NestKernel`` removes its name
+#: here; adding a name (or re-regressing a migrated kernel to a Launch) is
+#: a hard failure of :class:`TestWaiverRatchet`.
+WAIVER_HOLDOUTS = frozenset({
+    "gemv", "scan", "stencil1d", "stencil2d", "fft", "bitonic",
+    "attention", "gemv_relu", "stencil1d_relu"})
+
+#: Kernels that ride the compiled ``NestKernel`` path and must never
+#: regress to a hand-scheduled ``Launch``.
+NEST_MIGRATED = frozenset({"gemm", "reduction", "relu", "spmv", "spmm"})
 
 
 def _assert_close(got, want, tol):
@@ -63,28 +80,68 @@ class TestEquivalence:
                       entry.ref(*args, **kwargs), entry.tol)
 
 
+def _collect_kernel_instances():
+    """(waiver holdouts, NestKernel-backed names) across every kernel
+    module — the raw material of the one-path-to-silicon contract."""
+    import importlib
+    import repro.kernels.frontend as fe
+    from repro.kernels.registry import _KERNEL_MODULES
+
+    holdouts, nest_backed = {}, set()
+    for modname in _KERNEL_MODULES:
+        mod = importlib.import_module(f"repro.kernels.{modname}")
+        for attr in vars(mod).values():
+            if isinstance(attr, (fe.StreamKernel, fe.ChainedKernel)):
+                holdouts[attr.name] = attr.lowering_waiver
+            elif isinstance(attr, fe.NestKernel):
+                nest_backed.add(attr.name)
+    return holdouts, nest_backed
+
+
 class TestOnePathToSilicon:
     """The unified-frontend contract: every kernel either rides the
     compiler (NestKernel) or declares why it cannot (lowering_waiver)."""
 
     def test_no_launch_without_waiver(self):
-        import importlib
-        import repro.kernels.frontend as fe
-        from repro.kernels.registry import _KERNEL_MODULES
-
-        holdouts = {}
-        for modname in _KERNEL_MODULES:
-            mod = importlib.import_module(f"repro.kernels.{modname}")
-            for attr in vars(mod).values():
-                if isinstance(attr, (fe.StreamKernel, fe.ChainedKernel)):
-                    assert attr.lowering_waiver.strip(), attr.name
-                    holdouts[attr.name] = attr.lowering_waiver
+        holdouts, _ = _collect_kernel_instances()
+        for name, waiver in holdouts.items():
+            assert waiver.strip(), name
         # the migrated kernels must NOT appear as hand-scheduled holdouts
         assert {"gemm", "reduction", "relu"}.isdisjoint(holdouts)
         # the declared holdouts are exactly the known hard patterns
-        assert set(holdouts) == {"gemv", "scan", "stencil1d", "stencil2d",
-                                 "fft", "bitonic", "attention",
-                                 "gemv_relu", "stencil1d_relu"}
+        assert set(holdouts) == WAIVER_HOLDOUTS
+
+
+class TestWaiverRatchet:
+    """The waiver count only ratchets DOWN.
+
+    A new hand-scheduled kernel (or a migrated kernel regressing to a
+    ``Launch``) would silently erode the paper's one-compiler story; this
+    test makes that a loud, named failure.  To *shrink* the set after a
+    migration, remove the name from ``WAIVER_HOLDOUTS`` and add it to
+    ``NEST_MIGRATED`` — never the other direction.
+    """
+
+    def test_waiver_set_only_shrinks(self):
+        holdouts, _ = _collect_kernel_instances()
+        new = set(holdouts) - WAIVER_HOLDOUTS
+        assert not new, (
+            f"new lowering_waiver(s) {sorted(new)}: hand-scheduled Launch "
+            "kernels may not be added — express the pattern as a LoopNest "
+            "(NestKernel) instead")
+
+    def test_migrated_kernels_stay_migrated(self):
+        holdouts, nest_backed = _collect_kernel_instances()
+        regressed = NEST_MIGRATED & set(holdouts)
+        assert not regressed, (
+            f"{sorted(regressed)} regressed from NestKernel to a "
+            "hand-scheduled Launch")
+        missing = NEST_MIGRATED - nest_backed
+        assert not missing, (
+            f"{sorted(missing)} no longer have a NestKernel instance")
+
+    def test_holdouts_and_migrated_are_disjoint(self):
+        assert not WAIVER_HOLDOUTS & NEST_MIGRATED
 
     def test_waiver_required_at_construction(self):
         from repro.kernels.frontend import Launch, StreamKernel

@@ -4,12 +4,13 @@ Four checks, all hard failures:
 
 1. every *local* markdown link (``[text](path)``) in the repo's ``*.md``
    files resolves to an existing file (http/mailto/anchor links skipped);
-2. the schedule autotuner, the pipelined emitter, and the chain-DAG
-   fusion layer stay documented: DESIGN.md keeps its ``## 9``
-   (autotuner), ``## 10`` (pipelined emission / ``buffer_depth``), and
-   ``## 11`` (chain DAGs / ``cut_edges``) sections + their §2
-   correspondence rows, the README its autotune quickstart and fused-DAG
-   coverage;
+2. the schedule autotuner, the pipelined emitter, the chain-DAG fusion
+   layer, and the indirection-stream sparse layer stay documented:
+   DESIGN.md keeps its ``## 9`` (autotuner), ``## 10`` (pipelined
+   emission / ``buffer_depth``), ``## 11`` (chain DAGs / ``cut_edges``),
+   and ``## 12`` (indirection streams / CSR sparse, citing arXiv
+   2011.08070 + 2305.05559) sections + their §2 correspondence rows, the
+   README its autotune quickstart, fused-DAG, and sparse coverage;
 3. the committed ``EXPERIMENTS.md`` matches a fresh render from
    ``benchmarks/paper_tables.py`` — editing it by hand, or changing the
    models without regenerating it, fails the build;
@@ -164,6 +165,33 @@ def check_dag_docs() -> List[str]:
     return problems
 
 
+def check_sparse_docs() -> List[str]:
+    """The indirection-stream sparse layer must stay documented: DESIGN.md
+    §12 + the §2 correspondence rows citing the Indirection-SSR and Sparse
+    SSR follow-ups, and the README's sparse kernel coverage (pure-text
+    check, no jax import)."""
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 12\..*[Ii]ndirection", design, re.MULTILINE):
+        problems.append("DESIGN.md: missing '## 12.' indirection-streams "
+                        "section")
+    for needle in ("2011.08070", "2305.05559", "index_of",
+                   "kernels/sparse.py", "eliminated_idx_instrs"):
+        if needle not in design:
+            problems.append(f"DESIGN.md: §2 correspondence / §12 does not "
+                            f"mention {needle}")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    if "spmv_nest" not in readme or "indirection stream" not in readme:
+        problems.append("README.md: kernel table has no indirection-stream "
+                        "(spmv_nest/spmm_nest) rows")
+    if "sparse.py" not in readme:
+        problems.append("README.md: architecture map does not mention "
+                        "kernels/sparse.py")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -217,6 +245,16 @@ def main(argv=None) -> int:
             print(f"  {p}")
     else:
         print("chain-DAG docs present (DESIGN.md §11 + cut_edges rows)")
+
+    sparse_problems = check_sparse_docs()
+    if sparse_problems:
+        ok = False
+        print("\nindirection-stream docs gate:")
+        for p in sparse_problems:
+            print(f"  {p}")
+    else:
+        print("indirection-stream docs present (DESIGN.md §12 + "
+              "sparse rows)")
 
     if not args.skip_experiments:
         diff = check_experiments()
