@@ -61,7 +61,7 @@ from benchmarks.kernel_bench import (BENCH_SCHEMA, _row, _time,
                                      isolate_schedule_cache,
                                      write_bench_json)  # noqa: E402
 from repro.core import compiler  # noqa: E402
-from repro.core.compiler import (Direction, LoopNest, MemRef, cluster_cost,
+from repro.core.compiler import (cluster_cost,
                                  iso_performance_cores)  # noqa: E402
 from repro.kernels import registry  # noqa: E402
 
@@ -77,15 +77,6 @@ def _normal(n: int) -> jnp.ndarray:
     return jnp.asarray(RNG.standard_normal(n) / np.sqrt(n), jnp.float32)
 
 
-def _gemv_nest(m: int, n: int) -> LoopNest:
-    """Cost-model nest for GEMV: A row-panel walk + x repeat stream."""
-    return LoopNest(
-        bounds=(m, n),
-        refs=(MemRef("A", Direction.READ, (n, 1)),
-              MemRef("x", Direction.READ, (0, 1))),
-        compute_per_level=(1, 1))
-
-
 def _model_nests(quick: bool):
     """(name, nest-or-chain) for the cost model — no device arrays."""
     from repro.kernels.chained import _chain_nests
@@ -96,7 +87,9 @@ def _model_nests(quick: bool):
     return [
         ("reduction", compiler.dot_product_nest(n)),
         ("relu", compiler.elementwise_nest(n)),
-        ("gemv", _gemv_nest(m, 64)),
+        # the real compiled nest (§13 migration): A row-panel walk +
+        # x repeat stream + the revisited output accumulator ref
+        ("gemv", compiler.gemv_nest(m, 64)),
         ("gemm", compiler.gemm_nest(m, 64, 64)),
         ("stencil1d", compiler.stencil_nest(n, TAPS)),
         ("sum_sq_diff", _chain_nests(n, consumer_reads_w=False)),

@@ -21,16 +21,19 @@ machine-readable perf trajectory tracked across PRs::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
 
-Schema (version 4): ``{"schema": 4, "generated_unix": float, "quick": bool,
+Schema (version 5): ``{"schema": 5, "generated_unix": float, "quick": bool,
 "results": [{"name", "group", "variant", "value", "units", "rows",
 "lanes", "grid", "tuned", "buffer_depth", ...}, ...]}`` — every row
 carries schedule provenance (the block geometry that produced it, the data
 mover's FIFO depth, and whether it came from the autotuner).  The
-``autotune`` group races tuned-vs-default schedules and is gated: tuned may
+``autotune`` group races tuned-vs-default schedules across every
+NestKernel family head — the §13 halo (stencil1d/stencil2d) and
+online-rescale (attention) migrations included — and is gated: tuned may
 never be slower than default beyond noise, and — in full (non ``--quick``)
 runs, where iteration counts rise above CI-box noise — at least one kernel
 must win with a non-default schedule.  The ``pipeline`` group is the
-bandwidth-bound buffer-depth sweep (large-stride gemv + stencil1d): the
+bandwidth-bound buffer-depth sweep (large-stride gemv + stencil1d +
+causal attention): the
 autotuned pipelined schedule races the synchronous depth-2 default under a
 ≤ 1e-5 agreement gate, and a full run must find a depth > 2 winner.  The
 ``dag`` group (v4) runs the whole-program fusion search of
@@ -214,7 +217,8 @@ def _nest_models():
     from repro.kernels.stencil import TAPS
 
     return [("gemm", compiler.gemm_nest(32, 32, 32)),
-            ("stencil1d", compiler.stencil_nest(1024, TAPS))]
+            ("stencil1d", compiler.stencil_nest(1024, TAPS)),
+            ("gemv", compiler.gemv_nest(64, 64))]
 
 
 def bench_nest_gate() -> List[Dict]:
@@ -390,8 +394,11 @@ def validate_sparse_rows(results: Sequence[Dict]) -> None:
 # --------------------------------------------------------------------------
 
 #: The kernels the autotune gate covers (the CI ``autotune-smoke`` job):
-#: the ``ssr_call``-routed NestKernels plus the schedule-aware stencil.
-TUNE_GATED = ("reduction", "relu", "gemm", "stencil1d")
+#: every ``ssr_call``-routed NestKernel family head, incl. the §13
+#: halo-read (stencil1d/stencil2d) and online-rescaled-accumulator
+#: (attention) lowerings.
+TUNE_GATED = ("reduction", "relu", "gemm", "stencil1d", "stencil2d",
+              "gemv", "attention")
 
 #: Wall-clock tolerance of the tuned-never-slower gate: the tuner measures
 #: then the gate *re-races* winner vs default interleaved, so a winner that
@@ -404,9 +411,10 @@ def _autotune_cases(quick: bool):
 
     ``operands``/``mode`` replicate exactly what ``NestKernel`` passes to
     ``autotune.lookup``, so the committed winners are the ones transparent
-    dispatch later finds.  The stencil keeps its hand geometry (waivered):
-    its knob is the block width (``schedule.lanes``), so it brings its own
-    candidate list and grid formula.
+    dispatch later finds.  Every gated kernel — the §13 halo/rescale
+    migrations included — searches the standard lowering-derived candidate
+    set; illegal geometries (e.g. a tile too narrow for a halo window) are
+    auto-filtered by the legality walk.
     """
     from repro.core import autotune, compiler
     from repro.kernels.stencil import TAPS
@@ -440,12 +448,21 @@ def _autotune_cases(quick: bool):
         {"A": a, "B": b}, "reduce")
 
     (xs, ws), _ = registry.get("stencil1d").example(RNG)
-    n_st = xs.shape[0] - (TAPS - 1)
-    widths = (128, 1024) if quick else (128, 256, 512, 1024)
-    st_cands = [Schedule(lanes=w) for w in widths]
-    add("stencil1d", compiler.stencil_nest(n_st, TAPS),
-        {"x": xs, "w": ws}, "map", candidates=st_cands,
-        grid_of=lambda s, _n=n_st: (-(-_n // s.lanes),))
+    add("stencil1d", compiler.stencil_nest(xs.shape[0] - (TAPS - 1), TAPS),
+        {"x": xs, "w": ws}, "reduce")
+
+    (x2, wx2, wy2), _ = registry.get("stencil2d").example(RNG)
+    h2, wd2 = x2.shape[0] - (TAPS - 1), x2.shape[1] - (TAPS - 1)
+    add("stencil2d", compiler.stencil2d_nest(h2, wd2, TAPS),
+        {"x": x2, "wx": wx2, "wy": wy2}, "reduce")
+
+    (ag, xg), _ = registry.get("gemv").example(RNG)
+    add("gemv", compiler.gemv_nest(*ag.shape), {"A": ag, "x": xg}, "reduce")
+
+    (q, k, v), _ = registry.get("attention").example(RNG)
+    add("attention", compiler.attention_nest(q.shape[0], k.shape[0],
+                                             q.shape[1]),
+        {"Q": q, "K": k, "V": v}, "reduce")
     return cases
 
 
@@ -596,36 +613,41 @@ def validate_autotune_rows(results: Sequence[Dict],
 #: tolerances because only operand *delivery* changes, never arithmetic.
 PIPE_AGREEMENT_TOL = 1e-5
 
-#: The kernels the pipeline gate covers: the two bandwidth-bound entries
+#: The kernels the pipeline gate covers: the bandwidth-bound entries
 #: (GEMV streams the whole matrix once per call; the stencil is ~1 fmadd
-#: per byte), where hiding the fetch behind compute is the whole game.
-PIPE_GATED = ("gemv", "stencil1d")
+#: per byte; attention's kv walk streams K and V once per query tile),
+#: where hiding the fetch behind compute is the whole game.
+PIPE_GATED = ("gemv", "stencil1d", "attention")
 
 
 def _pipeline_cases(quick: bool):
-    """(name, nest, operands, candidates, call, grid, tol) per kernel.
+    """(name, nest, operands, mode, candidates, call, grid, tol) per kernel.
 
     Large-stride shapes — bigger than the §4.2 example sizes — so the
     per-step fetch the rotation hides is resolvable above timing noise.
     Candidates cross the depth choices with each kernel's native geometry
     knob (the stencil's block width); depth 2 is always among them, so the
-    sweep races the synchronous default by construction.
+    sweep races the synchronous default by construction.  ``mode`` is what
+    ``NestKernel`` passes to the schedule-cache lookup, so the committed
+    winners are the ones transparent dispatch later finds.
     """
     from repro.core import compiler
+    from repro.kernels.attention import ssr_flash_attention
     from repro.kernels.gemv import ssr_gemv
     from repro.kernels.stencil import TAPS, ssr_stencil1d
 
     depths = (2, 3) if quick else (2, 3, 4)
+    tol = {"rtol": PIPE_AGREEMENT_TOL, "atol": PIPE_AGREEMENT_TOL}
     cases = []
 
     m, n = (64, 1024) if quick else (256, 4096)
     a = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
     xv = jnp.asarray(RNG.standard_normal(n), jnp.float32)
     cases.append((
-        "gemv", compiler.gemv_nest(m, n), {"A": a, "x": xv},
+        "gemv", compiler.gemv_nest(m, n), {"A": a, "x": xv}, "reduce",
         [Schedule(buffer_depth=d) for d in depths],
         lambda s, _a=a, _x=xv: ssr_gemv(_a, _x, schedule=s),
-        (m // 8,), {"rtol": PIPE_AGREEMENT_TOL, "atol": PIPE_AGREEMENT_TOL}))
+        (m // 8,), tol))
 
     n_st = (1 << 14) if quick else (1 << 16)
     xs = jnp.asarray(RNG.standard_normal(n_st + TAPS - 1), jnp.float32)
@@ -633,11 +655,23 @@ def _pipeline_cases(quick: bool):
     widths = (128, 512) if quick else (128, 512, 1024)
     cases.append((
         "stencil1d", compiler.stencil_nest(n_st, TAPS),
-        {"x": xs, "w": ws},
+        {"x": xs, "w": ws}, "reduce",
         [Schedule(lanes=w, buffer_depth=d)
          for w in widths for d in depths],
         lambda s, _x=xs, _w=ws: ssr_stencil1d(_x, _w, schedule=s),
-        None, {"rtol": PIPE_AGREEMENT_TOL, "atol": PIPE_AGREEMENT_TOL}))
+        None, tol))
+
+    sq = 256 if quick else 1024
+    q = jnp.asarray(RNG.standard_normal((sq, 64)), jnp.float32)
+    kk = jnp.asarray(RNG.standard_normal((sq, 64)), jnp.float32)
+    vv = jnp.asarray(RNG.standard_normal((sq, 64)), jnp.float32)
+    cases.append((
+        "attention", compiler.attention_nest(sq, sq, 64),
+        {"Q": q, "K": kk, "V": vv}, "reduce",
+        [Schedule(buffer_depth=d) for d in depths],
+        lambda s, _q=q, _k=kk, _v=vv: ssr_flash_attention(
+            _q, _k, _v, causal=True, schedule=s),
+        None, tol))
     return cases
 
 
@@ -663,10 +697,10 @@ def bench_pipeline(quick: bool = False) -> List[Dict]:
     iters = 3 if quick else 7
     deep_wins = 0
     print(f"\n== pipelined emission sweep (best-of-{iters} μs/call) ==")
-    for name, nest, operands, cands, call, grid, tol \
+    for name, nest, operands, mode, cands, call, grid, tol \
             in _pipeline_cases(quick):
         res = autotune.autotune(
-            nest, None, operands, mode="map", out_dtype="float32",
+            nest, None, operands, mode=mode, out_dtype="float32",
             call=call, candidates=cands, top_k=len(cands),
             warmup=1, iters=iters, force=True)
 
@@ -1102,7 +1136,7 @@ def validate_bench_json(path: str) -> None:
     # agreement, and model-profitable
     nest_rows = {(r["name"].split("/")[1], r["variant"]): r
                  for r in results if r["group"] == "nest"}
-    for kern in ("gemm", "stencil1d"):
+    for kern in ("gemm", "stencil1d", "gemv"):
         agree = nest_rows.get((kern, "agreement"))
         model = nest_rows.get((kern, "model"))
         if agree is None or model is None:

@@ -65,16 +65,19 @@ from .compiler import (  # noqa: F401
     LoopNest,
     MemRef,
     StreamPlan,
+    attention_nest,
     chain,
     chain_dag,
     cluster_cost,
     dot_product_nest,
     elementwise_nest,
     gemm_nest,
+    gemv_nest,
     iso_performance_cores,
     spmm_nest,
     spmv_nest,
     ssrify,
+    stencil2d_nest,
     stencil_nest,
 )
 from .lowering import (  # noqa: F401

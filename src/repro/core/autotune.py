@@ -101,15 +101,20 @@ def nest_signature(nest: LoopNest) -> str:
     """Canonical text form of a nest — the schedule cache's identity.
 
     Any change to bounds, refs (name/kind/coeffs/offset, plus the index
-    stream + scale of an indirect ref) or per-level compute yields a
-    different signature, so editing a kernel's nest invalidates its cached
-    schedules by construction.  Affine refs keep their pre-indirection
-    text form, so existing cached schedules stay addressable.
+    stream + scale of an indirect ref, a halo window, or a non-default
+    accumulator kind) or per-level compute yields a different signature,
+    so editing a kernel's nest invalidates its cached schedules by
+    construction.  Refs without the newer features keep their older text
+    form, so existing cached schedules stay addressable.
     """
     def _ref_sig(r) -> str:
         sig = f"{r.name}:{r.kind.name}:{r.coeffs}:{r.offset}"
         if r.is_indirect():
             sig += f":ix={r.index_of}*{r.index_scale}"
+        if r.window is not None:
+            sig += f":win={r.window}"
+        if r.acc_kind != "sum":
+            sig += f":acc={r.acc_kind}"
         return sig
 
     refs = ";".join(_ref_sig(r) for r in nest.refs)

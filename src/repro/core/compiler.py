@@ -816,35 +816,79 @@ def elementwise_nest(n: int, names: Sequence[str] = ("X",),
     )
 
 
-def stencil_nest(n: int, taps: int, *, lanes: int = 128) -> LoopNest:
-    """Cost-model nest for the 1-D star stencil (kernels/stencil.py).
+def stencil_nest(n: int, taps: int) -> LoopNest:
+    """Executable nest for the 1-D star stencil: y[i] = Σ_j w[j]·x[i+j].
 
-    Two halo lanes — the same window offset by one block (``lanes``
-    elements, the §2.3 second-AGU trick) — plus a constant coefficient
-    stream, with ``taps`` fmadds per output element.  The *execution*
-    schedule stays hand-written under a ``lowering_waiver`` (overlapping
-    windows have no dense storage order); this nest is its Eq. (1)–(3)
-    accounting, shared by ``kernel_bench`` and ``cluster_bench``.
+    ``x`` is a *windowed* READ — its unit-stride walk revisits
+    ``taps - 1`` neighbours per step (the halo), which ``lower_nest``
+    serves with a +1-shifted twin stream and in-kernel slice taps
+    (DESIGN.md §13; the §2.3 second-AGU trick at block granularity).
+    ``w`` rides as a loop-invariant coefficient block (repeat register);
+    the operand ``x`` carries the widened ``n + taps - 1`` logical extent.
+    Shared by ``kernels/stencil.py``, ``kernel_bench`` and
+    ``cluster_bench`` as both the execution schedule and the Eq. (1)–(3)
+    accounting.
     """
     return LoopNest(
         bounds=(n,),
-        refs=(MemRef("x_lo", Direction.READ, (1,)),
-              MemRef("x_hi", Direction.READ, (1,), offset=lanes),
-              MemRef("w", Direction.READ, (0,))),
+        refs=(MemRef("x", Direction.READ, (1,), window=(taps,)),
+              MemRef("w", Direction.READ, (0,)),
+              MemRef("y", Direction.WRITE, (1,))),
         compute_per_level=(taps,),
     )
 
 
+def stencil2d_nest(h: int, w: int, taps: int) -> LoopNest:
+    """Executable nest for the 2-D cross stencil (kernels/stencil.py).
+
+    ``x`` reads a ``taps × taps`` neighbourhood around each (i, j) — a
+    halo window on *both* levels, so the lowering emits 4 shifted streams
+    (2**k for k halo'd levels) and stitches the widened block in-kernel.
+    The operand is the padded ``(h + taps - 1, w + taps - 1)`` grid; its
+    row pitch is the widened width, hence the ``w + taps - 1`` row
+    coefficient.  ``wx``/``wy`` are the invariant tap coefficients.
+    """
+    return LoopNest(
+        bounds=(h, w),
+        refs=(MemRef("x", Direction.READ, (w + taps - 1, 1),
+                     window=(taps, taps)),
+              MemRef("wx", Direction.READ, (0, 0)),
+              MemRef("wy", Direction.READ, (0, 0)),
+              MemRef("y", Direction.WRITE, (w, 1))),
+        compute_per_level=(0, 2 * taps),
+    )
+
+
+def attention_nest(sq: int, sk: int, d: int) -> LoopNest:
+    """Executable nest for O[q,:] = softmax(Q·Kᵀ·scale)·V (flash form).
+
+    Loop order (q, d, k): K/V walk the contraction level k with row
+    pitch d (storage order (k, d), a permutation — GEMM's B pattern); Q
+    repeats across k (§2.3 repeat register); O revisits each (q, d)
+    block across the whole k walk with ``acc_kind="online_softmax"`` —
+    ``lower_nest`` carries the flash-attention (max, sum, acc) triple in
+    VMEM and rescales on every k step (DESIGN.md §13).  The body owns
+    the score scaling and masking; the kernel owns the recurrence.
+    """
+    return LoopNest(
+        bounds=(sq, d, sk),
+        refs=(MemRef("K", Direction.READ, (0, 1, d)),
+              MemRef("V", Direction.READ, (0, 1, d)),
+              MemRef("Q", Direction.READ, (d, 1, 0)),
+              MemRef("O", Direction.WRITE, (d, 1, 0),
+                     acc_kind="online_softmax")),
+        compute_per_level=(0, 0, 2),
+    )
+
+
 def gemv_nest(m: int, n: int) -> LoopNest:
-    """Cost-model nest for y[m] = A[m,n]·x[n] (kernels/gemv.py).
+    """Executable nest for y[m] = A[m,n]·x[n] (kernels/gemv.py).
 
     A walks both loops dense (row-major), x repeats across rows (the §2.3
-    repeat register — coefficient 0 on the m level), y writes once per row.
-    The *execution* schedule stays hand-written under a ``lowering_waiver``
-    (row-block geometry with an in-block reduction); this nest is its
-    Eq. (1)–(3) accounting and the autotuner's cache key — the schedule's
-    only effective knob there is ``buffer_depth``, the geometry being
-    pinned by the launch.
+    repeat register — coefficient 0 on the m level), y writes once per
+    row and is revisited across the n walk, so ``lower_nest`` carries a
+    VMEM accumulator across the contraction — the standard level-mapped
+    path (no waiver); the autotuner searches its full block geometry.
     """
     return LoopNest(
         bounds=(m, n),

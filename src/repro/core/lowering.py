@@ -536,6 +536,30 @@ class IndirectGather:
 
 
 @dataclasses.dataclass(frozen=True)
+class HaloRead:
+    """One windowed READ ref lowered to shifted streams + in-kernel taps.
+
+    A ref with ``window[l] = w > 1`` revisits ``w - 1`` neighbouring
+    elements per step on level ``l`` — the stencil halo.  Whole-block DMA
+    cannot fetch a block-and-a-bit, so the lowering emits ``2**k`` copies
+    of the stream (``k`` halo'd levels): slot bit ``j`` adds a +1 grid
+    shift on halo level ``j``.  The kernel concatenates each shifted pair
+    along the level's block axis and slices the first ``tile + w - 1``
+    columns — the widened block the body sees (DESIGN.md §13).
+
+    ``slots`` are the shifted streams' positions in ``in_streams`` (binary
+    order, bit 0 first); ``axes``/``tiles``/``windows`` are per halo'd
+    level, in slot-bit order.
+    """
+
+    name: str
+    slots: Tuple[int, ...]
+    axes: Tuple[int, ...]
+    tiles: Tuple[int, ...]
+    windows: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
 class LoweredNest:
     """A StreamPlan with an output ref, lowered level-by-level.
 
@@ -560,6 +584,8 @@ class LoweredNest:
     axis_order: Tuple[int, ...] = ()
     padded_bounds: Tuple[int, ...] = ()
     gathers: Tuple[IndirectGather, ...] = ()
+    halos: Tuple[HaloRead, ...] = ()
+    rescale: bool = False
 
     @property
     def semantics(self) -> Tuple[str, ...]:
@@ -591,6 +617,12 @@ def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
     a level appearing only in outer positions is a sublane level (aligned
     to ``sched.rows``, target ``rows·rows_tile_factor``); a level no
     stream varies with is a pure iteration axis (tile 1).
+
+    A halo'd level (some ref reads a ``window[l] = w > 1`` neighbourhood)
+    additionally needs ``w - 1`` overlap columns served by ONE +1-shifted
+    neighbour block, so its tile target is raised to at least the aligned
+    overlap — candidates whose tile still undershoots it fail loudly in
+    :func:`_lower_halo_streams` and are filtered by the autotuner.
     """
     policy = sched.policy
     roles: Dict[int, str] = {}
@@ -600,6 +632,12 @@ def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
     for order in orders.values():
         for lvl in order[:-1]:
             roles.setdefault(lvl, "sublane")
+    halo_need: Dict[int, int] = {}
+    for ref in nest.refs:
+        if ref.name in orders and ref.has_window():
+            for lvl, w in enumerate(ref.window):
+                if w > 1:
+                    halo_need[lvl] = max(halo_need.get(lvl, 0), w - 1)
     tiles, padded = [], []
     for lvl, b in enumerate(nest.bounds):
         role = roles.get(lvl)
@@ -613,6 +651,9 @@ def _nest_tiles(nest: LoopNest, orders: Dict[str, Tuple[int, ...]],
             tiles.append(1)
             padded.append(b)
             continue
+        need = halo_need.get(lvl, 0)
+        if need:
+            target = max(target, -(-need // align) * align)
         pb = -(-b // align) * align
         tiles.append(auto_block(pb, target, align))
         padded.append(pb)
@@ -692,6 +733,74 @@ def _lower_nest_stream(alloc: Allocation, nest: LoopNest,
         layout_shape=layout, policy=policy)
 
 
+def _lower_halo_streams(alloc: Allocation, nest: LoopNest,
+                        tiles: Tuple[int, ...], padded: Tuple[int, ...],
+                        policy: BlockPolicy, pos: Dict[int, int]
+                        ) -> Tuple[list, Tuple[int, ...], Tuple[int, ...],
+                                   Tuple[int, ...]]:
+    """Lower one windowed READ ref to ``2**k`` shifted streams.
+
+    Whole-block DMA cannot deliver a ``tile + w - 1`` widened block
+    directly (index_maps address whole tiles), so each halo'd level
+    doubles the stream: the copy's index_map is shifted +1 grid step on
+    that level, and the kernel stitches ``block ++ shifted`` back into the
+    widened view (:func:`_halo_widen`).  The operand layout is padded by
+    one extra tile per halo'd level so the shifted walk stays in range at
+    the grid edge.
+
+    Returns ``(streams, axes, halo_tiles, windows)`` — the shifted
+    :class:`NestStream`\\ s in binary slot order plus the per-halo'd-level
+    metadata for :class:`HaloRead` (block axis, tile, window width).
+    """
+    ref = alloc.ref
+    order = _storage_order_or_raise(ref, nest)
+    if ref.offset:
+        raise LoweringError(
+            f"stream '{ref.name}': base offset {ref.offset} cannot shift a "
+            "level-mapped block walk; fold it into the operand view")
+    halo_lvls = tuple(lvl for lvl, w in enumerate(ref.window) if w > 1)
+    for lvl in halo_lvls:
+        w = ref.window[lvl]
+        if w - 1 > tiles[lvl]:
+            raise LoweringError(
+                f"stream '{ref.name}': halo window {ref.window} needs "
+                f"{w - 1} overlap columns on level {lvl}, but the block "
+                f"tile is only {tiles[lvl]} wide; widen the tile so one "
+                "block plus its +1-shifted neighbour covers the window")
+    halo_set = set(halo_lvls)
+    logical = tuple(nest_analysis.level_extent(ref, nest, l) for l in order)
+    pad_shape = tuple(padded[l] + (tiles[l] if l in halo_set else 0)
+                      for l in order)
+    streams = []
+    for m in range(1 << len(halo_lvls)):
+        shift = {lvl: (m >> j) & 1 for j, lvl in enumerate(halo_lvls)}
+        if len(order) == 1:
+            lvl = order[0]
+            block = (1, tiles[lvl])
+            layout = (1, pad_shape[0])
+
+            def index_map(*g, _p=pos[lvl], _s=shift[lvl]):
+                return (0, g[_p] + _s)
+        else:
+            block = tuple(tiles[l] for l in order)
+            layout = pad_shape
+
+            def index_map(*g, _ps=tuple(pos[l] for l in order),
+                          _ss=tuple(shift.get(l, 0) for l in order)):
+                return tuple(g[p] + s for p, s in zip(_ps, _ss))
+
+        streams.append(NestStream(
+            name=ref.name,
+            stream=BlockStream(block, index_map, direction=ref.kind,
+                               name=ref.name),
+            levels=order, logical_shape=logical, padded_shape=pad_shape,
+            layout_shape=layout, policy=policy))
+    axes = tuple(1 if len(order) == 1 else order.index(lvl)
+                 for lvl in halo_lvls)
+    return (streams, axes, tuple(tiles[lvl] for lvl in halo_lvls),
+            tuple(ref.window[lvl] for lvl in halo_lvls))
+
+
 def lower_nest(plan: StreamPlan,
                policy: BlockPolicy = DEFAULT_POLICY, *,
                schedule: Optional[Schedule] = None) -> LoweredNest:
@@ -741,6 +850,20 @@ def lower_nest(plan: StreamPlan,
             f"the innermost levels (output varies with {out_varying}); the "
             "accumulator would be drained and re-initialised mid-reduction")
 
+    rescale = out_ref.acc_kind == "online_softmax"
+    if rescale:
+        if len(zaxes) != 1:
+            raise LoweringError(
+                f"output ref '{out_ref.name}': online_softmax needs exactly "
+                f"one contraction axis to carry the (m, l, acc) triple "
+                f"across, got {zaxes}")
+        if set(out_varying) | set(zaxes) != set(range(len(nest.bounds))):
+            raise LoweringError(
+                f"output ref '{out_ref.name}': online_softmax requires the "
+                "output plus the contraction axis to cover every loop "
+                f"level (output varies with {out_varying}, contraction "
+                f"{zaxes}, nest depth {len(nest.bounds)})")
+
     for r in plan.residual:
         if r.is_indirect():
             raise LoweringError(
@@ -757,11 +880,49 @@ def lower_nest(plan: StreamPlan,
     pos = {lvl: k for k, lvl in enumerate(axis_order)}
     grid = tuple(padded[l] // tiles[l] for l in axis_order)
 
-    lowered = [_lower_nest_stream(a, nest, tiles, padded, policy, pos)
-               for a in dense_allocs]
-    ins = tuple(s for s in lowered if s.stream.direction == Direction.READ)
-    outs = [s for s in lowered if s.stream.direction == Direction.WRITE]
-    in_slot = {s.name: k for k, s in enumerate(ins)}
+    if rescale:
+        out_order = orders[out_ref.name]
+        if len(out_order) != 2:
+            raise LoweringError(
+                f"output ref '{out_ref.name}': online_softmax carries a "
+                "(rows, lanes) accumulator block, so the output needs "
+                f"exactly two varying levels, got storage order {out_order}")
+        lanes_lvl = out_order[-1]
+        if padded[lanes_lvl] != tiles[lanes_lvl]:
+            raise LoweringError(
+                f"output ref '{out_ref.name}': online_softmax needs the "
+                f"lanes level {lanes_lvl} served in one grid step "
+                f"(padded {padded[lanes_lvl]} vs tile {tiles[lanes_lvl]}); "
+                "the rescaled accumulator cannot split its lane dim")
+        if jnp.dtype(sched.acc_dtype) != jnp.dtype("float32"):
+            raise LoweringError(
+                f"output ref '{out_ref.name}': online_softmax pins "
+                f"acc_dtype=float32 (running max/sum rescaling is not "
+                f"stable in {sched.acc_dtype}); adjust the schedule")
+
+    ins_list: list = []
+    outs: list = []
+    halos: list = []
+    in_slot: Dict[str, int] = {}
+    for a in dense_allocs:
+        ref = a.ref
+        if ref.kind == Direction.READ and ref.has_window():
+            streams, axes, htiles, hwins = _lower_halo_streams(
+                a, nest, tiles, padded, policy, pos)
+            slots = tuple(range(len(ins_list),
+                                len(ins_list) + len(streams)))
+            in_slot.setdefault(ref.name, slots[0])
+            ins_list.extend(streams)
+            halos.append(HaloRead(name=ref.name, slots=slots, axes=axes,
+                                  tiles=htiles, windows=hwins))
+        else:
+            s = _lower_nest_stream(a, nest, tiles, padded, policy, pos)
+            if s.stream.direction == Direction.WRITE:
+                outs.append(s)
+            else:
+                in_slot.setdefault(s.name, len(ins_list))
+                ins_list.append(s)
+    ins = tuple(ins_list)
 
     gathers = []
     for a in ind_allocs:
@@ -794,7 +955,8 @@ def lower_nest(plan: StreamPlan,
                        in_streams=ins, out_stream=outs[0],
                        contraction_axes=tuple(sorted(pos[z] for z in zaxes)),
                        schedule=sched, axis_order=axis_order,
-                       padded_bounds=tuple(padded), gathers=tuple(gathers))
+                       padded_bounds=tuple(padded), gathers=tuple(gathers),
+                       halos=tuple(halos), rescale=rescale)
 
 
 # --------------------------------------------------------------------------
@@ -1200,6 +1362,23 @@ def _gather_block(pl, gather: IndirectGather, idx_block, table_ref):
     return jnp.take(table, addr.reshape(-1), mode="clip").reshape(addr.shape)
 
 
+def _halo_widen(parts, halo: HaloRead):
+    """Stitch a HaloRead's ``2**k`` shifted blocks into one widened block.
+
+    Pass ``j`` pairs blocks differing only in halo bit ``j`` (adjacent
+    after earlier passes), concatenates each pair along that level's
+    block axis and keeps the first ``tile + w - 1`` columns — the
+    in-kernel slice taps of DESIGN.md §13.
+    """
+    for ax, t, w in zip(halo.axes, halo.tiles, halo.windows):
+        nxt = []
+        for m in range(0, len(parts), 2):
+            cat = jnp.concatenate([parts[m], parts[m + 1]], axis=ax)
+            nxt.append(jax.lax.slice_in_dim(cat, 0, t + w - 1, axis=ax))
+        parts = nxt
+    return parts[0]
+
+
 def _build_nest_kernel(lowered: LoweredNest, body: Callable,
                        out_dtype, interpret: Optional[bool],
                        tables: Sequence[jax.ShapeDtypeStruct] = ()
@@ -1227,9 +1406,22 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
     zaxes = lowered.contraction_axes
     acc_shape = lowered.out_stream.stream.block_shape
 
+    # Halo refs arrive as 2**k shifted copies in in_streams ("raw" slots);
+    # the body sees ONE widened block per ref, stitched in-kernel.
+    halos = lowered.halos
+    halo_at = {h.slots[0]: h for h in halos}
+    halo_skip = {s for h in halos for s in h.slots[1:]}
+
     def _blocks(in_refs, tab_refs):
-        blocks = [r[...] for r in in_refs]
-        blocks += [_gather_block(pl, g, blocks[g.index_pos], t)
+        raw = [r[...] for r in in_refs]
+        blocks = []
+        for k, b in enumerate(raw):
+            if k in halo_skip:
+                continue
+            h = halo_at.get(k)
+            blocks.append(b if h is None
+                          else _halo_widen([raw[s] for s in h.slots], h))
+        blocks += [_gather_block(pl, g, raw[g.index_pos], t)
                    for g, t in zip(gathers, tab_refs)]
         return blocks
 
@@ -1241,7 +1433,60 @@ def _build_nest_kernel(lowered: LoweredNest, body: Callable,
     # runs) — a searched knob like the rest of the geometry.
     acc_dtype = jnp.dtype(lowered.schedule.acc_dtype)
 
-    if zaxes:
+    if lowered.rescale:
+        # Online-rescaled accumulator (flash-attention recurrence): the
+        # kernel carries a (max, sum, acc) triple in VMEM across the
+        # contraction walk.  ``body(*blocks, offs)`` returns the raw score
+        # block ``s`` (rows × contraction-tile, already scaled AND masked —
+        # ``offs`` gives the per-level global offsets for the mask iotas)
+        # and the value block ``v`` (contraction-tile × lanes); the kernel
+        # owns the m/l rescaling:  m' = max(m, rowmax(s)); α = e^{m−m'};
+        # l' = αl + Σ e^{s−m'}; acc' = α·acc + e^{s−m'}·v; drain acc/l.
+        z = zaxes[0]
+        d = len(lowered.tiles)
+        pos_of = {lvl: k for k, lvl in enumerate(lowered.axis_order)}
+        n_rows = acc_shape[0]
+
+        def kernel(*refs):
+            in_refs = refs[:n_in]
+            tab_refs = refs[n_in:n_in + len(gathers)]
+            o_ref = refs[n_in + len(gathers)]
+            m_ref = refs[n_in + len(gathers) + 1]
+            l_ref = refs[n_in + len(gathers) + 2]
+            acc_ref = refs[n_in + len(gathers) + 3]
+            first = pl.program_id(z) == 0
+            last = pl.program_id(z) == pl.num_programs(z) - 1
+
+            @pl.when(first)
+            def _init():
+                m_ref[...] = jnp.full_like(m_ref, -1e30)
+                l_ref[...] = jnp.zeros_like(l_ref)
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            offs = tuple(pl.program_id(pos_of[l]) * lowered.tiles[l]
+                         for l in range(d))
+            s, v = body(*_blocks(in_refs, tab_refs), offs)
+            s = jnp.asarray(s, acc_dtype)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1,
+                                                      keepdims=True)
+            acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+                p, jnp.asarray(v, acc_dtype),
+                (((1,), (0,)), ((), ())), preferred_element_type=acc_dtype)
+            m_ref[...] = m_new
+
+            @pl.when(last)
+            def _drain():
+                o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                              ).astype(o_ref.dtype)
+
+        scratch = [pltpu.VMEM((n_rows, 1), acc_dtype),
+                   pltpu.VMEM((n_rows, 1), acc_dtype),
+                   pltpu.VMEM(acc_shape, acc_dtype)]
+    elif zaxes:
         def kernel(*refs):
             in_refs = refs[:n_in]
             tab_refs = refs[n_in:n_in + len(gathers)]

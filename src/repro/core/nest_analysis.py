@@ -55,6 +55,20 @@ class MemRef:
     False — no static storage order exists), but they *are* streamable: the
     compiler allocates them a lane and the lowering serves them with an
     in-kernel gather from a VMEM-resident table.
+
+    **Halo (overlapping-read) refs**: ``window[l] > 1`` declares that each
+    iteration reads elements ``addr .. addr + (window[l]−1)·coeffs[l]``
+    along level ``l`` — the overlapping stencil window the flat AGU model
+    cannot express as disjoint blocks.  ``coeffs`` still describes the
+    *base-corner* walk (one step per loop index), so the logical array is
+    ``bounds[l] + window[l] − 1`` elements long on each windowed level.
+    The lowering fetches the halo via shifted index_maps (DESIGN.md §13).
+
+    **Online-rescaled accumulators**: ``acc_kind="online_softmax"`` on a
+    WRITE ref revisited across a contraction axis asks the lowering for the
+    flash-attention-style carried (max, sum, acc) triple instead of a plain
+    sum accumulator — each contraction step rescales the running state by
+    ``exp(m_old − m_new)``, so the softmax normaliser streams in one pass.
     """
 
     name: str
@@ -64,12 +78,18 @@ class MemRef:
     depth: Optional[int] = None  # innermost loop level the access lives in
     index_of: Optional[str] = None  # name of the index stream driving addrs
     index_scale: int = 1  # elements per index step (row pitch of the table)
+    window: Optional[Tuple[int, ...]] = None  # per-level read extents (halo)
+    acc_kind: str = "sum"  # "sum" | "online_softmax" (WRITE refs only)
 
     def is_indirect(self) -> bool:
         return self.index_of is not None
 
     def is_affine(self) -> bool:
         return self.coeffs is not None and self.index_of is None
+
+    def has_window(self) -> bool:
+        """True when any level reads an overlapping (halo) window."""
+        return self.window is not None and any(w > 1 for w in self.window)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +109,34 @@ class LoopNest:
         if len(self.compute_per_level) != len(self.bounds):
             raise ValueError("compute_per_level must match nest depth")
         by_name = {r.name: r for r in self.refs}
+        for r in self.refs:
+            if r.acc_kind not in ("sum", "online_softmax"):
+                raise ValueError(
+                    f"ref {r.name!r}: unknown acc_kind {r.acc_kind!r} "
+                    "(expected 'sum' or 'online_softmax')")
+            if r.acc_kind == "online_softmax" and r.kind != Direction.WRITE:
+                raise ValueError(
+                    f"ref {r.name!r}: acc_kind='online_softmax' only makes "
+                    "sense on the output WRITE ref (the rescaled accumulator)")
+            if r.window is not None:
+                if not r.is_affine() or r.kind != Direction.READ:
+                    raise ValueError(
+                        f"ref {r.name!r}: halo windows are only supported on "
+                        "affine READ refs")
+                if len(r.window) != len(self.bounds):
+                    raise ValueError(
+                        f"ref {r.name!r}: window {r.window} must give one "
+                        f"extent per loop level ({len(self.bounds)})")
+                for l, w in enumerate(r.window):
+                    if w < 1:
+                        raise ValueError(
+                            f"ref {r.name!r}: window extents must be >= 1, "
+                            f"got {r.window}")
+                    if w > 1 and r.coeffs[l] == 0:
+                        raise ValueError(
+                            f"ref {r.name!r}: window {r.window} opens on "
+                            f"level {l}, whose coefficient is 0 — a halo "
+                            "only widens levels the address varies with")
         for r in self.refs:
             if not r.is_indirect():
                 continue
@@ -257,6 +305,13 @@ def nest_compute(nest: LoopNest) -> int:
 # -- layout ------------------------------------------------------------------
 
 
+def level_extent(ref: MemRef, nest: LoopNest, level: int) -> int:
+    """The ref's logical extent at ``level``: the loop bound, widened by the
+    halo window when one is open (``bounds[l] + window[l] − 1``)."""
+    w = 1 if ref.window is None else ref.window[level]
+    return nest.bounds[level] + w - 1
+
+
 def storage_order(ref: MemRef, nest: LoopNest) -> Optional[Tuple[int, ...]]:
     """Varying levels ordered outermost-first *in storage*, if dense.
 
@@ -267,7 +322,13 @@ def storage_order(ref: MemRef, nest: LoopNest) -> Optional[Tuple[int, ...]]:
     loop order — GEMM's B operand walks the innermost loop (k) with stride
     n because its storage order is (k, n) while the loop order is
     (m, n, k).  Returns ``None`` when no dense layout exists (e.g. the
-    overlapping windows of a stencil walk).
+    overlapping windows of a stencil walk *without* a declared halo).
+
+    A halo ref's density is judged against its *widened* extents: a 2-D
+    stencil reading a (H+2r) × (W+2r) padded grid has row stride W+2r, and
+    that is exactly ``level_extent`` of the faster level — the base-corner
+    walk is dense over the widened array even though the per-iteration
+    windows overlap.
 
     A bound-1 level multiplies the running extent by 1, so its coefficient
     *ties* the next-faster real level's; a naive coefficient sort can then
@@ -281,17 +342,18 @@ def storage_order(ref: MemRef, nest: LoopNest) -> Optional[Tuple[int, ...]]:
     if not lv:
         return ()
     order = sorted(lv, key=lambda l: (-ref.coeffs[l],
-                                      nest.bounds[l] == 1, l))
+                                      level_extent(ref, nest, l) == 1, l))
     expect = 1
     for l in reversed(order):
         if ref.coeffs[l] != expect:
             return None
-        expect *= nest.bounds[l]
+        expect *= level_extent(ref, nest, l)
     return tuple(order)
 
 
 def logical_shape(ref: MemRef, nest: LoopNest) -> Tuple[int, ...]:
-    """The dense array shape implied by :func:`storage_order`."""
+    """The dense array shape implied by :func:`storage_order` — widened by
+    the halo window on windowed levels."""
     order = storage_order(ref, nest)
     assert order is not None, f"ref {ref.name!r} has no dense storage order"
-    return tuple(nest.bounds[l] for l in order)
+    return tuple(level_extent(ref, nest, l) for l in order)

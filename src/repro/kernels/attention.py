@@ -1,19 +1,21 @@
 """Streaming flash attention — the SSR technique applied to the LM hot spot.
 
-Attention *is* the paper's reduction (§4.1/Fig. 4) writ large: for each
-query tile the K/V operands stream past the compute unit once, with an
-online-softmax accumulator playing the role of the ``%x`` register.  The
-mapping (paper §2–3 concepts → this kernel):
+Attention *is* the paper's reduction (§4.1/Fig. 4) writ large, and since
+the online-rescaled accumulator landed in ``lower_nest`` it is fully
+*nest-lowered*: the module declares only
+:func:`repro.core.compiler.attention_nest` — K/V read streams over the kv
+contraction level, Q a repeat stream, and an output WRITE ref with
+``acc_kind="online_softmax"`` — plus the score body.  The lowering owns
+the flash recurrence (DESIGN.md §13):
 
-* K and V are **read streams** over the kv axis (AGU loop 2), revisited per
-  query tile (AGU loop 1) — block reuse = repeat register.
-* The m/l/acc online-softmax state lives in VMEM scratch across the kv walk,
-  exactly like the dot-product accumulator.
-* The kv grid axis is ``arbitrary`` (sequential), the q axis ``parallel``;
-  the pipeline prefetches K/V tile j+1 during tile j's two matmuls — the
-  data mover run-ahead that gives the paper its 3× on reductions.
-* Causal/sliding-window masks are *static* index arithmetic (iota against
-  the grid position) — data-oblivious, as required for SSR-ability.
+* the m/l/acc online-softmax state lives in VMEM scratch across the kv
+  walk, *rescaled* by ``exp(m − m')`` every step — the generalised
+  accumulator register;
+* the kv grid axis is ``arbitrary`` (sequential), the rest ``parallel``;
+  the pipeline prefetches the next K/V tile during this tile's two
+  matmuls — the data-mover run-ahead that gives the paper its 3×;
+* causal/sliding-window masks are *static* index arithmetic in the body
+  (iota against the grid offsets) — data-oblivious, as SSR requires.
 
 Supports MHA/GQA (q heads grouped over kv heads via an outer vmap), causal
 and sliding-window (h2o-danube) masking.
@@ -25,12 +27,11 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import BlockStream, Direction
+from repro.core import compiler
+from repro.core.lowering import Schedule
 
-from .frontend import Launch, StreamKernel, promote
+from .frontend import NestKernel, promote
 from .registry import KernelEntry, register_kernel
 
 _NEG_INF = -1e30
@@ -38,109 +39,63 @@ _NEG_INF = -1e30
 
 def _prepare(q, k, v, causal=False, window=None, scale=None,
              bq=128, bk=128):
+    # bq/bk are retained for call-site compatibility with the old
+    # hand-tiled launch; tiling now comes from the lowering schedule.
     sq, d = q.shape
     sk = k.shape[0]
     if scale is None:
         scale = 1.0 / math.sqrt(d)
-    bq = min(bq, sq)
-    bk = min(bk, sk)
-    while sq % bq:
-        bq //= 2
-    while sk % bk:
-        bk //= 2
-    static = (max(bq, 1), max(bk, 1), sq, sk, bool(causal), window,
-              float(scale))
-    return (q, k, v), static, None
+    static = (sq, sk, d, bool(causal), window, float(scale), str(q.dtype))
+    return {"Q": q, "K": k, "V": v}, static, None
+
+
+def _nest(static):
+    sq, sk, d = static[:3]
+    return compiler.attention_nest(sq, sk, d)
 
 
 def _body(static):
-    bq, bk, sq, sk, causal, window, scale = static
-    offs = sk - sq  # query/key end alignment (decode-friendly)
+    sq, sk, d, causal, window, scale, _dt = static
+    offs_rc = sk - sq  # query/key end alignment (decode-friendly)
 
-    def body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
-        qi = pl.program_id(0)
-        kj = pl.program_id(1)
-
-        @pl.when(kj == 0)
-        def _init():
-            m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-            l_ref[...] = jnp.zeros_like(l_ref)
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        q = promote(q_ref[...])
-        k = promote(k_ref[...])
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-
-        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
-            + offs
-        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = jnp.ones((bq, bk), bool)
+    def body(k_blk, v_blk, q_blk, offs):
+        # Raw scores for one (q-tile, kv-tile) step; the lowering's
+        # online-softmax kernel owns the m/l/acc rescaling recurrence.
+        # ``offs`` are the per-level global offsets (q, d, kv).
+        s = jax.lax.dot_general(
+            promote(q_blk), promote(k_blk), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        rows = offs[0] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+            + offs_rc
+        cols = offs[2] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < sk                     # padded kv columns
         if causal:
-            mask = mask & (cols <= rows)
+            mask = jnp.logical_and(mask, cols <= rows)
         if window is not None:
-            mask = mask & (cols > rows - window)
-        s = jnp.where(mask, s, _NEG_INF)
-
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, promote(v_ref[...]), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
-
-        @pl.when(kj == pl.num_programs(1) - 1)
-        def _write():
-            l = jnp.maximum(l_ref[...], 1e-30)   # fully-masked row guard
-            o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+            mask = jnp.logical_and(mask, cols > rows - window)
+        return jnp.where(mask, s, _NEG_INF), v_blk
 
     return body
 
 
-def _launch(static, q, k, v):
-    bq, bk, sq, sk, _causal, _window, _scale = static
-    d = q.shape[1]
-    return Launch(
-        grid=(sq // bq, sk // bk),
-        in_streams=(
-            BlockStream((bq, d), lambda i, j: (i, 0), name="Q"),
-            BlockStream((bk, d), lambda i, j: (j, 0), name="K"),  # reuse/i
-            BlockStream((bk, d), lambda i, j: (j, 0), name="V"),
-        ),
-        out_streams=(BlockStream((bq, d), lambda i, j: (i, 0),
-                                 Direction.WRITE, name="O"),),
-        out_shapes=(jax.ShapeDtypeStruct((sq, d), q.dtype),),
-        scratch_shapes=(
-            pltpu.VMEM((bq, 1), jnp.float32),   # running max
-            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
-            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
-        ),
-        dimension_semantics=("parallel", "arbitrary"),
-    )
-
-
-_ssr = StreamKernel(
-    "attention", prepare=_prepare, launch=_launch, body=_body,
-    lowering_waiver=(
-        "online-softmax carried state: the m/l/acc scratch is *rescaled* "
-        "(multiplied by alpha) every kv step, not just accumulated — "
-        "beyond the init/add/drain contraction pattern lower_nest emits"))
+_ssr = NestKernel("attention", prepare=_prepare, nest=_nest, body=_body,
+                  out_dtype=lambda static: static[6])
 
 
 def ssr_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = False, window: int | None = None,
                         scale: float | None = None, bq: int = 128,
-                        bk: int = 128, interpret=None) -> jax.Array:
+                        bk: int = 128, interpret=None,
+                        schedule: Schedule | None = None) -> jax.Array:
     """Single-head streaming attention; q (Sq,D), k/v (Sk,D).
 
     Multi-head / batch: ``jax.vmap`` this (tested); GQA: vmap over kv heads
-    with q reshaped (kv_heads, group, Sq, D).
+    with q reshaped (kv_heads, group, Sq, D).  ``schedule=None`` resolves
+    a tuned schedule from the autotuner's cache; ``bq``/``bk`` are
+    accepted for call-site compatibility (tiles come from the schedule).
     """
     return _ssr(q, k, v, causal=causal, window=window, scale=scale,
-                bq=bq, bk=bk, interpret=interpret)
+                bq=bq, bk=bk, interpret=interpret, schedule=schedule)
 
 
 @register_kernel("attention")

@@ -7,9 +7,12 @@ extension in PAPERS.md) fuses the pair into ONE Pallas kernel whose
 intermediate lives in a VMEM scratch block, eliminating one store and one
 load per element.  Two fusion mechanisms are exercised:
 
-* **geometry reuse** (:class:`~repro.kernels.frontend.ChainedKernel`) —
-  ``gemv+relu`` and ``stencil1d+relu`` keep the producer's stream geometry
-  and bolt the consumer body onto the block before it leaves VMEM;
+* **nest reuse** (:class:`~repro.kernels.frontend.NestKernel`) —
+  ``stencil1d+relu`` shares the producer's loop nest and applies the
+  consumer inside the block body before it leaves VMEM (a map nest, so
+  per-block epilogues are exact); ``gemv+relu`` shares the gemv nest and
+  applies relu in ``finish`` (the contraction's k-tile partials cannot be
+  relu'd mid-accumulation), which XLA fuses onto the drained output;
 * **nest-level chaining** (:func:`repro.core.ssr_chain_call`) —
   ``sum_sq_diff`` (reduction-of-map) and ``axpy_dot`` go through the full
   compiler path: ``chain()`` unifies the producer's WRITE ref with the
@@ -34,15 +37,17 @@ from repro.core import (Direction, LoopNest, MemRef, compiler, ssr_call,
                         ssr_chain_call)
 from repro.core.lowering import DEFAULT_POLICY, DEFAULT_SCHEDULE
 
-from .frontend import BLOCK_ELEMS, ChainedKernel, trim_vector
-from .gemv import _launch as _gemv_launch
+from .frontend import BLOCK_ELEMS, NestKernel
+from .gemv import _body as _gemv_body
+from .gemv import _nest as _gemv_nest
 from .gemv import _prepare as _gemv_prepare
-from .gemv import matvec_block, ssr_gemv
+from .gemv import ssr_gemv
 from .registry import KernelEntry, register_kernel
 from .relu import relu_block, ssr_relu
-from .stencil import _launch_1d as _stencil_launch
+from .stencil import _body_1d as _stencil_body
+from .stencil import _nest_1d as _stencil_nest
 from .stencil import _prepare_1d as _stencil_prepare
-from .stencil import ssr_stencil1d, window_block
+from .stencil import ssr_stencil1d
 
 
 def _padded_blocks(n: int) -> Tuple[int, int]:
@@ -52,19 +57,19 @@ def _padded_blocks(n: int) -> Tuple[int, int]:
 
 
 # --------------------------------------------------------------------------
-# gemv + relu (geometry-reuse fusion)
+# gemv + relu (nest-reuse fusion)
 # --------------------------------------------------------------------------
 
-_gemv_relu = ChainedKernel(
+_gemv_relu = NestKernel(
     "gemv_relu",
     prepare=_gemv_prepare,
-    launch=_gemv_launch,
-    producer=lambda static: matvec_block,
-    consumer=lambda static: relu_block,
-    finish=lambda out, m: out.reshape(-1)[:m],
-    lowering_waiver=(
-        "geometry-reuse fusion: borrows the gemv Launch (see its waiver) "
-        "and bolts the consumer onto the block before it leaves VMEM"))
+    nest=_gemv_nest,
+    body=_gemv_body,
+    # relu rides finish, NOT the body: the body's return is a per-k-tile
+    # partial of the contraction — relu'ing it mid-accumulation would be
+    # wrong.  XLA fuses the epilogue onto the drained (m,) output, so the
+    # unfused composition's padded HBM intermediate still disappears.
+    finish=lambda out, _: jnp.maximum(out, 0.0))
 
 
 def fused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
@@ -84,19 +89,26 @@ def unfused_gemv_relu(a: jax.Array, x: jax.Array, *, interpret=None):
 
 
 # --------------------------------------------------------------------------
-# stencil1d + relu (geometry-reuse fusion)
+# stencil1d + relu (nest-reuse fusion)
 # --------------------------------------------------------------------------
 
-_stencil_relu = ChainedKernel(
+
+def _stencil_relu_body(static):
+    producer = _stencil_body(static)
+
+    def body(x_wide, w_blk):
+        # map nest (no contraction): the consumer applies per block, in
+        # VMEM, before the write stream drains it — exact fusion.
+        return relu_block(producer(x_wide, w_blk))
+
+    return body
+
+
+_stencil_relu = NestKernel(
     "stencil1d_relu",
     prepare=_stencil_prepare,
-    launch=_stencil_launch,
-    producer=lambda static: window_block,
-    consumer=lambda static: relu_block,
-    finish=trim_vector,
-    lowering_waiver=(
-        "geometry-reuse fusion: borrows the stencil1d halo Launch (see "
-        "its waiver) and applies the consumer in-VMEM"))
+    nest=_stencil_nest,
+    body=_stencil_relu_body)
 
 
 def fused_stencil1d_relu(x: jax.Array, w: jax.Array, *, interpret=None):

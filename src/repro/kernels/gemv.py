@@ -1,16 +1,15 @@
 """Dense matrix-vector product (GEMV) — paper §4.2 (64×64 · 64).
 
-SSR structure: the matrix is a 2-D read stream walked row-panel-wise; the
-vector is a *repeat* stream — one fetch, re-emitted for every row panel
-(the paper's repeat register: "useful if a value loaded from memory is used
-as an operand multiple times", §3.1).  Output is a write stream of row
-panels.
-
-The launch geometry is waivered (whole-row panels), so the autotuner's
-only effective knob here is ``Schedule.buffer_depth`` — the data mover's
-FIFO depth.  ``ssr_gemv(schedule=None)`` resolves it transparently from
-the schedule cache keyed on :func:`repro.core.compiler.gemv_nest`, the
-same pattern the stencil uses for its block width.
+SSR structure, now fully nest-lowered: the matrix walks both loops dense
+(row-major); the vector is a *repeat* stream — one fetch, re-emitted for
+every row tile (the paper's repeat register: "useful if a value loaded
+from memory is used as an operand multiple times", §3.1); y is revisited
+across the column walk, so ``lower_nest`` carries it in a VMEM
+accumulator (init on the first n step, drain on the last).  The kernel
+module declares only :func:`repro.core.compiler.gemv_nest` plus the
+row-panel dot body — grid, index maps, repeat stream and accumulator all
+fall out of the shared lowering, and the autotuner searches the full
+block geometry (the old waivered launch only exposed ``buffer_depth``).
 """
 
 from __future__ import annotations
@@ -19,16 +18,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, autotune, compiler
+from repro.core import compiler
 from repro.core.lowering import Schedule
 
-from .frontend import (ROWS, Launch, MonolithicKernel, StreamKernel,
-                       pad_leading, promote)
+from .frontend import (ROWS, MonolithicKernel, NestKernel, pad_leading,
+                       promote)
 from .registry import KernelEntry, register_kernel
 
 
 def matvec_block(a, x):
-    """Pure (ROWS, n)·(1, n)ᵀ row-panel product — shared with fused variants."""
+    """Pure (rows, n)·(1, n)ᵀ row-panel product — shared with the baseline."""
     return jax.lax.dot_general(
         promote(a), promote(x), (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -36,38 +35,28 @@ def matvec_block(a, x):
 
 def _prepare(a, x):
     m, n = a.shape
-    return (pad_leading(a, ROWS), x.reshape(1, n)), None, m
+    return {"A": a, "x": x}, (m, n), None
 
 
-def _ssr_body(static):
-    def body(a_ref, x_ref, o_ref):
-        o_ref[...] = matvec_block(a_ref[...], x_ref[...])
+def _nest(static):
+    m, n = static
+    return compiler.gemv_nest(m, n)
+
+
+def _body(static):
+    def body(a_blk, x_blk):
+        # one (t_m, 1) partial per grid step: y[i] += A[i, k-tile]·x[k-tile]
+        return matvec_block(a_blk, x_blk)
 
     return body
 
 
-def _launch(static, a, x2d):
+_ssr = NestKernel("gemv", prepare=_prepare, nest=_nest, body=_body)
+
+
+def _prepare_base(a, x):
     m, n = a.shape
-    return Launch(
-        grid=(m // ROWS,),
-        in_streams=(
-            BlockStream((ROWS, n), lambda i: (i, 0), name="A"),
-            BlockStream((1, n), lambda i: (0, 0), name="x"),  # repeat stream
-        ),
-        out_streams=(BlockStream((ROWS, 1), lambda i: (i, 0),
-                                 Direction.WRITE, name="y"),),
-        out_shapes=(jax.ShapeDtypeStruct((m, 1), jnp.float32),),
-        dimension_semantics=("parallel",),
-    )
-
-
-_ssr = StreamKernel(
-    "gemv", prepare=_prepare, launch=_launch, body=_ssr_body,
-    finish=lambda out, m: out.reshape(-1)[:m],
-    lowering_waiver=(
-        "whole-row (ROWS, n) panels with an un-tiled contraction dim — the "
-        "MXU wants the full row resident per step, and this launch is the "
-        "geometry substrate ChainedKernel fusions (gemv_relu) reuse"))
+    return (pad_leading(a, ROWS), x.reshape(1, n)), None, m
 
 
 def _baseline_body(static):
@@ -85,7 +74,7 @@ def _baseline_body(static):
 
 
 _base = MonolithicKernel(
-    "gemv", prepare=_prepare, body=_baseline_body,
+    "gemv", prepare=_prepare_base, body=_baseline_body,
     out_shape=lambda static, a, x2d: jax.ShapeDtypeStruct((a.shape[0], 1),
                                                           jnp.float32),
     finish=lambda out, m: out.reshape(-1)[:m])
@@ -93,14 +82,12 @@ _base = MonolithicKernel(
 
 def ssr_gemv(a: jax.Array, x: jax.Array, *, interpret=None,
              schedule: Schedule | None = None) -> jax.Array:
-    """Streamed GEMV.  ``schedule=None`` consults the autotuner's cache
-    (keyed on :func:`~repro.core.compiler.gemv_nest`) for a tuned
-    ``buffer_depth``; an explicit schedule pins it."""
-    if schedule is None:
-        m, n = a.shape
-        hit = autotune.lookup(compiler.gemv_nest(m, n), {"A": a, "x": x},
-                              mode="map")
-        schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+    """Streamed GEMV through the full compiler path (nest → plan → Pallas).
+
+    ``schedule=None`` consults the autotuner's cache (keyed on
+    :func:`~repro.core.compiler.gemv_nest`) for a tuned block geometry /
+    ``buffer_depth``; an explicit schedule pins it.
+    """
     return _ssr(a, x, interpret=interpret, schedule=schedule)
 
 

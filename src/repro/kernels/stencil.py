@@ -1,48 +1,31 @@
 """Star-shaped stencils (discrete Laplace style, diameter 11) — paper §4.2.
 
-1-D: the input is streamed through *two* lanes offset by one block — the
-halo trick.  Each output tile needs ``taps − 1`` elements beyond its own
-extent; lane 0 carries block i, lane 1 block i+1 (an affine index_map
-``i ↦ i+1`` — exactly a second AGU with a shifted base pointer, paper §2.3).
-The tap loop is fully unrolled in the body with *static* slices: zero address
-arithmetic survives at run time, matching the SSR hot loop that contains only
-fmadds.  Coefficients ride a constant (repeat-semantics) stream.
+Both stencils are *nest-lowered*: the kernel module declares only the loop
+nest (a windowed READ ref — ``MemRef.window`` — plus invariant coefficient
+streams) and the tap-loop body; ``lower_nest`` serves the halo by emitting
+``2**k`` +1-shifted twin streams per windowed ref (k halo'd levels) and
+stitching the widened block in-kernel (DESIGN.md §13) — the paper's §2.3
+second-AGU trick at block granularity.  The tap loop is fully unrolled in
+the body with *static* slices: zero address arithmetic survives at run
+time, matching the SSR hot loop that contains only fmadds.
 
-2-D: the 64×64 problem fits VMEM whole (the paper likewise sizes problems to
-the TCDM, §4.2), so the kernel is a single-step streamed load of the padded
-grid; the two arm loops unroll statically.
+Migrating off the hand-written Launch (the old ``lowering_waiver``) buys
+the full shared path: autotuned block geometry, ``buffer_depth``
+pipelining, zero-overhead dispatch and the Eq. (1)–(3) cost model.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core import BlockStream, Direction, autotune, compiler
-from repro.core.lowering import DEFAULT_SCHEDULE, Schedule
+from repro.core import compiler
+from repro.core.lowering import Schedule
 
-from .frontend import (LANES, Launch, MonolithicKernel, StreamKernel,
-                       promote, trim_vector)
+from .frontend import MonolithicKernel, NestKernel, promote
 from .registry import KernelEntry, register_kernel
 
 TAPS = 11
-
-
-def _block_width(schedule: Schedule | None) -> int:
-    """The 1-D stencil's tunable knob: elements per streamed block.
-
-    The halo trick needs flat ``(1, W)`` blocks (a multi-row block would
-    wrap the window across sublanes), so the schedule's ``lanes`` field is
-    the block width — the autotuner sweeps it in multiples of the 128-wide
-    hardware lane.  Default (128) matches the historical geometry.
-    """
-    w = (schedule or DEFAULT_SCHEDULE).lanes
-    if w % LANES:
-        raise ValueError(
-            f"stencil block width {w} is not a multiple of the {LANES}-wide "
-            "hardware lane")
-    return w
 
 
 def _check_taps(w):
@@ -53,83 +36,53 @@ def _check_taps(w):
 # -- 1-D --------------------------------------------------------------------
 
 
-def _prepare_1d(x, w, schedule=None):
-    _check_taps(w)
-    width = _block_width(schedule)
-    n = x.shape[0] - (TAPS - 1)
-    nblk = -(-n // width)
-    # pad so that blocks [0..nblk] exist (halo lane reads block i+1)
-    need = (nblk + 1) * width
-    x = jnp.pad(x, (0, need - x.shape[0]))
-    xp2d = x.reshape(nblk + 1, width)
-    return (xp2d, xp2d, w.reshape(1, TAPS)), width, n
+def stencil1d_block(x_wide, w2d):
+    """Pure tap loop over one widened ``(1, t + TAPS - 1)`` halo block.
 
-
-def window_block(lo, hi, w2d):
-    """Pure tap loop over one (1, W) block + its halo block.
-
-    Shared by the plain stream kernel and the fused (chained) variants —
-    the fully unrolled fmadd-only hot loop, as a block→block function.
-    The width comes from the blocks themselves, so the schedule-tuned
-    geometry flows through without another parameter.
+    Shared with the fused (chained) variant — the fully unrolled
+    fmadd-only hot loop as a block→block function.  The output width comes
+    from the block itself, so the schedule-tuned geometry flows through
+    without another parameter.
     """
-    width = lo.shape[-1]
-    window = jnp.concatenate([promote(lo), promote(hi)], axis=1)
-    acc = jnp.zeros((1, width), jnp.float32)
-    for j in range(TAPS):                      # static unroll: fmadds only
-        acc = acc + promote(w2d[0, j]) * window[:, j:j + width]
+    t = x_wide.shape[-1] - (TAPS - 1)
+    acc = promote(w2d[0, 0]) * promote(x_wide[:, 0:t])
+    for j in range(1, TAPS):                   # static unroll: fmadds only
+        acc = acc + promote(w2d[0, j]) * promote(x_wide[:, j:j + t])
     return acc
 
 
-def _body_1d(static):
-    def body(lo_ref, hi_ref, w_ref, o_ref):
-        o_ref[...] = window_block(lo_ref[...], hi_ref[...], w_ref[...])
+def _prepare_1d(x, w):
+    _check_taps(w)
+    n = x.shape[0] - (TAPS - 1)
+    return {"x": x, "w": w}, n, None
+
+
+def _nest_1d(n):
+    return compiler.stencil_nest(n, TAPS)
+
+
+def _body_1d(n):
+    def body(x_wide, w_blk):
+        return stencil1d_block(x_wide, w_blk)
 
     return body
 
 
-def _launch_1d(width, xp2d, _xp2d, w2d):
-    nblk = xp2d.shape[0] - 1
-    return Launch(
-        grid=(nblk,),
-        in_streams=(
-            BlockStream((1, width), lambda i: (i, 0), name="x_lo"),
-            BlockStream((1, width), lambda i: (i + 1, 0), name="x_hi"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="w"),  # repeat
-        ),
-        out_streams=(BlockStream((1, width), lambda i: (i, 0),
-                                 Direction.WRITE, name="y"),),
-        out_shapes=(jax.ShapeDtypeStruct((nblk, width), jnp.float32),),
-        dimension_semantics=("parallel",),
-    )
-
-
-_ssr_1d = StreamKernel(
-    "stencil1d", prepare=_prepare_1d, launch=_launch_1d,
-    body=_body_1d, finish=trim_vector,
-    lowering_waiver=(
-        "halo overlap: adjacent output tiles read overlapping input "
-        "windows (coeffs (1, 1) admit no dense storage order), served by "
-        "two base-shifted streams — the paper's second AGU trick"))
+_ssr_1d = NestKernel("stencil1d", prepare=_prepare_1d, nest=_nest_1d,
+                     body=_body_1d)
 
 
 def ssr_stencil1d(x: jax.Array, w: jax.Array, *, interpret=None,
                   schedule: Schedule | None = None) -> jax.Array:
     """y[i] = Σ_j w[j]·x[i+j] for i in [0, n); x has length n + TAPS − 1.
 
-    ``schedule`` tunes the block width (``schedule.lanes`` elements per
-    grid step); semantics are identical for every legal width.
-    ``schedule=None`` consults the autotuner's persistent cache under the
-    same key the tuner commits (the §4.2 cost nest + operand signature),
-    so tuned widths reach ``ops.stencil1d``/registry callers transparently
-    — the waivered geometry opts back into tuning by hand.
+    Fully nest-lowered: ``x`` is a windowed ref (halo ``TAPS``), served by
+    a +1-shifted twin stream; ``w`` rides as an invariant coefficient
+    block.  ``schedule=None`` resolves a tuned schedule from the
+    autotuner's persistent cache (keyed on
+    :func:`repro.core.compiler.stencil_nest`); an explicit schedule pins
+    the geometry — semantics are identical for every legal schedule.
     """
-    if schedule is None:
-        n = x.shape[0] - (TAPS - 1)
-        hit = autotune.lookup(compiler.stencil_nest(n, TAPS),
-                              {"x": x, "w": w}, mode="map",
-                              out_dtype="float32")
-        schedule = None if hit == DEFAULT_SCHEDULE else hit
     return _ssr_1d(x, w, interpret=interpret, schedule=schedule)
 
 
@@ -201,52 +154,46 @@ def cluster_stencil1d(x: jax.Array, w: jax.Array, *, cores: int,
 def _prepare_2d(x, wx, wy):
     _check_taps(wx)
     _check_taps(wy)
-    return (x, wx.reshape(1, TAPS), wy.reshape(1, TAPS)), None, None
+    r = TAPS // 2
+    h, wd = x.shape[0] - 2 * r, x.shape[1] - 2 * r
+    return {"x": x, "wx": wx, "wy": wy}, (h, wd), None
+
+
+def _nest_2d(static):
+    h, wd = static
+    return compiler.stencil2d_nest(h, wd, TAPS)
 
 
 def _body_2d(static):
-    def body(x_ref, wx_ref, wy_ref, o_ref):
-        r = TAPS // 2
-        h = o_ref.shape[0]
-        wgrid = o_ref.shape[1]
-        x = promote(x_ref[...])
-        acc = jnp.zeros((h, wgrid), jnp.float32)
+    r = TAPS // 2
+
+    def body(x_wide, wx_blk, wy_blk):
+        h = x_wide.shape[0] - (TAPS - 1)
+        wd = x_wide.shape[1] - (TAPS - 1)
+        x = promote(x_wide)
+        acc = jnp.zeros((h, wd), jnp.float32)
         for j in range(TAPS):                  # static unroll, both arms
-            acc = acc + promote(wx_ref[0, j]) * x[r:r + h, j:j + wgrid]
-            acc = acc + promote(wy_ref[0, j]) * x[j:j + h, r:r + wgrid]
-        o_ref[...] = acc
+            acc = acc + promote(wx_blk[0, j]) * x[r:r + h, j:j + wd]
+            acc = acc + promote(wy_blk[0, j]) * x[j:j + h, r:r + wd]
+        return acc
 
     return body
 
 
-def _launch_2d(static, xp, wx2d, wy2d):
-    r = TAPS // 2
-    h, wgrid = xp.shape[0] - 2 * r, xp.shape[1] - 2 * r
-    return Launch(
-        grid=(1,),
-        in_streams=(
-            BlockStream(xp.shape, lambda i: (0, 0), name="x"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="wx"),
-            BlockStream((1, TAPS), lambda i: (0, 0), name="wy"),
-        ),
-        out_streams=(BlockStream((h, wgrid), lambda i: (0, 0),
-                                 Direction.WRITE, name="y"),),
-        out_shapes=(jax.ShapeDtypeStruct((h, wgrid), jnp.float32),),
-    )
-
-
-_ssr_2d = StreamKernel(
-    "stencil2d", prepare=_prepare_2d, launch=_launch_2d, body=_body_2d,
-    lowering_waiver=(
-        "2-D halos on both axes; the 64×64 problem is sized to VMEM "
-        "(§4.2's TCDM discipline) so the whole padded grid rides one "
-        "loop-invariant stream"))
+_ssr_2d = NestKernel("stencil2d", prepare=_prepare_2d, nest=_nest_2d,
+                     body=_body_2d)
 
 
 def ssr_stencil2d(x: jax.Array, wx: jax.Array, wy: jax.Array, *,
-                  interpret=None) -> jax.Array:
-    """Star stencil over a padded grid ``x`` (pad r = TAPS//2 each side)."""
-    return _ssr_2d(x, wx, wy, interpret=interpret)
+                  interpret=None,
+                  schedule: Schedule | None = None) -> jax.Array:
+    """Star stencil over a padded grid ``x`` (pad r = TAPS//2 each side).
+
+    Nest-lowered with a ``(TAPS, TAPS)`` halo window on both levels: the
+    lowering emits 4 shifted streams of the padded grid and stitches the
+    widened block in-kernel (DESIGN.md §13).
+    """
+    return _ssr_2d(x, wx, wy, interpret=interpret, schedule=schedule)
 
 
 @register_kernel("stencil1d")

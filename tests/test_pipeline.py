@@ -331,7 +331,7 @@ class TestTransparentResolution:
         a, x = arr((64, 256)), arr(256)
         before = ssr_gemv(a, x)
         key = autotune.cache_key(compiler.gemv_nest(64, 256),
-                                 {"A": a, "x": x}, mode="map",
+                                 {"A": a, "x": x}, mode="reduce",
                                  out_dtype="float32")
         autotune.global_cache().put(key, Schedule(buffer_depth=3))
         autotune._bump_epoch()

@@ -285,25 +285,22 @@ class TestTransparentTuning:
         np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
 
     def test_stencil_resolves_committed_width(self, tuned_env):
-        # the waivered stencil opts back into transparent tuning: a width
-        # committed under the cost-nest key must reach plain ssr_stencil1d
-        from repro.kernels.stencil import TAPS, ssr_stencil1d
+        # the migrated stencil rides transparent tuning: a schedule
+        # committed under the halo nest's key must reach plain
+        # ssr_stencil1d (and be exactly as wide as the default — per-tap
+        # fmadd order is width-independent)
+        from repro.kernels.stencil import TAPS, _ssr_1d, ssr_stencil1d
 
         n = 1024
         x, w = arr(n + TAPS - 1), arr(TAPS) * 0.3
-        want = ssr_stencil1d(x, w)      # default width (cache miss)
+        want = ssr_stencil1d(x, w)      # default schedule (cache miss)
         key = autotune.cache_key(compiler.stencil_nest(n, TAPS),
-                                 {"x": x, "w": w}, mode="map",
+                                 {"x": x, "w": w}, mode="reduce",
                                  out_dtype="float32")
-        tuned_env.put(key, Schedule(lanes=512))
-        from repro.kernels.stencil import _ssr_1d
-
-        _ssr_1d._cache.clear()
-        got = ssr_stencil1d(x, w)       # resolves the 512-wide schedule
-        # the built pipeline was keyed under the committed schedule
         committed = Schedule(lanes=512)
-        assert any(("schedule", committed) in call_key[1]
-                   for (call_key, _interp) in _ssr_1d._cache)
+        tuned_env.put(key, committed)
+        assert _ssr_1d.schedule_for(x, w) == committed
+        got = ssr_stencil1d(x, w)       # resolves the committed schedule
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
     def test_cluster_cores1_stays_bit_identical_after_commit(self, tuned_env):

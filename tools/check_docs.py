@@ -192,6 +192,37 @@ def check_sparse_docs() -> List[str]:
     return problems
 
 
+def check_halo_rescale_docs() -> List[str]:
+    """The §13 waiver burn-down must stay documented: DESIGN.md §13 + the
+    §2 correspondence rows for halo reads and the online-rescaled
+    accumulator, and the README's migrated kernel-table rows (pure-text
+    check, no jax import)."""
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 13\..*[Hh]alo", design, re.MULTILINE):
+        problems.append("DESIGN.md: missing '## 13.' halo/rescale section")
+    for needle in ("MemRef.window", "acc_kind", "online_softmax",
+                   "shifted twin streams", "WAIVER_HOLDOUTS"):
+        if needle not in design:
+            problems.append(f"DESIGN.md: §2 correspondence / §13 does not "
+                            f"mention {needle}")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    for needle in ("stencil_nest", "stencil2d_nest", "attention_nest",
+                   "gemv_nest"):
+        if needle not in readme:
+            problems.append(f"README.md: kernel table row for the migrated "
+                            f"{needle} kernel is missing")
+    for stale in ("waiver: halo overlap", "waiver: online-softmax rescale",
+                  "waiver: whole-row MXU panels",
+                  "waiver: geometry-reuse fusion"):
+        if stale in readme:
+            problems.append(f"README.md: stale waiver row {stale!r} — the "
+                            "kernel is nest-lowered now (DESIGN.md §13)")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -255,6 +286,16 @@ def main(argv=None) -> int:
     else:
         print("indirection-stream docs present (DESIGN.md §12 + "
               "sparse rows)")
+
+    halo_problems = check_halo_rescale_docs()
+    if halo_problems:
+        ok = False
+        print("\nhalo/rescale docs gate:")
+        for p in halo_problems:
+            print(f"  {p}")
+    else:
+        print("halo/rescale docs present (DESIGN.md §13 + migrated "
+              "kernel rows)")
 
     if not args.skip_experiments:
         diff = check_experiments()
