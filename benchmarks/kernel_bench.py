@@ -21,7 +21,7 @@ machine-readable perf trajectory tracked across PRs::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] [--out PATH]
 
-Schema (version 5): ``{"schema": 5, "generated_unix": float, "quick": bool,
+Schema (version 6): ``{"schema": 6, "generated_unix": float, "quick": bool,
 "results": [{"name", "group", "variant", "value", "units", "rows",
 "lanes", "grid", "tuned", "buffer_depth", ...}, ...]}`` — every row
 carries schedule provenance (the block geometry that produced it, the data
@@ -46,11 +46,17 @@ the CSR indirection-stream kernels (spmv, spmm): streamed-vs-baseline
 agreement ≤ 1e-5, Eq. (1)–(3) model speedup > 1, and a non-zero count of
 eliminated index-handling instructions; sparse rows carry problem
 provenance — ``nnz`` and ``density`` of the CSR operand — alongside
-``eliminated_idx_instrs``.
+``eliminated_idx_instrs``.  The ``chaos`` group (v6, run via
+``--chaos-smoke``) injects one fault per resilience seam (cache read,
+lowering, compile) into a dispatch with a committed tuned schedule and
+gates the degradation ladder: the degraded result must agree with the
+healthy one ≤ 1e-5 and the steady-state post-fault path must stay within
+a bounded overhead of the healthy tuned path.
 
 Each run also appends one summary line to ``BENCH_history.jsonl`` (date,
-git sha, per-kernel speedups, committed dag cuts) — the cheap
-longitudinal record raced across PRs without diffing full artifacts.
+git sha, per-kernel speedups, committed dag cuts, and a ``degraded``
+resilience summary — zero in healthy runs) — the cheap longitudinal
+record raced across PRs without diffing full artifacts.
 """
 
 from __future__ import annotations
@@ -88,7 +94,11 @@ RNG = np.random.default_rng(0)
 #: rows carry ``nnz``/``density`` problem provenance and the model rows
 #: additionally ``eliminated_idx_instrs`` — the per-nnz index loads +
 #: pointer arithmetic the indirect AGU removes from the hot loop.
-BENCH_SCHEMA = 5
+#: v6: adds the gated ``chaos`` group (``--chaos-smoke``): per-seam
+#: degraded-vs-healthy agreement and steady-state overhead rows, and the
+#: history line's ``degraded`` resilience summary (fallback/degraded
+#: dispatch counters + structured fallback-event count).
+BENCH_SCHEMA = 6
 
 
 def _row(name: str, group: str, variant: str, value: float, units: str,
@@ -1166,6 +1176,137 @@ def validate_autotune_json(path: str) -> None:
 
 
 # --------------------------------------------------------------------------
+# Chaos smoke: degraded dispatch must stay correct and bounded
+# --------------------------------------------------------------------------
+
+#: The dispatch seams the chaos smoke injects into.  ``cache.write`` and
+#: ``measure`` are autotune-side seams with no dispatch-path effect, so
+#: the exhaustive sweep for those lives in ``tests/test_resilience.py``.
+CHAOS_SEAMS = ("cache.read", "lowering", "compile")
+CHAOS_AGREEMENT_TOL = 1e-5
+#: Steady-state post-fault dispatch (default schedule after quarantine, or
+#: tuned again after a transient cache-read miss) vs the healthy tuned
+#: path.  Generous: both are jitted XLA paths, the bound only has to catch
+#: a degradation ladder that re-lowers or re-compiles on every call.
+CHAOS_OVERHEAD_X = 25.0
+
+
+def bench_chaos(quick: bool = False) -> List[Dict]:
+    """Inject one fault per dispatch seam and gate the degradation ladder.
+
+    For each seam in :data:`CHAOS_SEAMS`: commit a tuned schedule, arm a
+    one-shot fault, dispatch, and require (hard failures, exit 1):
+
+    * the faulted dispatch still returns — degraded, never dead — and its
+      result agrees with the healthy tuned result ≤ 1e-5;
+    * the fault actually fired and was absorbed by the matching ladder
+      rung (lookup fallback for ``cache.read``; quarantine + default
+      re-dispatch for ``lowering``/``compile``), visible in
+      ``DISPATCH_STATS`` and the structured fallback log;
+    * after the fault drains, steady-state dispatch stays within
+      :data:`CHAOS_OVERHEAD_X` of the healthy tuned path — degradation
+      may not leave the dispatcher re-lowering forever.
+    """
+    from repro.core import autotune, compiler, lowering, resilience
+    from repro.kernels import frontend
+
+    n = 2048 if quick else 8192
+    nest = compiler.dot_product_nest(n)
+    x = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    y = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    operands = {"A": x, "B": y}
+
+    def call():
+        return lowering.ssr_call(nest, lambda a, b: a * b, operands,
+                                 mode="reduce")
+
+    tuned = Schedule(rows=16)
+    cache = autotune.global_cache()
+    key = autotune.cache_key(nest, operands, mode="reduce",
+                             out_dtype="float32")
+    iters = 3 if quick else 5
+
+    resilience.reset()
+    lowering.reset_dispatch_stats()
+    frontend.reset_dispatch_stats()
+    cache.put(key, tuned)
+    lowering.clear_caches()
+    healthy = np.asarray(call())
+    t_healthy = _time(call, warmup=1, iters=iters)
+
+    rows: List[Dict] = []
+    print("\n== chaos smoke: one injected fault per dispatch seam ==")
+    for seam in CHAOS_SEAMS:
+        # restore a healthy tuned entry and cold kernel caches so the
+        # seam is actually on this dispatch's path
+        cache.invalidate(key)
+        cache.put(key, tuned)
+        lowering.clear_caches()
+        before = dict(lowering.DISPATCH_STATS)
+        n_events = len(resilience.fallback_events())
+        with resilience.inject_faults(seam) as specs:
+            degraded_out = np.asarray(call())
+        stats = lowering.DISPATCH_STATS
+        # relative: different schedules reduce in different orders, so the
+        # honest float32 agreement scale is the result's own magnitude
+        diff = float(np.max(np.abs(degraded_out - healthy))
+                     / max(1.0, float(np.max(np.abs(healthy)))))
+        counter = "fallbacks" if seam == "cache.read" else "degraded"
+        if specs[0].fired != 1:
+            print(f"FAIL chaos/{seam}: fault never fired — the seam is "
+                  "not on the dispatch path", file=sys.stderr)
+            raise SystemExit(1)
+        if stats[counter] != before[counter] + 1:
+            print(f"FAIL chaos/{seam}: {counter!r} counter did not "
+                  f"advance ({before[counter]} -> {stats[counter]})",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        if len(resilience.fallback_events()) <= n_events:
+            print(f"FAIL chaos/{seam}: no structured FallbackEvent "
+                  "recorded", file=sys.stderr)
+            raise SystemExit(1)
+        if diff > CHAOS_AGREEMENT_TOL:
+            print(f"FAIL chaos/{seam}: degraded result disagrees with "
+                  f"healthy by {diff:.2e} > {CHAOS_AGREEMENT_TOL}",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        # fault drained (one-shot): steady state must be bounded
+        t_degraded = _time(call, warmup=1, iters=iters)
+        overhead = t_degraded / t_healthy
+        if overhead > CHAOS_OVERHEAD_X:
+            print(f"FAIL chaos/{seam}: steady-state degraded dispatch "
+                  f"{overhead:.1f}x healthy > {CHAOS_OVERHEAD_X}x",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"chaos/{seam:12s} agreement {diff:.1e}  steady-state "
+              f"overhead {overhead:4.2f}x  ladder rung {counter}")
+        rows.append(_row(f"chaos/{seam}", "chaos", "agreement", diff,
+                         "max_rel_diff", seam=seam, ladder=counter))
+        rows.append(_row(f"chaos/{seam}", "chaos", "overhead", overhead,
+                         "x_healthy", seam=seam, ladder=counter))
+    return rows
+
+
+def validate_chaos_rows(results: Sequence[Dict]) -> None:
+    """The chaos acceptance gate, re-applied to persisted rows."""
+    chaos = {(r["name"].split("/")[1], r["variant"]): r
+             for r in results if r.get("group") == "chaos"}
+    for seam in CHAOS_SEAMS:
+        agree = chaos.get((seam, "agreement"))
+        over = chaos.get((seam, "overhead"))
+        if agree is None or over is None:
+            raise ValueError(f"no chaos rows for seam {seam!r}")
+        if agree["value"] > CHAOS_AGREEMENT_TOL:
+            raise ValueError(
+                f"chaos/{seam}: degraded disagreement {agree['value']} > "
+                f"{CHAOS_AGREEMENT_TOL}")
+        if over["value"] > CHAOS_OVERHEAD_X:
+            raise ValueError(
+                f"chaos/{seam}: steady-state overhead {over['value']} > "
+                f"{CHAOS_OVERHEAD_X}")
+
+
+# --------------------------------------------------------------------------
 # Longitudinal record: BENCH_history.jsonl (one summary line per run)
 # --------------------------------------------------------------------------
 
@@ -1207,6 +1348,20 @@ def append_bench_history(rows: Sequence[Dict], path: str,
                   "eliminated_idx_instrs": r["eliminated_idx_instrs"]}
               for r in rows
               if r.get("group") == "sparse" and r.get("variant") == "model"}
+    # v6: resilience summary — how often this run's dispatches degraded.
+    # Zero across the board in a healthy run; non-zero under --chaos-smoke
+    # or an ambient REPRO_FAULTS matrix, where it records that the
+    # degradation ladder (not a crash) absorbed the faults.
+    from repro.core import lowering as _lowering
+    from repro.core import resilience as _resilience
+    from repro.kernels import frontend as _frontend
+    degraded = {
+        "fallbacks": int(_lowering.DISPATCH_STATS["fallbacks"]
+                         + _frontend.DISPATCH_STATS["fallbacks"]),
+        "degraded": int(_lowering.DISPATCH_STATS["degraded"]
+                        + _frontend.DISPATCH_STATS["degraded"]),
+        "events": len(_resilience.fallback_events()),
+    }
     entry = {
         "schema": BENCH_SCHEMA,
         "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -1217,11 +1372,13 @@ def append_bench_history(rows: Sequence[Dict], path: str,
         "speedups": speedups,
         "dag_cuts": dag_cuts,
         "sparse": sparse,
+        "degraded": degraded,
     }
     with open(path, "a") as f:
         f.write(json.dumps(entry, sort_keys=True) + "\n")
     print(f"appended run summary to {path} ({len(speedups)} speedups, "
-          f"{len(dag_cuts)} dag cuts, {len(sparse)} sparse gates)")
+          f"{len(dag_cuts)} dag cuts, {len(sparse)} sparse gates, "
+          f"{degraded['degraded']} degraded dispatches)")
     return entry
 
 
@@ -1275,6 +1432,23 @@ def validate_bench_history(path: str) -> int:
                         raise ValueError(
                             f"{path}:{lineno}: sparse summary for {kern!r} "
                             "missing integer nnz")
+            # v6 lines must carry the resilience summary; older lines
+            # (1–5) legitimately lack it, so below v6 it is
+            # optional-but-typed
+            if entry["schema"] >= 6 and "degraded" not in entry:
+                raise ValueError(
+                    f"{path}:{lineno}: schema-{entry['schema']} line "
+                    "missing 'degraded' resilience summary")
+            if "degraded" in entry:
+                deg = entry["degraded"]
+                if not isinstance(deg, dict):
+                    raise ValueError(
+                        f"{path}:{lineno}: degraded summary is not a dict")
+                for field in ("fallbacks", "degraded", "events"):
+                    if not isinstance(deg.get(field), int):
+                        raise ValueError(
+                            f"{path}:{lineno}: degraded summary "
+                            f"missing/mistyped integer {field!r}")
             count += 1
     if count == 0:
         raise ValueError(f"{path}: empty history")
@@ -1315,11 +1489,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--dag-only", action="store_true",
                     help="run only the fused-DAG cut search + gate "
                          "(the CI bench-smoke dag leg)")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="run only the fault-injection chaos gate: one "
+                         "injected fault per dispatch seam, degraded "
+                         "result must agree with healthy and stay within "
+                         "bounded overhead (the CI chaos-smoke job)")
     ap.add_argument("--history", default="BENCH_history.jsonl",
                     help="per-run summary JSONL (default: %(default)s); "
                          "'' disables")
     args = ap.parse_args(argv)
     isolate_schedule_cache()
+
+    if args.chaos_smoke:
+        rows = bench_chaos(quick=args.quick)
+        write_bench_json(rows, args.out, args.quick, subset="chaos")
+        validate_chaos_rows(rows)
+        if args.history:
+            append_bench_history(rows, args.history, args.quick)
+            validate_bench_history(args.history)
+        return 0
 
     if args.autotune_only:
         rows = bench_autotune(quick=args.quick)

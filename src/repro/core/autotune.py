@@ -51,7 +51,7 @@ import time
 import numpy as np
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from . import nest_analysis
+from . import nest_analysis, resilience
 from .compiler import ChainDAG, LoopNest, _fused_region_count, ssrify
 from .lowering import (DEFAULT_SCHEDULE, LoweredChain, LoweredNest,
                        LoweredPlan, LoweringError, Schedule, _plan_for)
@@ -165,19 +165,43 @@ def cache_key(nest: LoopNest, operands: Dict[str, Any], *,
 # --------------------------------------------------------------------------
 
 
+#: Sentinel for "generation never observed" — the first probe adopts the
+#: on-disk token silently instead of spuriously invalidating local state.
+_GEN_UNSET = object()
+
+#: Bounded retry budget for transient I/O on the commit path.
+_PUT_ATTEMPTS = 3
+
+
 class ScheduleCache:
     """On-disk schedule store with an in-memory LRU in front.
 
     One JSON file per key under ``path`` (atomic tmp+rename writes), so
     concurrent tuners never corrupt each other's entries and per-key
-    invalidation is an unlink.  Misses (including version-mismatched or
-    unreadable files) return ``None`` and are negative-cached **per
-    epoch**: the transparent-dispatch hot path (``ssr_call`` with
-    ``schedule=None``) probes on every call, and a filesystem miss per
-    kernel invocation would tax exactly the path this layer exists to
-    speed up.  Any commit/invalidate in this process bumps the epoch and
-    re-probes; a tuner committing from *another* process becomes visible
-    after the next local epoch bump (or restart).
+    invalidation is an unlink.  Misses return ``None`` and are
+    negative-cached **per epoch**: the transparent-dispatch hot path
+    (``ssr_call`` with ``schedule=None``) probes on every call, and a
+    filesystem miss per kernel invocation would tax exactly the path this
+    layer exists to speed up.
+
+    **Cross-process visibility.** Any commit/invalidate/quarantine —
+    local *or* from another process — must bust stale negative-cache
+    entries.  The local path bumps ``_EPOCH`` directly; cross-process
+    changes are detected by stat'ing one ``GENERATION`` file every
+    writer touches (atomic replace, so the (inode, mtime_ns) token
+    changes on every write): when the token moves, the in-memory
+    positive + negative caches drop and the epoch bumps, so
+    built-pipeline caches keyed on :func:`epoch` rebuild too.  Cost on
+    the hot path: one ``os.stat``.
+
+    **Crash safety.** Torn/truncated/garbage/version-skewed entry files
+    are treated as misses AND quarantined — renamed to
+    ``<key>.json.corrupt`` (counted in :attr:`stats`) so they cannot
+    shadow a later healthy commit; a subsequent :meth:`put` recovers the
+    key.  Commits retry transient ``OSError`` with jittered backoff
+    (bounded — see :func:`repro.core.resilience.retry`) and never leave
+    a ``.tmp`` behind.  The ``cache.read``/``cache.write`` fault seams
+    fire here.
     """
 
     def __init__(self, path: Optional[str] = None, max_entries: int = 256):
@@ -186,45 +210,148 @@ class ScheduleCache:
         self._mem: "collections.OrderedDict[str, Schedule]" = \
             collections.OrderedDict()
         self._miss: Dict[str, int] = {}   # key -> epoch of the probed miss
+        self._last_gen: Any = _GEN_UNSET  # last observed GENERATION token
+        self.stats: Dict[str, int] = {"hits": 0, "misses": 0,
+                                      "quarantined": 0, "retries": 0,
+                                      "generation_busts": 0}
 
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"{key}.json")
+
+    def _gen_file(self) -> str:
+        return os.path.join(self.path, "GENERATION")
+
+    def _disk_generation(self) -> Optional[Tuple[int, int]]:
+        """Cheap change token of the cache dir: (inode, mtime_ns) of the
+        GENERATION file, ``None`` while no writer has touched it yet.
+        Every touch goes through an atomic replace, so the inode alone
+        already changes per write — mtime_ns is belt and braces."""
+        try:
+            st = os.stat(self._gen_file())
+        except OSError:
+            return None
+        return (st.st_ino, st.st_mtime_ns)
+
+    def _touch_generation(self) -> None:
+        """Advance the cross-process change token (atomic, retried)."""
+        def _write() -> None:
+            os.makedirs(self.path, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(f"{os.getpid()}:{time.time_ns()}\n")
+                os.replace(tmp, self._gen_file())
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+        try:
+            resilience.retry(_write, attempts=_PUT_ATTEMPTS,
+                             on_retry=self._count_retry)
+        except OSError:
+            # the token is an optimisation for OTHER processes' negative
+            # caches; local state is already correct, so a sick filesystem
+            # must not fail the commit that just landed
+            pass
+        self._last_gen = self._disk_generation()
+        self._miss.clear()
+
+    def _count_retry(self, attempt: int, error: BaseException) -> None:
+        self.stats["retries"] += 1
+
+    def _sync_generation(self) -> None:
+        """Adopt the on-disk token; on change, drop local caches so a
+        commit/invalidate from another process becomes visible NOW (not
+        after an unrelated local epoch bump — the staleness hole this
+        probe closes)."""
+        gen = self._disk_generation()
+        if self._last_gen is _GEN_UNSET:
+            self._last_gen = gen
+            return
+        if gen != self._last_gen:
+            self._last_gen = gen
+            self._miss.clear()
+            self._mem.clear()
+            self.stats["generation_busts"] += 1
+            _bump_epoch()
 
     def _note_miss(self, key: str) -> None:
         if len(self._miss) >= 4096:
             self._miss.clear()
         self._miss[key] = _EPOCH
 
+    def quarantine(self, key: str) -> bool:
+        """Sideline one entry as poisoned: rename to ``.json.corrupt``
+        (forensics survive; the key reads as a miss), negative-cache it,
+        and advance the generation token so other processes re-probe.
+        Returns True if a disk file was actually sidelined."""
+        self._mem.pop(key, None)
+        sidelined = False
+        try:
+            os.replace(self._file(key), self._file(key) + ".corrupt")
+            sidelined = True
+        except OSError:
+            try:
+                os.unlink(self._file(key))
+                sidelined = True
+            except OSError:
+                pass
+        if sidelined:
+            self.stats["quarantined"] += 1
+            self._touch_generation()
+        _bump_epoch()
+        self._note_miss(key)
+        return sidelined
+
     def get(self, key: str) -> Optional[Schedule]:
+        resilience.inject("cache.read")
+        self._sync_generation()
         hit = self._mem.get(key)
         if hit is not None:
             self._mem.move_to_end(key)
+            self.stats["hits"] += 1
             return hit
         if self._miss.get(key) == _EPOCH:
+            self.stats["misses"] += 1
             return None
         try:
             with open(self._file(key)) as f:
                 doc = json.load(f)
-        except (OSError, ValueError):
+        except OSError:                  # absent file: a plain miss
             self._note_miss(key)
+            self.stats["misses"] += 1
+            return None
+        except ValueError:               # torn/garbage JSON: quarantine
+            self.quarantine(key)
+            self.stats["misses"] += 1
             return None
         if doc.get("version") != SCHEDULE_CACHE_VERSION:
-            self._note_miss(key)
+            self.quarantine(key)         # version skew: never mis-parse
+            self.stats["misses"] += 1
             return None
         try:
             sched = Schedule.from_json(doc["schedule"])
         except (KeyError, TypeError, ValueError):
-            self._note_miss(key)
+            self.quarantine(key)
+            self.stats["misses"] += 1
             return None
         self._remember(key, sched)
+        self.stats["hits"] += 1
         return sched
 
     def meta(self, key: str) -> Optional[Dict[str, Any]]:
         """The full stored document (schedule + provenance), or ``None``."""
+        resilience.inject("cache.read")
         try:
             with open(self._file(key)) as f:
                 doc = json.load(f)
-        except (OSError, ValueError):
+        except OSError:
+            return None
+        except ValueError:
+            self.quarantine(key)
             return None
         return doc if doc.get("version") == SCHEDULE_CACHE_VERSION else None
 
@@ -235,20 +362,30 @@ class ScheduleCache:
                "committed_unix": time.time()}
         if meta:
             doc["meta"] = meta
-        os.makedirs(self.path, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(doc, f, indent=1, sort_keys=True)
-            os.replace(tmp, self._file(key))
-        except BaseException:
+
+        def _write() -> None:
+            resilience.inject("cache.write")
+            os.makedirs(self.path, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, self._file(key))
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+        # transient OSError (full disk blip, NFS hiccup, injected
+        # cache.write:oserror) is retried with jittered backoff; a typed
+        # InjectedFault or a persistent failure propagates to the caller,
+        # who degrades gracefully (see autotune()'s commit)
+        resilience.retry(_write, attempts=_PUT_ATTEMPTS,
+                         on_retry=self._count_retry)
         self._remember(key, schedule)
-        self._miss.pop(key, None)
+        self._touch_generation()
         _bump_epoch()
 
     def invalidate(self, key: str) -> bool:
@@ -261,6 +398,7 @@ class ScheduleCache:
         except OSError:
             pass
         if dropped:
+            self._touch_generation()
             _bump_epoch()
         return dropped
 
@@ -280,6 +418,7 @@ class ScheduleCache:
                     n += 1
                 except OSError:
                     pass
+        self._touch_generation()
         _bump_epoch()
         return n
 
@@ -712,7 +851,15 @@ def rank_candidates(nest: LoopNest, candidates: Sequence[Schedule], *,
 
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
-    """Outcome of one autotune run (or cache hit)."""
+    """Outcome of one autotune run (or cache hit).
+
+    ``degraded`` marks a run whose measurement phase hit a typed
+    infrastructure failure and fell back to the default schedule without
+    committing; ``committed`` is False when the winner was measured fine
+    but the cache commit itself failed (the winner is still returned and
+    used this process); ``stragglers`` counts timing samples the
+    :class:`~repro.runtime.fault.StragglerMonitor` flagged and re-raced.
+    """
 
     key: str
     schedule: Schedule
@@ -721,6 +868,9 @@ class TuneResult:
     candidates: int
     measured: int
     from_cache: bool = False
+    degraded: bool = False
+    committed: bool = True
+    stragglers: int = 0
 
     @property
     def speedup(self) -> float:
@@ -740,7 +890,9 @@ def autotune(nest: LoopNest, body: Callable, operands: Dict[str, Any], *,
              top_k: int = 8, warmup: int = 1, iters: int = 3,
              cores: int = 1,
              cache: Optional[ScheduleCache] = None,
-             use_cache: bool = True, force: bool = False) -> TuneResult:
+             use_cache: bool = True, force: bool = False,
+             clock: Optional[Callable[[], float]] = None,
+             straggler: Optional[Any] = None) -> TuneResult:
     """Search → prune → measure → commit the winning schedule.
 
     ``call(schedule)`` executes the kernel under one candidate; the default
@@ -751,6 +903,17 @@ def autotune(nest: LoopNest, body: Callable, operands: Dict[str, Any], *,
     same machinery.  The default schedule is always among the measured
     survivors, so the committed winner is never slower than the default
     *as measured* — the gate ``benchmarks/kernel_bench.py`` re-checks.
+
+    **Straggler-hardened measurement**: every timed sample passes through
+    a :class:`~repro.runtime.fault.StragglerMonitor` (injectable via
+    ``straggler``; ``clock`` is the injectable time source, mirroring
+    ``Supervisor.clock``).  A flagged sample — a GC pause, a noisy
+    neighbour, an injected clock skew — is re-raced immediately instead
+    of entering the race, so one poisoned timing cannot commit a
+    slower-than-default winner.  A typed infrastructure failure during
+    measurement (the ``measure`` seam) degrades the run to the default
+    schedule without committing; a failed cache commit is recorded and
+    tolerated (the measured winner still serves this process).
 
     A cache hit short-circuits everything unless ``force=True``.
     """
@@ -787,31 +950,78 @@ def autotune(nest: LoopNest, body: Callable, operands: Dict[str, Any], *,
     # equally instead of biasing whichever was measured last.
     import jax
 
+    clock = clock or time.perf_counter
+    monitor = straggler
+    if monitor is None:
+        from repro.runtime.fault import StragglerMonitor
+
+        # warmup = the first full round, so the baseline mixes every
+        # candidate's step time before any sample can be flagged
+        monitor = StragglerMonitor(warmup_steps=len(survivors))
+    sample = 0
+    stragglers = 0
+
+    def _timed(sched: Schedule) -> float:
+        nonlocal sample, stragglers
+        resilience.inject("measure")
+        t0 = clock()
+        jax.block_until_ready(jax.tree.leaves(call(sched)))
+        dt = clock() - t0
+        if monitor.observe(sample, dt):
+            # poisoned sample: re-race once rather than let a transient
+            # stall decide (or distort) the committed winner
+            stragglers += 1
+            sample += 1
+            resilience.inject("measure")
+            t0 = clock()
+            jax.block_until_ready(jax.tree.leaves(call(sched)))
+            dt = clock() - t0
+        sample += 1
+        return dt
+
     best = [float("inf")] * len(survivors)
-    for _ in range(max(0, warmup)):
-        for sched in survivors:
-            jax.block_until_ready(jax.tree.leaves(call(sched)))
-    for _ in range(max(1, iters)):
-        for i, sched in enumerate(survivors):
-            t0 = time.perf_counter()
-            jax.block_until_ready(jax.tree.leaves(call(sched)))
-            best[i] = min(best[i], time.perf_counter() - t0)
+    try:
+        for _ in range(max(0, warmup)):
+            for sched in survivors:
+                jax.block_until_ready(jax.tree.leaves(call(sched)))
+        for _ in range(max(1, iters)):
+            for i, sched in enumerate(survivors):
+                best[i] = min(best[i], _timed(sched))
+    except resilience.fallback_error_types() as e:
+        resilience.record_fallback(
+            seam=resilience.classify(e), site="autotune", error=e,
+            from_schedule="measure", to_schedule="default", key=key)
+        return TuneResult(key=key, schedule=DEFAULT_SCHEDULE, tuned_us=0.0,
+                          default_us=0.0, candidates=len(cands), measured=0,
+                          degraded=True, committed=False,
+                          stragglers=stragglers)
     timings = [(us * 1e6, i, sched)
                for i, (us, sched) in enumerate(zip(best, survivors))]
     default_us = next(us for us, _, s in timings if s == DEFAULT_SCHEDULE)
     tuned_us, _, winner = min(timings)
 
+    committed = False
     if cache is not None:
-        cache.put(key, winner, meta={
-            "tuned_us": tuned_us, "default_us": default_us,
-            "candidates": len(cands), "measured": len(survivors),
-            "nest": nest_signature(nest), "mode": mode,
-            "out_dtype": str(out_dtype), "cores": cores,
-            "backend": _backend(),
-        })
+        try:
+            cache.put(key, winner, meta={
+                "tuned_us": tuned_us, "default_us": default_us,
+                "candidates": len(cands), "measured": len(survivors),
+                "stragglers": stragglers,
+                "nest": nest_signature(nest), "mode": mode,
+                "out_dtype": str(out_dtype), "cores": cores,
+                "backend": _backend(),
+            })
+            committed = True
+        except resilience.fallback_error_types() as e:
+            # the winner is still valid for this process; only the
+            # persistence failed — record it, don't crash the tuner
+            resilience.record_fallback(
+                seam=resilience.classify(e), site="autotune", error=e,
+                from_schedule="winner", to_schedule="uncommitted", key=key)
     return TuneResult(key=key, schedule=winner, tuned_us=tuned_us,
                       default_us=default_us, candidates=len(cands),
-                      measured=len(survivors))
+                      measured=len(survivors), committed=committed,
+                      stragglers=stragglers)
 
 
 def invalidate(nest: LoopNest, operands: Dict[str, Any], *,
@@ -823,6 +1033,39 @@ def invalidate(nest: LoopNest, operands: Dict[str, Any], *,
     return cache.invalidate(
         cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
                   cores=cores))
+
+
+def quarantine(nest: LoopNest, operands: Dict[str, Any], *,
+               mode: str = "reduce", out_dtype: str = "float32",
+               cores: int = 1,
+               cache: Optional[ScheduleCache] = None) -> str:
+    """Sideline the committed schedule for one tuning problem.
+
+    Dispatch calls this when a *tuned* schedule fails to lower or compile:
+    the entry is renamed to ``.corrupt`` (invalidate + negative-cache +
+    cross-process generation bump), so the poisoned winner cannot be
+    served again while the default schedule carries the traffic.  Returns
+    the quarantined key.
+    """
+    cache = cache or global_cache()
+    key = cache_key(nest, operands, mode=mode, out_dtype=str(out_dtype),
+                    cores=cores)
+    cache.quarantine(key)
+    return key
+
+
+def quarantine_dag(nests: Sequence[LoopNest], operands: Dict[str, Any], *,
+                   mode: str = "map", out_dtype: str = "float32",
+                   cores: int = 1,
+                   cache: Optional[ScheduleCache] = None,
+                   uniforms: Optional[Dict[str, Any]] = None) -> str:
+    """DAG-keyed twin of :func:`quarantine` for ``ssr_dag_call`` dispatch."""
+    cache = cache or global_cache()
+    key = dag_cache_key(nests, operands, mode=mode,
+                        out_dtype=str(out_dtype), cores=cores,
+                        uniforms=uniforms)
+    cache.quarantine(key)
+    return key
 
 
 # --------------------------------------------------------------------------
@@ -1021,28 +1264,44 @@ def autotune_dag(nests: Sequence[LoopNest], bodies: Sequence[Callable],
                             uniforms=uniforms)
 
     best = [float("inf")] * len(survivors)
-    for _ in range(max(0, warmup)):
-        for cut in survivors:
-            jax.block_until_ready(jax.tree.leaves(call(cut)))
-    for _ in range(max(1, iters)):
-        for i, cut in enumerate(survivors):
-            t0 = time.perf_counter()
-            jax.block_until_ready(jax.tree.leaves(call(cut)))
-            best[i] = min(best[i], time.perf_counter() - t0)
+    try:
+        for _ in range(max(0, warmup)):
+            for cut in survivors:
+                jax.block_until_ready(jax.tree.leaves(call(cut)))
+        for _ in range(max(1, iters)):
+            for i, cut in enumerate(survivors):
+                resilience.inject("measure")
+                t0 = time.perf_counter()
+                jax.block_until_ready(jax.tree.leaves(call(cut)))
+                best[i] = min(best[i], time.perf_counter() - t0)
+    except resilience.fallback_error_types() as e:
+        resilience.record_fallback(
+            seam=resilience.classify(e), site="autotune_dag", error=e,
+            from_schedule="measure", to_schedule="default", key=key)
+        return TuneResult(key=key, schedule=DEFAULT_SCHEDULE, tuned_us=0.0,
+                          default_us=0.0, candidates=len(legal), measured=0,
+                          degraded=True, committed=False)
     timings = [(us * 1e6, cut) for us, cut in zip(best, survivors)]
     fused_us = next((us for us, c in timings if c == ()), float("inf"))
     tuned_us, winner_cut = min(timings, key=lambda t: (t[0], t[1]))
     winner = dataclasses.replace(DEFAULT_SCHEDULE, cut_edges=winner_cut)
 
+    committed = False
     if cache is not None:
-        cache.put(key, winner, meta={
-            "tuned_us": tuned_us, "default_us": fused_us,
-            "candidates": len(legal), "measured": len(survivors),
-            "dag": [nest_signature(n) for n in nests],
-            "edges": len(dag.edges), "cut_edges": list(winner_cut),
-            "mode": mode, "out_dtype": str(out_dtype), "cores": cores,
-            "backend": _backend(),
-        })
+        try:
+            cache.put(key, winner, meta={
+                "tuned_us": tuned_us, "default_us": fused_us,
+                "candidates": len(legal), "measured": len(survivors),
+                "dag": [nest_signature(n) for n in nests],
+                "edges": len(dag.edges), "cut_edges": list(winner_cut),
+                "mode": mode, "out_dtype": str(out_dtype), "cores": cores,
+                "backend": _backend(),
+            })
+            committed = True
+        except resilience.fallback_error_types() as e:
+            resilience.record_fallback(
+                seam=resilience.classify(e), site="autotune_dag", error=e,
+                from_schedule="winner", to_schedule="uncommitted", key=key)
     return TuneResult(key=key, schedule=winner, tuned_us=tuned_us,
                       default_us=fused_us, candidates=len(legal),
-                      measured=len(survivors))
+                      measured=len(survivors), committed=committed)

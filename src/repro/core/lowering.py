@@ -59,6 +59,7 @@ import jax.numpy as jnp
 
 from . import agu
 from . import nest_analysis
+from . import resilience
 from .compiler import (Allocation, ChainDAG, ChainedPlan, LoopNest,
                        StreamPlan, _dense_strides, chain, chain_dag, ssrify)
 from .ssr import BlockStream, auto_block, ssr_pallas
@@ -399,6 +400,7 @@ def lower_plan(plan: StreamPlan,
     only its block geometry — ``axis_order`` permutes *loop levels*, which
     this path has already flattened, so a non-``None`` order is rejected.
     """
+    resilience.inject("lowering")
     sched = _resolve_schedule(policy, schedule)
     if sched.axis_order is not None:
         raise LoweringError(
@@ -819,6 +821,7 @@ def lower_nest(plan: StreamPlan,
     the per-level tile targets, the grid-axis order (parallel axes may
     permute; contraction axes stay trailing) and the accumulator dtype.
     """
+    resilience.inject("lowering")
     sched = _resolve_schedule(policy, schedule)
     policy = sched.policy
     nest = plan.nest
@@ -1009,6 +1012,7 @@ def lower_chain(chained, policy: BlockPolicy = DEFAULT_POLICY, *,
     :class:`LoweringError` — the word-granular chaining hardware could
     stagger streams, whole-block fusion cannot.
     """
+    resilience.inject("lowering")
     sched = _resolve_schedule(policy, schedule)
     if sched.axis_order is not None:
         raise LoweringError(
@@ -1115,8 +1119,25 @@ _PLAN_CACHES = (_plan_for, plan_stats, _chain_for, _dag_for, _lowered_for,
 #: (incremented *inside* the traced function, so it only moves when XLA
 #: re-traces), ``calls`` counts ``ssr_call``/``ssr_chain_call`` entries.
 #: A second identical call must move ``calls`` only — that is the
-#: zero-overhead-dispatch contract the tests assert.
-DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0}
+#: zero-overhead-dispatch contract the tests assert.  The resilience
+#: family: ``fallbacks`` counts schedule lookups abandoned for the
+#: default (cache I/O fault before any kernel was built), ``degraded``
+#: counts committed tuned schedules that failed to lower/compile/run and
+#: were quarantined + re-dispatched on the default schedule.  Healthy
+#: runs keep both at zero.
+DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0,
+                                  "fallbacks": 0, "degraded": 0}
+
+
+def _record_fallback(site: str, error: BaseException, *,
+                     from_schedule: str, to_schedule: str,
+                     key: Optional[str] = None,
+                     counter: str = "fallbacks") -> None:
+    """Count + log one degradation step (see ``core/resilience.py``)."""
+    DISPATCH_STATS[counter] += 1
+    resilience.record_fallback(seam=resilience.classify(error), site=site,
+                               error=error, from_schedule=from_schedule,
+                               to_schedule=to_schedule, key=key)
 
 
 def reset_dispatch_stats() -> None:
@@ -1828,12 +1849,22 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
     resolves the same winner for the same problem, so they stay
     bit-identical to each other before and after a tuner commit.
     """
+    tuned_key: Optional[str] = None
     if schedule is None and policy is DEFAULT_POLICY:
         from . import autotune as _autotune
 
-        schedule = _autotune.lookup(nest, operands, mode=mode,
-                                    out_dtype=str(jnp.dtype(out_dtype)))
-    sched = _resolve_schedule(policy, schedule)
+        try:
+            schedule = _autotune.lookup(nest, operands, mode=mode,
+                                        out_dtype=str(jnp.dtype(out_dtype)))
+        except resilience.fallback_error_types() as e:
+            _record_fallback("ssr_call", e, from_schedule="tuned-lookup",
+                             to_schedule="default")
+            schedule = DEFAULT_SCHEDULE
+        else:
+            if schedule != DEFAULT_SCHEDULE:
+                tuned_key = _autotune.cache_key(
+                    nest, operands, mode=mode,
+                    out_dtype=str(jnp.dtype(out_dtype)))
     num_lanes = nest_analysis.auto_lanes(nest, num_lanes)
     plan = _plan_for(nest, num_lanes)
     has_output = any(r.kind == Direction.WRITE for r in nest.refs)
@@ -1844,50 +1875,68 @@ def ssr_call(nest: LoopNest, body: Callable[..., jax.Array],
         raise LoweringError(
             "uniform operands are not supported on the level-mapped "
             "(explicit WRITE ref) path; use a map/reduce nest")
-    lowered = _lowered_for(plan, sched, has_output)
-    gathers = lowered.gathers if has_output else ()
-    missing = [s.name for s in lowered.in_streams if s.name not in operands]
-    missing += [g.name for g in gathers if g.name not in operands]
-    if missing:
-        raise ValueError(f"missing operands for streams {missing}")
-    arrays = [operands[s.name] for s in lowered.in_streams]
-    # Gather tables travel after the streamed operands, normalised to the
-    # ≥2-D VMEM view their invariant block addresses.
-    tables = [jnp.reshape(operands[g.name],
-                          _table_view_shape(tuple(operands[g.name].shape)))
-              for g in gathers]
-
     DISPATCH_STATS["calls"] += 1
-    key = (nest, sched, mode, _body_key(body), str(jnp.dtype(out_dtype)),
-           tuple((tuple(a.shape), str(a.dtype)) for a in arrays + tables),
-           _uniform_sig(uni), num_lanes, interpret)
-    fn = _kernel_cache_get(key)
-    if fn is None:
-        if has_output:
-            kernel = _build_nest_kernel(
-                lowered, body, jnp.dtype(out_dtype), interpret,
-                tables=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
-                             for a in tables))
-        else:
-            kernel = _build_kernel(
-                lowered, body, mode, jnp.dtype(out_dtype), interpret,
-                uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
-                               for _, a in uni))
 
-        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
-            DISPATCH_STATS["traces"] += 1   # moves only while tracing
-            ns = len(_lowered.in_streams)
-            prepared = [s.prepare(a)
-                        for s, a in zip(_lowered.in_streams, arrs[:ns])]
-            out = _kernel(*prepared, *arrs[ns:])
+    def _dispatch(sched: Schedule) -> jax.Array:
+        lowered = _lowered_for(plan, sched, has_output)
+        gathers = lowered.gathers if has_output else ()
+        missing = [s.name for s in lowered.in_streams
+                   if s.name not in operands]
+        missing += [g.name for g in gathers if g.name not in operands]
+        if missing:
+            raise ValueError(f"missing operands for streams {missing}")
+        arrays = [operands[s.name] for s in lowered.in_streams]
+        # Gather tables travel after the streamed operands, normalised to
+        # the ≥2-D VMEM view their invariant block addresses.
+        tables = [jnp.reshape(operands[g.name],
+                              _table_view_shape(tuple(operands[g.name]
+                                                      .shape)))
+                  for g in gathers]
+        key = (nest, sched, mode, _body_key(body), str(jnp.dtype(out_dtype)),
+               tuple((tuple(a.shape), str(a.dtype)) for a in arrays + tables),
+               _uniform_sig(uni), num_lanes, interpret)
+        fn = _kernel_cache_get(key)
+        if fn is None:
             if has_output:
-                return _trim_nest_output(out, _lowered)
-            return _trim_output(out, nest.bounds, mode, sched.policy)
+                kernel = _build_nest_kernel(
+                    lowered, body, jnp.dtype(out_dtype), interpret,
+                    tables=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                                 for a in tables))
+            else:
+                kernel = _build_kernel(
+                    lowered, body, mode, jnp.dtype(out_dtype), interpret,
+                    uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                                   for _, a in uni))
 
-        fn = jax.jit(pipeline)
-        DISPATCH_STATS["builds"] += 1
-        _kernel_cache_put(key, fn)
-    return fn(*arrays, *tables, *[a for _, a in uni])
+            def pipeline(*arrs, _lowered=lowered, _kernel=kernel,
+                         _sched=sched):
+                DISPATCH_STATS["traces"] += 1   # moves only while tracing
+                ns = len(_lowered.in_streams)
+                prepared = [s.prepare(a)
+                            for s, a in zip(_lowered.in_streams, arrs[:ns])]
+                out = _kernel(*prepared, *arrs[ns:])
+                if has_output:
+                    return _trim_nest_output(out, _lowered)
+                return _trim_output(out, nest.bounds, mode, _sched.policy)
+
+            resilience.inject("compile")
+            fn = jax.jit(pipeline)
+            DISPATCH_STATS["builds"] += 1
+            _kernel_cache_put(key, fn)
+        return fn(*arrays, *tables, *[a for _, a in uni])
+
+    if tuned_key is None:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    try:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    except resilience.fallback_error_types() as e:
+        from . import autotune as _autotune
+
+        _autotune.global_cache().quarantine(tuned_key)
+        _record_fallback("ssr_call", e, from_schedule="tuned",
+                         to_schedule="default", key=tuned_key,
+                         counter="degraded")
+        return _dispatch(DEFAULT_SCHEDULE)
 
 
 def _trim_output(out: jax.Array, bounds: Tuple[int, ...], mode: str,
@@ -1932,43 +1981,70 @@ def ssr_chain_call(nests: Sequence[LoopNest],
         raise ValueError(
             f"need one body per nest, got {len(bodies)} bodies for "
             f"{len(nests)} nests")
+    tuned_key: Optional[str] = None
     if schedule is None and policy is DEFAULT_POLICY:
         # chains key on their stage-0 nest + the full operand signature,
         # matching the cluster layer's per-core lookup convention
         from . import autotune as _autotune
 
-        schedule = _autotune.lookup(nests[0], operands, mode=mode,
-                                    out_dtype=str(jnp.dtype(out_dtype)))
-    sched = _resolve_schedule(policy, schedule)
+        try:
+            schedule = _autotune.lookup(nests[0], operands, mode=mode,
+                                        out_dtype=str(jnp.dtype(out_dtype)))
+        except resilience.fallback_error_types() as e:
+            _record_fallback("ssr_chain_call", e,
+                             from_schedule="tuned-lookup",
+                             to_schedule="default")
+            schedule = DEFAULT_SCHEDULE
+        else:
+            if schedule != DEFAULT_SCHEDULE:
+                tuned_key = _autotune.cache_key(
+                    nests[0], operands, mode=mode,
+                    out_dtype=str(jnp.dtype(out_dtype)))
     chained = _chain_for(nests, num_lanes)
-    lowered = _lowered_chain_for(chained, sched)
-    flat = lowered.in_streams
-    missing = sorted({s.name for s in flat} - set(operands))
-    if missing:
-        raise ValueError(f"missing operands for streams {missing}")
-    arrays = [operands[s.name] for s in flat]
-
     DISPATCH_STATS["calls"] += 1
-    key = ("chain", nests, sched, mode,
-           tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
-           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
-           num_lanes, interpret)
-    fn = _kernel_cache_get(key)
-    if fn is None:
-        kernel = _build_chain_kernel(lowered, bodies, mode,
-                                     jnp.dtype(out_dtype), interpret)
 
-        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
-            DISPATCH_STATS["traces"] += 1   # moves only while tracing
-            prepared = [s.prepare(a)
-                        for s, a in zip(_lowered.in_streams, arrs)]
-            out = _kernel(*prepared)
-            return _trim_output(out, chained.bounds, mode, sched.policy)
+    def _dispatch(sched: Schedule) -> jax.Array:
+        lowered = _lowered_chain_for(chained, sched)
+        flat = lowered.in_streams
+        missing = sorted({s.name for s in flat} - set(operands))
+        if missing:
+            raise ValueError(f"missing operands for streams {missing}")
+        arrays = [operands[s.name] for s in flat]
+        key = ("chain", nests, sched, mode,
+               tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
+               tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
+               num_lanes, interpret)
+        fn = _kernel_cache_get(key)
+        if fn is None:
+            kernel = _build_chain_kernel(lowered, bodies, mode,
+                                         jnp.dtype(out_dtype), interpret)
 
-        fn = jax.jit(pipeline)
-        DISPATCH_STATS["builds"] += 1
-        _kernel_cache_put(key, fn)
-    return fn(*arrays)
+            def pipeline(*arrs, _lowered=lowered, _kernel=kernel,
+                         _sched=sched):
+                DISPATCH_STATS["traces"] += 1   # moves only while tracing
+                prepared = [s.prepare(a)
+                            for s, a in zip(_lowered.in_streams, arrs)]
+                out = _kernel(*prepared)
+                return _trim_output(out, chained.bounds, mode, _sched.policy)
+
+            resilience.inject("compile")
+            fn = jax.jit(pipeline)
+            DISPATCH_STATS["builds"] += 1
+            _kernel_cache_put(key, fn)
+        return fn(*arrays)
+
+    if tuned_key is None:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    try:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    except resilience.fallback_error_types() as e:
+        from . import autotune as _autotune
+
+        _autotune.global_cache().quarantine(tuned_key)
+        _record_fallback("ssr_chain_call", e, from_schedule="tuned",
+                         to_schedule="default", key=tuned_key,
+                         counter="degraded")
+        return _dispatch(DEFAULT_SCHEDULE)
 
 
 def _dag_components(dag: ChainDAG,
@@ -2178,48 +2254,77 @@ def ssr_dag_call(nests: Sequence[LoopNest],
             raise ValueError(
                 f"uniform names {clash} collide with streamed operands; "
                 "uniforms are a separate argument namespace")
+    tuned_key: Optional[str] = None
     if schedule is None and policy is DEFAULT_POLICY:
         from . import autotune as _autotune
 
-        schedule = _autotune.lookup_dag(nests, operands, mode=mode,
-                                        out_dtype=str(jnp.dtype(out_dtype)),
-                                        uniforms=dict(uni))
-    sched = _resolve_schedule(policy, schedule)
-    if sched.cut_edges:
-        return _dag_partition_call(dag, nests, bodies, operands, sched,
-                                   mode=mode, out_dtype=out_dtype,
-                                   num_lanes=num_lanes, interpret=interpret,
-                                   uniforms=dict(uni))
-    if sched.cut_edges is not None:    # () — all-fused, same kernel as None
-        sched = dataclasses.replace(sched, cut_edges=None)
-    lowered = _lowered_chain_for(dag, sched)
-    flat = lowered.in_streams
-    missing = sorted({s.name for s in flat} - set(operands))
-    if missing:
-        raise ValueError(f"missing operands for streams {missing}")
-    arrays = [operands[s.name] for s in flat]
+        try:
+            schedule = _autotune.lookup_dag(
+                nests, operands, mode=mode,
+                out_dtype=str(jnp.dtype(out_dtype)), uniforms=dict(uni))
+        except resilience.fallback_error_types() as e:
+            _record_fallback("ssr_dag_call", e, from_schedule="tuned-lookup",
+                             to_schedule="default")
+            schedule = DEFAULT_SCHEDULE
+        else:
+            if schedule != DEFAULT_SCHEDULE:
+                tuned_key = _autotune.dag_cache_key(
+                    nests, operands, mode=mode,
+                    out_dtype=str(jnp.dtype(out_dtype)), uniforms=dict(uni))
 
-    DISPATCH_STATS["calls"] += 1
-    key = ("dag", nests, sched, mode,
-           tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
-           tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
-           _uniform_sig(uni), num_lanes, interpret)
-    fn = _kernel_cache_get(key)
-    if fn is None:
-        kernel = _build_dag_kernel(
-            lowered, bodies, mode, jnp.dtype(out_dtype), interpret,
-            uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
-                           for _, a in uni))
+    def _dispatch(resolved: Schedule) -> jax.Array:
+        sched = resolved
+        if sched.cut_edges:
+            return _dag_partition_call(dag, nests, bodies, operands, sched,
+                                       mode=mode, out_dtype=out_dtype,
+                                       num_lanes=num_lanes,
+                                       interpret=interpret,
+                                       uniforms=dict(uni))
+        if sched.cut_edges is not None:  # () — all-fused, same kernel as None
+            sched = dataclasses.replace(sched, cut_edges=None)
+        lowered = _lowered_chain_for(dag, sched)
+        flat = lowered.in_streams
+        missing = sorted({s.name for s in flat} - set(operands))
+        if missing:
+            raise ValueError(f"missing operands for streams {missing}")
+        arrays = [operands[s.name] for s in flat]
 
-        def pipeline(*arrs, _lowered=lowered, _kernel=kernel):
-            DISPATCH_STATS["traces"] += 1   # moves only while tracing
-            ns = len(_lowered.in_streams)
-            prepared = [s.prepare(a)
-                        for s, a in zip(_lowered.in_streams, arrs[:ns])]
-            out = _kernel(*prepared, *arrs[ns:])
-            return _trim_output(out, dag.bounds, mode, sched.policy)
+        DISPATCH_STATS["calls"] += 1
+        key = ("dag", nests, sched, mode,
+               tuple(_body_key(b) for b in bodies), str(jnp.dtype(out_dtype)),
+               tuple((tuple(a.shape), str(a.dtype)) for a in arrays),
+               _uniform_sig(uni), num_lanes, interpret)
+        fn = _kernel_cache_get(key)
+        if fn is None:
+            kernel = _build_dag_kernel(
+                lowered, bodies, mode, jnp.dtype(out_dtype), interpret,
+                uniforms=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                               for _, a in uni))
 
-        fn = jax.jit(pipeline)
-        DISPATCH_STATS["builds"] += 1
-        _kernel_cache_put(key, fn)
-    return fn(*arrays, *[a for _, a in uni])
+            def pipeline(*arrs, _lowered=lowered, _kernel=kernel,
+                         _sched=sched):
+                DISPATCH_STATS["traces"] += 1   # moves only while tracing
+                ns = len(_lowered.in_streams)
+                prepared = [s.prepare(a)
+                            for s, a in zip(_lowered.in_streams, arrs[:ns])]
+                out = _kernel(*prepared, *arrs[ns:])
+                return _trim_output(out, dag.bounds, mode, _sched.policy)
+
+            resilience.inject("compile")
+            fn = jax.jit(pipeline)
+            DISPATCH_STATS["builds"] += 1
+            _kernel_cache_put(key, fn)
+        return fn(*arrays, *[a for _, a in uni])
+
+    if tuned_key is None:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    try:
+        return _dispatch(_resolve_schedule(policy, schedule))
+    except resilience.fallback_error_types() as e:
+        from . import autotune as _autotune
+
+        _autotune.global_cache().quarantine(tuned_key)
+        _record_fallback("ssr_dag_call", e, from_schedule="tuned",
+                         to_schedule="default", key=tuned_key,
+                         counter="degraded")
+        return _dispatch(DEFAULT_SCHEDULE)

@@ -58,7 +58,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import BlockStream  # noqa: F401  (re-export for kernels)
-from repro.core import autotune
+from repro.core import autotune, resilience
 from repro.core.lowering import (DEFAULT_SCHEDULE, Schedule, _body_key,
                                  ssr_call)
 from repro.core.ssr import _on_tpu, ssr_pallas
@@ -72,8 +72,11 @@ COMPUTE_DTYPE = jnp.float32
 #: ``lowering.DISPATCH_STATS``: ``builds`` counts jitted prepare→finish
 #: pipelines constructed, ``traces`` moves only while one is being traced,
 #: ``calls`` per ``__call__``.  The trace-count tests assert a repeated
-#: call is a pure cache hit.
-DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0}
+#: call is a pure cache hit.  ``fallbacks``/``degraded`` mirror the
+#: lowering counters: lookups abandoned for the default schedule vs tuned
+#: pipelines quarantined and rebuilt on the default — zero when healthy.
+DISPATCH_STATS: Dict[str, int] = {"builds": 0, "traces": 0, "calls": 0,
+                                  "fallbacks": 0, "degraded": 0}
 
 
 #: Built-pipeline cap per kernel instance: epoch bumps retire old entries,
@@ -309,8 +312,54 @@ class NestKernel:
         callers pick up tuned schedules transparently.  The pipeline cache
         keys on the autotune epoch: committing a new winner rebuilds the
         pipeline on the next call instead of serving the stale schedule.
+
+        **Degradation**: because the pipeline hands ``ssr_call`` an
+        *explicit* resolved schedule, the lowering layer cannot degrade it
+        — this level owns the ladder.  A typed dispatch failure (injected
+        fault, cache I/O, :class:`LoweringError`, compile error) under a
+        *tuned* schedule quarantines the cache entry and rebuilds on the
+        default schedule; an explicit ``schedule=`` always propagates the
+        error (the caller pinned it, masking would hide their bug).
         """
         DISPATCH_STATS["calls"] += 1
+        try:
+            return self._dispatch(args, params, interpret, schedule)
+        except resilience.fallback_error_types() as e:
+            if schedule is not None:
+                raise
+            key = self._quarantine_tuned(args, params)
+            if key is None:
+                raise
+            DISPATCH_STATS["degraded"] += 1
+            resilience.record_fallback(
+                seam=resilience.classify(e), site=f"nest_kernel:{self.name}",
+                error=e, from_schedule="tuned", to_schedule="default",
+                key=key)
+            return self._dispatch(args, params, interpret, DEFAULT_SCHEDULE)
+
+    def _quarantine_tuned(self, args, params) -> Optional[str]:
+        """Sideline the committed tuned entry for this call, if any.
+
+        Returns the quarantined cache key, or ``None`` when the call was
+        already running the default schedule (nothing tuned to degrade
+        from — the failure is genuine and must propagate).
+        """
+        try:
+            operands, static, _final = self._prepare(*args, **params)
+            nest = self._nest(static)
+            out_dtype = "float32" if self._out_dtype is None else \
+                str(jnp.dtype(self._out_dtype(static)))
+            tuned = autotune.lookup(nest, dict(operands), mode=self._mode,
+                                    out_dtype=out_dtype)
+            if tuned == DEFAULT_SCHEDULE:
+                return None
+            return autotune.quarantine(nest, dict(operands), mode=self._mode,
+                                       out_dtype=out_dtype)
+        except Exception:  # re-probe failed: keep the original error
+            return None
+
+    def _dispatch(self, args, params, interpret: Optional[bool],
+                  schedule: Optional[Schedule]):
         key = (_call_key(args, params), schedule, interpret,
                autotune.epoch() if schedule is None else -1)
         fn = self._cache.get(key)
@@ -322,8 +371,17 @@ class NestKernel:
             sched = schedule
             if sched is None:
                 out_dtype = str(jnp.dtype(kw.get("out_dtype", jnp.float32)))
-                sched = autotune.lookup(nest, dict(operands),
-                                        mode=self._mode, out_dtype=out_dtype)
+                try:
+                    sched = autotune.lookup(nest, dict(operands),
+                                            mode=self._mode,
+                                            out_dtype=out_dtype)
+                except resilience.fallback_error_types() as e:
+                    DISPATCH_STATS["fallbacks"] += 1
+                    resilience.record_fallback(
+                        seam=resilience.classify(e),
+                        site=f"nest_kernel:{self.name}", error=e,
+                        from_schedule="tuned-lookup", to_schedule="default")
+                    sched = DEFAULT_SCHEDULE
             arr_idx = tuple(i for i, a in enumerate(args)
                             if _is_arraylike(a))
             # static positions only — see the _KernelBase note: closing
@@ -343,6 +401,7 @@ class NestKernel:
                                interpret=interpret, **okw)
                 return self._finish(out, final) if self._finish else out
 
+            resilience.inject("compile")
             fn = jax.jit(pipeline)
             DISPATCH_STATS["builds"] += 1
             if len(self._cache) >= _PIPELINE_CACHE_MAX:

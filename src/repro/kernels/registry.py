@@ -28,8 +28,10 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import os
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import resilience
 from repro.core.region import ssr_enabled
 
 # Every module under repro.kernels that registers at least one kernel.  This
@@ -126,13 +128,39 @@ def entries() -> List[KernelEntry]:
     return [get(n) for n in names()]
 
 
-def dispatch(name: str, *args, ssr: Optional[bool] = None, **kwargs):
+def _baseline_fallback_enabled() -> bool:
+    return os.environ.get("REPRO_BASELINE_FALLBACK", "") not in ("", "0")
+
+
+def dispatch(name: str, *args, ssr: Optional[bool] = None,
+             baseline_fallback: Optional[bool] = None, **kwargs):
     """Run a kernel through the ``ssrcfg`` gate (paper §2.2.2).
 
     ``ssr=None`` consults :func:`region.ssr_enabled`; semantics are identical
     either way — only the execution engine changes.
+
+    ``baseline_fallback`` is the last rung of the degradation ladder
+    (tuned → default schedule → baseline): when the streamed variant fails
+    with a *typed* dispatch error (injected fault, cache I/O,
+    ``LoweringError``, compile failure) even after the lowering layer's own
+    schedule degradation, re-run the call through the plain-XLA ``ref``
+    variant — the paper's ``ssrcfg``-off path, always available because SSR
+    is non-invasive.  Opt-in (``baseline_fallback=True`` or env
+    ``REPRO_BASELINE_FALLBACK=1``) because it can mask a broken streamed
+    engine in exchange for availability; genuine numerics/user errors
+    (``TypeError``, shape ``ValueError``…) always propagate.
     """
     entry = get(name)
     use = ssr_enabled() if ssr is None else ssr
     fn = entry.ssr if use else entry.ref
-    return fn(*args, **kwargs)
+    if baseline_fallback is None:
+        baseline_fallback = _baseline_fallback_enabled()
+    if not (use and baseline_fallback):
+        return fn(*args, **kwargs)
+    try:
+        return fn(*args, **kwargs)
+    except resilience.fallback_error_types() as e:
+        resilience.record_fallback(
+            seam=resilience.classify(e), site=f"registry:{name}", error=e,
+            from_schedule="ssr", to_schedule="baseline")
+        return entry.ref(*args, **kwargs)

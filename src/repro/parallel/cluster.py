@@ -37,10 +37,10 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import autotune
+from repro.core import autotune, resilience
 from repro.core.compiler import Direction, LoopNest, MemRef
 from repro.core.lowering import (BlockPolicy, DEFAULT_POLICY, Schedule,
-                                 ssr_call, ssr_chain_call)
+                                 _record_fallback, ssr_call, ssr_chain_call)
 
 
 class ClusterError(ValueError):
@@ -209,6 +209,26 @@ def _shard_operand_sig(nests: Sequence[LoopNest],
     return sig
 
 
+def _safe_lookup(nest: LoopNest, operands, *, mode: str, out_dtype,
+                 site: str) -> Optional[Schedule]:
+    """Cache lookup that degrades to the default on typed dispatch faults.
+
+    A broken cache must cost the cluster layer its tuned geometry, never
+    the call: cache I/O errors and injected faults are recorded (one
+    ``fallbacks`` tick + a :class:`FallbackEvent`) and resolve to ``None``
+    — the default per-core schedule.  Returns ``None`` too on an ordinary
+    miss, matching the pre-resilience contract.
+    """
+    try:
+        sched = autotune.lookup(nest, operands, mode=mode,
+                                out_dtype=str(jnp.dtype(out_dtype)))
+    except resilience.fallback_error_types() as e:
+        _record_fallback(site, e, from_schedule="tuned-lookup",
+                         to_schedule="default")
+        return None
+    return None if sched == autotune.DEFAULT_SCHEDULE else sched
+
+
 def _core_schedule(subs: Sequence[LoopNest],
                    operands: Dict[str, jax.Array], *,
                    mode: str, out_dtype) -> Optional[Schedule]:
@@ -225,9 +245,8 @@ def _core_schedule(subs: Sequence[LoopNest],
         return None
     # A chain keys on its stage-0 sub-nest; the operand signature (which
     # spans every stage) disambiguates chains sharing a producer shape.
-    sched = autotune.lookup(subs[0], sig, mode=mode,
-                            out_dtype=str(jnp.dtype(out_dtype)))
-    return None if sched == autotune.DEFAULT_SCHEDULE else sched
+    return _safe_lookup(subs[0], sig, mode=mode, out_dtype=out_dtype,
+                        site="cluster:_core_schedule")
 
 
 def _sharded_call(nests: Sequence[LoopNest], tile_fn: Callable,
@@ -291,9 +310,9 @@ def cluster_call(nest: LoopNest, body: Callable[..., jax.Array],
             # same guard: an explicit non-default policy pins the
             # geometry), so `cores=1` stays bit-identical to the
             # single-core registry path even after a tuner commit.
-            hit = autotune.lookup(nest, operands, mode=mode,
-                                  out_dtype=str(jnp.dtype(out_dtype)))
-            schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+            schedule = _safe_lookup(nest, operands, mode=mode,
+                                    out_dtype=out_dtype,
+                                    site="cluster_call")
         _record_dispatch(schedule, 1, nest.bounds, policy)
         return ssr_call(nest, body, operands, mode=mode, out_dtype=out_dtype,
                         policy=policy, schedule=schedule,
@@ -338,9 +357,9 @@ def cluster_chain_call(nests: Sequence[LoopNest],
             # mirror ssr_chain_call's internal resolution (stage-0 nest +
             # full operand signature, same default-policy guard) so the
             # recorded provenance is the schedule the delegated call runs
-            hit = autotune.lookup(nests[0], operands, mode=mode,
-                                  out_dtype=str(jnp.dtype(out_dtype)))
-            schedule = None if hit == autotune.DEFAULT_SCHEDULE else hit
+            schedule = _safe_lookup(nests[0], operands, mode=mode,
+                                    out_dtype=out_dtype,
+                                    site="cluster_chain_call")
         _record_dispatch(schedule, 1, nests[0].bounds, policy)
         return ssr_chain_call(nests, bodies, operands, mode=mode,
                               out_dtype=out_dtype, policy=policy,

@@ -23,10 +23,27 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core.resilience import InjectedFault, retry  # noqa: F401  (retry
+# is re-exported: the dispatch-stack generalisation of this module lives in
+# core/resilience.py — seam-keyed injection, typed fallback set, bounded
+# retry — and its helpers are shared back here so fault tests use ONE
+# implementation)
 
 
-class SimulatedFailure(RuntimeError):
-    """Stands in for a lost node / preempted slice."""
+class SimulatedFailure(InjectedFault):
+    """Stands in for a lost node / preempted slice.
+
+    Derives from :class:`repro.core.resilience.InjectedFault` so one typed
+    ``except`` clause covers both the step-indexed training injector below
+    and the seam-keyed dispatch injector — the fallback machinery treats
+    every *injected* failure identically.
+    """
+
+    def __init__(self, message: str, step: Optional[int] = None):
+        RuntimeError.__init__(self, message)
+        self.seam = "step"
+        self.kind = "fault"
+        self.step = step
 
 
 @dataclasses.dataclass
@@ -37,7 +54,8 @@ class FailureInjector:
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+            raise SimulatedFailure(f"injected failure at step {step}",
+                                   step=step)
 
 
 @dataclasses.dataclass

@@ -487,9 +487,9 @@ def _dag_trio(kern, cut_us, fused_us, unfused_us):
 
 
 class TestBenchArtifacts:
-    def test_schema_is_v5(self):
+    def test_schema_is_v6(self):
         from benchmarks import kernel_bench as kb
-        assert kb.BENCH_SCHEMA == 5
+        assert kb.BENCH_SCHEMA == 6
 
     def test_validate_dag_rows_accepts_good_trios(self):
         from benchmarks import kernel_bench as kb

@@ -1,0 +1,555 @@
+"""Chaos harness for the resilience layer (core/resilience.py).
+
+Sweeps every fault seam × fault kind through the dispatch stack and
+asserts the ISSUE-10 contract: each run ends in either a bit-correct
+result delivered via the recorded fallback ladder (degraded counter
+moved, poisoned cache entry quarantined, FallbackEvent logged) or a
+pinned *typed* error — never a raw traceback out of cache internals,
+and never a masked user error.  Also covers the crash-safe multi-process
+schedule cache: cross-process negative-cache staleness, corrupt-file
+quarantine + recovery (hypothesis fuzz), bounded retry on transient
+commit I/O, and a ≥4-worker concurrent lookup/put/invalidate stress.
+"""
+
+import itertools
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import autotune, compiler, lowering, resilience
+from repro.core.autotune import ScheduleCache
+from repro.core.lowering import DEFAULT_SCHEDULE, Schedule, ssr_call
+from repro.core.resilience import (FaultSpec, InjectedFault, InjectedOSError,
+                                   KINDS, SEAMS, inject_faults, parse_faults,
+                                   retry)
+from repro.kernels import frontend
+
+RNG = np.random.default_rng(29)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+TUNED = Schedule(rows=16)          # legal non-default geometry for the nests
+
+
+def arr(n):
+    return jnp.asarray(RNG.standard_normal(n), jnp.float32)
+
+
+def _sub_env(cache_dir):
+    """Subprocess environment: isolated cache, NO ambient chaos matrix."""
+    env = dict(os.environ)
+    env["REPRO_SCHEDULE_CACHE"] = str(cache_dir)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)
+    return env
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience():
+    # consume any ambient REPRO_FAULTS (the CI chaos matrix) so each test
+    # arms exactly the faults it means to, and leave nothing armed behind
+    resilience.reset()
+    lowering.reset_dispatch_stats()
+    frontend.reset_dispatch_stats()
+    yield
+    resilience.reset()
+
+
+@pytest.fixture
+def tuned_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SCHEDULE_CACHE", str(tmp_path / "sch"))
+    lowering.clear_caches()        # seams must fire, not hit stale kernels
+    yield autotune.global_cache()
+
+
+class TestInjector:
+    def test_parse_faults(self):
+        specs = parse_faults("cache.read, cache.write:oserror:2,compile")
+        assert [(s.seam, s.kind, s.times) for s in specs] == [
+            ("cache.read", "fault", 1), ("cache.write", "oserror", 2),
+            ("compile", "fault", 1)]
+
+    def test_parse_rejects_unknown_seam_and_kind(self):
+        with pytest.raises(ValueError, match="unknown fault seam"):
+            parse_faults("cache.reed")
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            parse_faults("compile:tornado")
+
+    def test_context_manager_fires_then_exhausts(self):
+        with inject_faults("compile") as specs:
+            with pytest.raises(InjectedFault) as ei:
+                resilience.inject("compile")
+            assert ei.value.seam == "compile"
+            resilience.inject("compile")      # times=1: now exhausted
+            resilience.inject("cache.read")   # other seams untouched
+        assert specs[0].fired == 1
+        assert resilience.FAULT_STATS["injected"] == 1
+        resilience.inject("compile")          # disarmed on exit
+
+    def test_oserror_kind_is_an_oserror(self):
+        with inject_faults("cache.write", kind="oserror"):
+            with pytest.raises(OSError):
+                resilience.inject("cache.write")
+
+    def test_env_arming_and_consumption(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULTS", "lowering")
+        resilience.reset_faults(reload_env=True)
+        with pytest.raises(InjectedFault):
+            resilience.inject("lowering")
+        # default reset marks the env consumed: ambient matrix is inert
+        resilience.reset_faults()
+        resilience.inject("lowering")
+
+    def test_unlimited_times(self):
+        spec = FaultSpec(seam="compile", times=-1)
+        assert not spec.exhausted()
+        spec.fired = 100
+        assert not spec.exhausted()
+
+
+class TestRetry:
+    def test_absorbs_transient_then_succeeds(self):
+        calls, slept, retried = [], [], []
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+        got = retry(flaky, attempts=3, sleep=slept.append,
+                    on_retry=lambda a, e: retried.append(a))
+        assert got == "ok" and len(calls) == 3
+        assert retried == [1, 2] and len(slept) == 2
+
+    def test_budget_exhausted_propagates_last_error(self):
+        def always():
+            raise OSError("persistent")
+        with pytest.raises(OSError, match="persistent"):
+            retry(always, attempts=3, sleep=lambda _: None)
+
+    def test_non_retriable_propagates_immediately(self):
+        calls = []
+        def boom():
+            calls.append(1)
+            raise ValueError("user error")
+        with pytest.raises(ValueError):
+            retry(boom, attempts=5, sleep=lambda _: None)
+        assert len(calls) == 1
+
+    def test_backoff_is_bounded(self):
+        slept = []
+        def always():
+            raise OSError("x")
+        with pytest.raises(OSError):
+            retry(always, attempts=4, base_delay=0.004, max_delay=0.01,
+                  sleep=slept.append)
+        assert len(slept) == 3 and all(0 <= d <= 0.01 for d in slept)
+
+
+class TestChaosSweep:
+    """Every seam × kind through transparent tuned ssr_call dispatch."""
+
+    def _setup_problem(self, cache):
+        n = 2048
+        x, y = arr(n), arr(n)
+        nest = compiler.dot_product_nest(n)
+        operands = {"A": x, "B": y}
+        body = lambda a, b: a * b  # noqa: E731
+        healthy = ssr_call(nest, body, operands)   # default-schedule result
+        key = autotune.cache_key(nest, operands, mode="reduce",
+                                 out_dtype="float32")
+        cache.put(key, TUNED)
+        return nest, body, operands, key, healthy
+
+    @pytest.mark.parametrize("seam,kind",
+                             list(itertools.product(SEAMS, KINDS)))
+    def test_sweep(self, seam, kind, tuned_env):
+        nest, body, operands, key, healthy = self._setup_problem(tuned_env)
+        resilience.reset_fallback_log()
+        lowering.reset_dispatch_stats()
+        with inject_faults(seam, kind=kind) as specs:
+            got = ssr_call(nest, body, operands)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(healthy),
+                                   rtol=1e-5, atol=1e-6)
+        stats = lowering.DISPATCH_STATS
+        events = resilience.fallback_events()
+        if seam == "cache.read":
+            # lookup failed before any tuned kernel existed: fall back to
+            # the default schedule, do NOT quarantine (the entry is fine)
+            assert specs[0].fired == 1
+            assert stats["fallbacks"] == 1 and stats["degraded"] == 0
+            assert [e.to_schedule for e in events] == ["default"]
+            assert tuned_env.get(key) == TUNED
+        elif seam in ("lowering", "compile"):
+            # committed tuned schedule failed to lower/compile: quarantine
+            # the poisoned entry and re-dispatch on the default schedule
+            assert specs[0].fired == 1
+            assert stats["degraded"] == 1
+            assert [(e.seam, e.site, e.key) for e in events] == \
+                [(seam, "ssr_call", key)]
+            assert tuned_env.get(key) is None
+            assert os.path.exists(
+                os.path.join(tuned_env.path, f"{key}.json.corrupt"))
+            # ...and the ladder is sticky: the next call runs default
+            # without re-tripping anything
+            again = ssr_call(nest, body, operands)
+            np.testing.assert_allclose(np.asarray(again),
+                                       np.asarray(healthy), rtol=1e-5,
+                                       atol=1e-6)
+        else:   # cache.write / measure: no such seam on the dispatch path
+            assert specs[0].fired == 0
+            assert stats["fallbacks"] == 0 and stats["degraded"] == 0
+
+    def test_chain_degrades(self, tuned_env):
+        from repro.core.compiler import Direction, LoopNest, MemRef
+        from repro.core.lowering import ssr_chain_call
+
+        n = 1024
+        x, y = arr(n), arr(n)
+        producer = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("X", Direction.READ, (1,)),
+                  MemRef("Y", Direction.READ, (1,)),
+                  MemRef("T", Direction.WRITE, (1,))),
+            compute_per_level=(2,))
+        consumer = LoopNest(
+            bounds=(n,),
+            refs=(MemRef("T", Direction.READ, (1,)),),
+            compute_per_level=(1,))
+        nests = (producer, consumer)
+        bodies = (lambda a, b: a * b, lambda t: t + 1.0)
+        operands = {"X": x, "Y": y}
+        healthy = ssr_chain_call(nests, bodies, operands)
+        key = autotune.cache_key(nests[0], operands, mode="map",
+                                 out_dtype="float32")
+        tuned_env.put(key, TUNED)
+        lowering.reset_dispatch_stats()
+        with inject_faults("compile") as specs:
+            got = ssr_chain_call(nests, bodies, operands)
+        assert specs[0].fired == 1
+        assert lowering.DISPATCH_STATS["degraded"] == 1
+        assert tuned_env.get(key) is None
+        np.testing.assert_allclose(np.asarray(got), np.asarray(healthy),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestDegradationChain:
+    def test_explicit_schedule_error_propagates(self, tuned_env):
+        # a caller-pinned schedule is never degraded: masking would hide
+        # their bug.  The error surfaces as the pinned typed InjectedFault.
+        n = 2048
+        nest = compiler.dot_product_nest(n)
+        operands = {"A": arr(n), "B": arr(n)}
+        with inject_faults("lowering"):
+            with pytest.raises(InjectedFault):
+                ssr_call(nest, lambda a, b: a * b, operands, schedule=TUNED)
+        assert lowering.DISPATCH_STATS["degraded"] == 0
+
+    def test_user_error_never_masked(self, tuned_env):
+        n = 2048
+        x, y = arr(n), arr(n)
+        nest = compiler.dot_product_nest(n)
+        key = autotune.cache_key(nest, {"A": x, "B": y}, mode="reduce",
+                                 out_dtype="float32")
+        tuned_env.put(key, TUNED)
+        with pytest.raises(ValueError, match="missing operands"):
+            ssr_call(nest, lambda a, b: a * b, {"A": x})  # B missing
+        # the tuned entry is innocent: not quarantined, no fallback
+        assert tuned_env.get(key) == TUNED
+        assert lowering.DISPATCH_STATS["degraded"] == 0
+
+    def test_nest_kernel_degrades_and_quarantines(self, tuned_env):
+        from repro.kernels import reduction
+
+        n = 2048
+        x, y = arr(n), arr(n)
+        healthy = reduction.ssr_dot(x, y)          # default pipeline
+        nest = compiler.dot_product_nest(n)
+        key = autotune.cache_key(nest, {"A": x, "B": y}, mode="reduce",
+                                 out_dtype="float32")
+        tuned_env.put(key, TUNED)
+        frontend.reset_dispatch_stats()
+        resilience.reset_fallback_log()
+        with inject_faults("compile") as specs:
+            got = reduction.ssr_dot(x, y)
+        assert specs[0].fired == 1
+        assert frontend.DISPATCH_STATS["degraded"] == 1
+        assert tuned_env.get(key) is None          # quarantined
+        sites = [e.site for e in resilience.fallback_events()]
+        assert any(s.startswith("nest_kernel:") for s in sites)
+        np.testing.assert_allclose(float(got), float(healthy), rtol=1e-5)
+
+    def test_registry_baseline_fallback_opt_in(self, tuned_env):
+        from repro.kernels import registry
+
+        n = 2048
+        x, y = arr(n), arr(n)
+        want = registry.get("reduction").ref(x, y)
+        resilience.reset_fallback_log()
+        # unlimited compile faults: the streamed engine is down for good;
+        # the opt-in ladder lands on the ssrcfg-off baseline
+        with inject_faults("compile", times=-1):
+            with pytest.raises(InjectedFault):
+                registry.dispatch("reduction", x, y, ssr=True)  # no opt-in
+            got = registry.dispatch("reduction", x, y, ssr=True,
+                                    baseline_fallback=True)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+        assert any(e.to_schedule == "baseline"
+                   for e in resilience.fallback_events())
+
+    def test_registry_baseline_fallback_env(self, tuned_env, monkeypatch):
+        from repro.kernels import registry
+
+        n = 1024
+        x, y = arr(n), arr(n)
+        monkeypatch.setenv("REPRO_BASELINE_FALLBACK", "1")
+        with inject_faults("compile", times=-1):
+            got = registry.dispatch("reduction", x, y, ssr=True)
+        np.testing.assert_allclose(
+            float(got), float(registry.get("reduction").ref(x, y)),
+            rtol=1e-5)
+
+    def test_cluster_lookup_degrades(self, tuned_env):
+        from repro.parallel.cluster import cluster_call
+
+        n = 2048
+        nest = compiler.dot_product_nest(n)
+        x, y = arr(n), arr(n)
+        body = lambda a, b: a * b  # noqa: E731
+        healthy = cluster_call(nest, body, {"A": x, "B": y}, cores=1)
+        lowering.reset_dispatch_stats()
+        with inject_faults("cache.read") as specs:
+            got = cluster_call(nest, body, {"A": x, "B": y}, cores=1)
+        assert specs[0].fired == 1
+        assert lowering.DISPATCH_STATS["fallbacks"] == 1
+        np.testing.assert_allclose(float(got), float(healthy), rtol=1e-5)
+
+
+class TestCacheCrashSafety:
+    def test_write_retry_absorbs_transient_oserror(self, tmp_path):
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        with inject_faults("cache.write", kind="oserror", times=2) as specs:
+            cache.put("k", TUNED)
+        assert specs[0].fired == 2
+        assert cache.stats["retries"] >= 2
+        assert cache.get("k") == TUNED
+        assert not [n for n in os.listdir(cache.path)
+                    if n.endswith(".tmp")]
+
+    def test_write_retry_budget_exhausted_raises(self, tmp_path):
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        with inject_faults("cache.write", kind="oserror", times=3):
+            with pytest.raises(OSError):
+                cache.put("k", TUNED)
+        assert cache.get("k") is None
+
+    def test_write_hard_fault_not_retried(self, tmp_path):
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        with inject_faults("cache.write") as specs:
+            with pytest.raises(InjectedFault):
+                cache.put("k", TUNED)
+        assert specs[0].fired == 1     # InjectedFault is not transient I/O
+
+    def test_measure_fault_degrades_autotune_without_commit(self, tmp_path):
+        n = 2048
+        nest = compiler.dot_product_nest(n)
+        operands = {"A": arr(n), "B": arr(n)}
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        with inject_faults("measure"):
+            res = autotune.autotune(nest, lambda a, b: a * b, operands,
+                                    cache=cache, iters=1, warmup=0)
+        assert res.degraded and not res.committed
+        assert res.schedule == DEFAULT_SCHEDULE
+        assert cache.keys() == []
+
+
+class TestCrossProcess:
+    def test_negative_cache_busted_by_other_process_commit(self, tmp_path):
+        path = str(tmp_path / "shared")
+        local = ScheduleCache(path=path)
+        key = "deadbeef01"
+        assert local.get(key) is None          # negative-cached locally
+        assert local.get(key) is None          # served from the miss cache
+        e0 = autotune.epoch()
+        code = textwrap.dedent("""
+            import sys
+            from repro.core.autotune import ScheduleCache
+            from repro.core.lowering import Schedule
+            ScheduleCache(path=sys.argv[1]).put(sys.argv[2],
+                                                Schedule(rows=16))
+        """)
+        subprocess.run([sys.executable, "-c", code, path, key], check=True,
+                       env=_sub_env(path), timeout=240)
+        # pre-fix this get served the stale process-local negative cache;
+        # the GENERATION probe must surface the other process's commit NOW
+        assert local.get(key) == Schedule(rows=16)
+        assert local.stats["generation_busts"] >= 1
+        assert autotune.epoch() > e0           # pipeline caches rebuild too
+
+    def test_multiprocess_stress(self, tmp_path):
+        path = str(tmp_path / "shared")
+        workers = 4
+        worker = textwrap.dedent("""
+            import random, sys
+            from repro.core.autotune import ScheduleCache
+            from repro.core.lowering import Schedule
+            path, wid = sys.argv[1], int(sys.argv[2])
+            rng = random.Random(1000 + wid)
+            cache = ScheduleCache(path=path)
+            keys = ["stress%02d" % i for i in range(8)]
+            scheds = [Schedule(rows=16), Schedule(rows=32),
+                      Schedule(lanes=256)]
+            for _ in range(60):
+                op = rng.choice(("put", "get", "get", "invalidate"))
+                k = rng.choice(keys)
+                if op == "put":
+                    cache.put(k, rng.choice(scheds))
+                elif op == "get":
+                    s = cache.get(k)
+                    assert s is None or isinstance(s, Schedule), s
+                else:
+                    cache.invalidate(k)
+            print("WORKER-OK", wid)
+        """)
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", worker, path, str(i)],
+            env=_sub_env(path), stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True) for i in range(workers)]
+        for i, p in enumerate(procs):
+            out, err = p.communicate(timeout=300)
+            assert p.returncode == 0, f"worker {i} failed:\n{err}"
+            assert f"WORKER-OK {i}" in out
+        # no torn writes: every survivor parses as a current-version doc
+        names = os.listdir(path)
+        assert not [n for n in names if n.endswith(".tmp")]
+        for n in names:
+            if n.endswith(".json"):
+                with open(os.path.join(path, n)) as f:
+                    doc = json.load(f)
+                assert doc["version"] == autotune.SCHEDULE_CACHE_VERSION
+        # and the dir is still serviceable after the melee
+        after = ScheduleCache(path=path)
+        after.put("post-stress", TUNED)
+        assert after.get("post-stress") == TUNED
+
+
+class TestCorruptQuarantine:
+    @settings(max_examples=20)
+    @given(kind=st.sampled_from(["truncated", "garbage", "version-skew"]),
+           cut=st.integers(min_value=0, max_value=60))
+    def test_fuzz_corrupt_load_quarantines_put_recovers(self, kind, cut):
+        with tempfile.TemporaryDirectory() as d:
+            cache = ScheduleCache(path=d)
+            cache.put("good", TUNED)           # healthy neighbour survives
+            key = "fuzzkey"
+            doc = {"version": autotune.SCHEDULE_CACHE_VERSION,
+                   "schedule": TUNED.to_json()}
+            text = json.dumps(doc)
+            if kind == "truncated":
+                payload = text[:min(cut, len(text) - 1)]
+            elif kind == "garbage":
+                payload = "".join(chr(33 + (cut * 7 + i) % 90)
+                                  for i in range(cut + 1))
+            else:
+                payload = json.dumps({**doc, "version": -1})
+            with open(os.path.join(d, f"{key}.json"), "w") as f:
+                f.write(payload)
+            assert cache.get(key) is None          # miss, not a crash
+            assert cache.stats["quarantined"] == 1
+            assert os.path.exists(os.path.join(d, f"{key}.json.corrupt"))
+            assert cache.get("good") == TUNED      # neighbour untouched
+            cache.put(key, Schedule(rows=32))      # put recovers the key
+            assert cache.get(key) == Schedule(rows=32)
+
+    def test_meta_quarantines_garbage(self, tmp_path):
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        os.makedirs(cache.path, exist_ok=True)
+        with open(os.path.join(cache.path, "k.json"), "w") as f:
+            f.write("{not json")
+        assert cache.meta("k") is None
+        assert cache.stats["quarantined"] == 1
+
+
+class _FakeClock:
+    """Deterministic perf_counter: each timed interval pops one planned dt."""
+
+    def __init__(self, dts):
+        self.dts = list(dts)
+        self.t = 0.0
+        self.phase = 0
+
+    def __call__(self):
+        if self.phase == 0:
+            self.phase = 1
+            return self.t
+        self.phase = 0
+        self.t += self.dts.pop(0) if self.dts else 1e-3
+        return self.t
+
+
+class TestStragglerIntegration:
+    """runtime/fault.StragglerMonitor wired into autotune's measure loop."""
+
+    def _race(self, monitor, tmp_path):
+        from repro.runtime.fault import StragglerMonitor  # noqa: F401
+
+        n = 2048
+        nest = compiler.dot_product_nest(n)
+        operands = {"A": arr(n), "B": arr(n)}
+        cands = [DEFAULT_SCHEDULE, TUNED]
+        survivors = autotune.rank_candidates(nest, cands, top_k=2)
+        # the default's sample is poisoned by a 1.0 s stall; the genuinely
+        # slower tuned candidate times a clean 0.002 s
+        dts = [1.0 if s == DEFAULT_SCHEDULE else 0.002 for s in survivors]
+        # a flagged sample re-races once: the re-race of the default's
+        # stall comes in at its true 0.001 s
+        clock_seq = []
+        for s, dt in zip(survivors, dts):
+            clock_seq.append(dt)
+            if s == DEFAULT_SCHEDULE:
+                clock_seq.append(0.001)   # consumed only if re-raced
+        cache = ScheduleCache(path=str(tmp_path / "c"))
+        res = autotune.autotune(
+            nest, lambda a, b: a * b, operands, cache=cache,
+            candidates=cands, top_k=2, warmup=0, iters=1,
+            call=lambda sched: jnp.float32(0.0),
+            clock=_FakeClock(clock_seq), straggler=monitor)
+        return res, cache, nest, operands
+
+    def test_straggler_flagged_and_reraced_not_committed(self, tmp_path):
+        from repro.runtime.fault import StragglerMonitor
+
+        # seeded stats: clean step time ~2 ms, so the 1.0 s stall is an
+        # outlier but the tuned candidate's honest 2 ms is not
+        monitor = StragglerMonitor(warmup_steps=0, mean=0.002, var=1e-8,
+                                   n=5)
+        res, cache, nest, operands = self._race(monitor, tmp_path)
+        assert res.stragglers == 1
+        assert res.schedule == DEFAULT_SCHEDULE
+        # the committed entry resolves to the default: the poisoned race
+        # did NOT commit a slower-than-default winner
+        assert autotune.lookup(nest, operands, cache=cache) == \
+            DEFAULT_SCHEDULE
+
+    def test_without_monitor_the_poisoned_race_lies(self, tmp_path):
+        from repro.runtime.fault import StragglerMonitor
+
+        # control: an effectively-disabled monitor lets the stalled sample
+        # decide, committing the genuinely slower tuned schedule — this is
+        # the failure mode the integration exists to prevent
+        blind = StragglerMonitor(warmup_steps=0, mean=0.002, var=1e-8, n=5,
+                                 threshold_sigma=1e9)
+        res, cache, nest, operands = self._race(blind, tmp_path)
+        assert res.stragglers == 0
+        assert res.schedule == TUNED

@@ -469,7 +469,7 @@ class TestSparseBenchValidators:
                                  idx=84) for k in kb.SPARSE_GATED), [])
         path = str(tmp_path / "hist.jsonl")
         entry = kb.append_bench_history(rows, path, quick=True)
-        assert entry["schema"] == kb.BENCH_SCHEMA == 5
+        assert entry["schema"] == kb.BENCH_SCHEMA == 6
         assert set(entry["sparse"]) == set(kb.SPARSE_GATED)
         for info in entry["sparse"].values():
             assert info == {"nnz": 42, "density": 0.25,

@@ -223,6 +223,33 @@ def check_halo_rescale_docs() -> List[str]:
     return problems
 
 
+def check_resilience_docs() -> List[str]:
+    """The failure model must stay documented: DESIGN.md §14 (seam table,
+    typed fallback set, degradation ladder, cache crash-safety contract)
+    and the README's resilient-dispatch blurb with the REPRO_FAULTS /
+    --chaos-smoke operator knobs (pure-text check, no jax import)."""
+    problems = []
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        design = f.read()
+    if not re.search(r"^## 14\..*[Dd]egradation", design, re.MULTILINE):
+        problems.append("DESIGN.md: missing '## 14.' failure-model / "
+                        "degradation-ladder section")
+    for needle in ("cache.read", "cache.write", "lowering", "compile",
+                   "measure", "fallback_error_types", "FallbackEvent",
+                   "GENERATION", ".json.corrupt", "StragglerMonitor",
+                   "REPRO_BASELINE_FALLBACK"):
+        if needle not in design:
+            problems.append(f"DESIGN.md: §14 does not mention {needle}")
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    for needle in ("REPRO_FAULTS", "--chaos-smoke",
+                   "REPRO_BASELINE_FALLBACK"):
+        if needle not in readme:
+            problems.append(f"README.md: resilient-dispatch blurb does not "
+                            f"mention {needle}")
+    return problems
+
+
 def check_readme_kernels() -> List[str]:
     """Registry kernels missing from the README kernel table."""
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
@@ -296,6 +323,16 @@ def main(argv=None) -> int:
     else:
         print("halo/rescale docs present (DESIGN.md §13 + migrated "
               "kernel rows)")
+
+    resilience_problems = check_resilience_docs()
+    if resilience_problems:
+        ok = False
+        print("\nresilience docs gate:")
+        for p in resilience_problems:
+            print(f"  {p}")
+    else:
+        print("resilience docs present (DESIGN.md §14 + README chaos "
+              "knobs)")
 
     if not args.skip_experiments:
         diff = check_experiments()
